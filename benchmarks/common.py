@@ -1,0 +1,103 @@
+"""Shared benchmark plumbing: dataset registry, run helper, JSON output.
+
+Every benchmark mirrors one paper table/figure (see DESIGN.md §8).  Scale is
+controlled by --scale: "paper" uses the paper's client counts / 200 rounds
+(minutes-hours on CPU), "reduced" (default) shrinks clients/rounds so the
+whole suite completes in a few minutes while preserving the phenomena.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro.data import (make_femnist_like, make_mnist_like, make_sent140_like,
+                        make_synthetic)
+from repro.models.fl_models import make_lstm, make_mclr
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "paper")
+
+# learning rates per paper §IV-A
+PAPER_LR = {"femnist": 0.03, "mnist": 0.03, "sent140": 0.3, "synthetic": 0.01}
+PAPER_K = {"femnist": 10, "mnist": 30, "sent140": 10, "synthetic": 10}
+
+
+def build_dataset(name: str, scale: str):
+    if scale == "paper":
+        if name == "femnist":
+            ds = make_femnist_like()
+        elif name == "mnist":
+            ds = make_mnist_like()
+        elif name == "sent140":
+            ds = make_sent140_like()
+        else:
+            ds = make_synthetic()
+    else:
+        if name == "femnist":
+            ds = make_femnist_like(n_clients=60, total=4500, dim=64,
+                                   max_size=120)
+        elif name == "mnist":
+            # harder stand-in at reduced scale: overlapping clusters so the
+            # accuracy headroom between frameworks is visible
+            ds = make_mnist_like(n_clients=100, total=7000, dim=64,
+                                 max_size=120, sep=0.8, noise=2.2)
+        elif name == "sent140":
+            ds = make_sent140_like(n_clients=60, total=1800, vocab=300,
+                                   max_size=50)
+        else:
+            ds = make_synthetic(n_clients=40, total=3000, max_size=150)
+    if name == "sent140":
+        model = make_lstm(vocab=ds.clients_x[0].max() + 200
+                          if scale != "paper" else 1000)
+    else:
+        model = make_mclr(ds.clients_x[0].shape[1], ds.n_classes)
+    return ds, model
+
+
+def run_server(ds, model, algo: str, rounds: int, dataset_name: str,
+               seed: int = 0, **kw) -> Dict:
+    defaults = dict(
+        algo=algo, rounds=rounds,
+        n_selected=min(PAPER_K[dataset_name], ds.n_clients),
+        lr=PAPER_LR[dataset_name], h_cap=24.0, eval_every=max(1, rounds // 40),
+        seed=seed)
+    defaults.update(kw)
+    cfg = ServerConfig(**defaults)
+    srv = FedSAEServer(ds, model, cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=seed))
+    t0 = time.time()
+    hist = srv.run()
+    return {
+        "algo": algo, "dataset": dataset_name, "rounds": rounds,
+        "final_acc": float(np.nanmax(hist["acc"][-5:])),
+        "mean_dropout": float(np.nanmean(hist["dropout"])),
+        "late_dropout": float(np.nanmean(hist["dropout"][rounds // 2:])),
+        "wall_s": round(time.time() - t0, 1),
+        "history": {k: [None if (isinstance(v, float) and np.isnan(v)) else v
+                        for v in vals] for k, vals in hist.items()},
+        "config": {k: v for k, v in defaults.items()},
+    }
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
+def std_argparser(desc: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=desc)
+    ap.add_argument("--scale", choices=("reduced", "paper"), default="reduced")
+    ap.add_argument("--rounds", type=int, default=None)
+    return ap
+
+
+def default_rounds(scale: str) -> int:
+    return 200 if scale == "paper" else 40

@@ -1,0 +1,26 @@
+"""Paper Fig. 5: sensitivity of FedSAE-Ira to the inverse-ratio parameter U
+(paper tries U = 1, 2, 3, 10 and picks 10)."""
+from __future__ import annotations
+
+from benchmarks.common import (build_dataset, default_rounds, run_server,
+                               save_result, std_argparser)
+
+
+def run(scale: str = "reduced", rounds=None):
+    rounds = rounds or default_rounds(scale)
+    results = []
+    for dataset in ("femnist", "mnist"):
+        ds, model = build_dataset(dataset, scale)
+        for U in (1.0, 2.0, 3.0, 10.0):
+            r = run_server(ds, model, "ira", rounds, dataset, U=U)
+            r["U"] = U
+            results.append(r)
+            print(f"fig5,{dataset},U={U},acc={r['final_acc']:.3f},"
+                  f"dropout={r['mean_dropout']:.3f}")
+    save_result("fig5_u_sweep", results)
+    return results
+
+
+if __name__ == "__main__":
+    args = std_argparser(__doc__).parse_args()
+    run(args.scale, args.rounds)

@@ -1,0 +1,39 @@
+"""Roofline summary benchmark: reads the dry-run artifacts (run
+`repro.launch.dryrun --all` first) and prints the per-(arch x shape) terms
+as CSV — the §Roofline deliverable in benchmark form."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(scale: str = "reduced", rounds=None):
+    del scale, rounds
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        print("roofline_summary,SKIPPED,no dryrun artifacts "
+              "(run: python -m repro.launch.dryrun --all)")
+        return []
+    rows = []
+    print("roofline,arch,shape,mesh,t_compute_ms,t_memory_ms,"
+          "t_collective_ms,bottleneck,useful_ratio,gib_per_dev")
+    for f in files:
+        d = json.load(open(f))
+        r = d["roofline"]
+        rows.append(d)
+        print(f"roofline,{d['arch']},{d['shape']},{d['mesh']},"
+              f"{r['t_compute_ms']:.3f},{r['t_memory_ms']:.1f},"
+              f"{r['t_collective_ms']:.1f},{r['bottleneck']},"
+              f"{r['useful_flops_ratio']:.3f},"
+              f"{r['bytes_per_device_gib']:.2f}")
+    n_ok = sum(1 for d in rows if d.get("status") == "ok")
+    print(f"roofline_summary,total={len(rows)},ok={n_ok}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark entrypoint: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run                # reduced scale
+  PYTHONPATH=src python -m benchmarks.run --scale paper  # paper scale
+  PYTHONPATH=src python -m benchmarks.run --only fig6
+
+Prints one CSV line per measurement and writes JSON artifacts to
+experiments/paper/.  The roofline benchmark reads the dry-run artifacts in
+experiments/dryrun/ (run repro.launch.dryrun --all first for full coverage).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=("reduced", "paper"),
+                    default="reduced")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--only", default=None,
+                    help="substring filter, e.g. fig6 or kernels")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_kernels, fig1_motivation, fig5_u_sweep,
+                            fig6_table2_main, fig7_fassa_params,
+                            fig8_table3_al, roofline_summary)
+    suites = [
+        ("fig1_motivation", fig1_motivation.run),
+        ("fig5_u_sweep", fig5_u_sweep.run),
+        ("fig6_table2_main", fig6_table2_main.run),
+        ("fig7_fassa_params", fig7_fassa_params.run),
+        ("fig8_table3_al", fig8_table3_al.run),
+        ("bench_kernels", bench_kernels.run),
+        ("roofline_summary", roofline_summary.run),
+    ]
+    t0 = time.time()
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        print(f"== {name} ==", flush=True)
+        fn(args.scale, args.rounds)
+    print(f"benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

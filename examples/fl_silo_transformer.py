@@ -1,0 +1,35 @@
+"""Cross-silo FedSAE over a production architecture: four silos fine-tune a
+(smoke-scale) granite-MoE model; the server predicts each silo's affordable
+local-step budget with FedSAE-Ira and aggregates sample-weighted uploads.
+
+    PYTHONPATH=src python examples/fl_silo_transformer.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.silo import SiloFedSAE
+from repro.models.api import build_model
+
+cfg = get_config("granite-moe-1b-a400m", smoke=True)
+model = build_model(cfg)
+fed = SiloFedSAE(model, n_silos=4, lr=5e-3, max_steps=8)
+
+ri = np.random.default_rng(0)
+K, S = 4, 64
+sizes = np.asarray(ri.integers(100, 1000, K))
+
+for r in range(8):
+    # each silo's corpus uses a different vocabulary slice (non-IID silos)
+    toks = np.stack([
+        ri.integers(0, cfg.vocab_size // (1 + (k % 3)), (fed.max_steps, 2, S))
+        for k in range(K)])
+    batches = {"tokens": jnp.asarray(toks, jnp.int32),
+               "labels": jnp.asarray(toks, jnp.int32)}
+    stats = fed.run_round(batches, sizes)
+    print(f"round {r}: loss={stats['loss'][-1]:.4f} "
+          f"dropout={stats['dropout'][-1]:.2f} "
+          f"predicted-pair=({fed.L.mean():.1f},{fed.H.mean():.1f})")
+
+assert np.isfinite(stats["loss"][-1])
+print("cross-silo FedSAE over", cfg.name, "done")

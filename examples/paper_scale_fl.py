@@ -1,0 +1,39 @@
+"""End-to-end driver at the PAPER's scale (the paper's kind of training run):
+1,000-client MNIST-like federation, K=30 participants/round, a few hundred
+rounds of FedSAE-Fassa with AL selection for the first quarter — exactly the
+deployment recipe §IV-C recommends.
+
+    PYTHONPATH=src python examples/paper_scale_fl.py             # 200 rounds
+    PYTHONPATH=src python examples/paper_scale_fl.py --rounds 60 # quicker
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro.data import make_mnist_like
+from repro.models.fl_models import make_mclr
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=200)
+ap.add_argument("--clients", type=int, default=1000)
+args = ap.parse_args()
+
+ds = make_mnist_like(n_clients=args.clients)  # 69,035 samples, 2 cls/client
+model = make_mclr(ds.clients_x[0].shape[1], ds.n_classes)
+
+cfg = ServerConfig(
+    algo="fassa", rounds=args.rounds, n_selected=30, lr=0.03,
+    al_rounds=args.rounds // 4,      # paper: AL for the first quarter
+    h_cap=24.0, eval_every=5,
+)
+server = FedSAEServer(ds, model, cfg,
+                      het=HeterogeneitySim(ds.n_clients, seed=0))
+hist = server.run(verbose=True)
+
+acc = hist["acc"][-1]
+drop = np.nanmean(hist["dropout"])
+print("\n=== paper-scale FedSAE-Fassa+AL run ===")
+print(f"clients={ds.n_clients} rounds={args.rounds} "
+      f"final_acc={acc:.3f} stragglers={drop*100:.1f}%")
+print("paper reference (real MNIST, Table II): acc 89.4%, stragglers 0.3%")

@@ -1,0 +1,20 @@
+import time
+import numpy as np
+
+from repro.core import FedSAEServer, ServerConfig, HeterogeneitySim
+from repro.data import make_femnist_like
+from repro.models.fl_models import make_mclr
+
+ds = make_femnist_like(n_clients=60, total=4000, dim=64, max_size=120)
+model = make_mclr(64, ds.n_classes)
+
+for algo in ("fedavg", "ira", "fassa"):
+    t0 = time.time()
+    cfg = ServerConfig(algo=algo, n_selected=10, rounds=30, h_cap=20.0,
+                       eval_every=5)
+    srv = FedSAEServer(ds, model, cfg, het=HeterogeneitySim(ds.n_clients, seed=0))
+    h = srv.run(verbose=False)
+    print(f"{algo:8s} acc={h['acc'][-1]:.3f} "
+          f"dropout={np.nanmean(h['dropout']):.2f} "
+          f"uploaded={np.nanmean(h['uploaded']):.1f} "
+          f"({time.time()-t0:.1f}s)")

@@ -1,0 +1,50 @@
+import sys
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.api import build_model, VLM_FRONTEND_DIM
+from repro.models.encdec import FRONTEND_DIM
+
+B, S = 2, 64
+
+
+def make_batch(cfg, kind="train"):
+    rng = jax.random.PRNGKey(0)
+    if cfg.is_encoder_decoder:
+        T = min(cfg.max_decoder_len, S)
+        return {
+            "frames": jax.random.normal(rng, (B, S, FRONTEND_DIM)),
+            "tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size),
+            "labels": jax.random.randint(rng, (B, T), 0, cfg.vocab_size),
+        }
+    P = min(cfg.n_patches, S // 4) if cfg.n_patches else 0
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S - P), 0, cfg.vocab_size),
+        "labels": jax.random.randint(rng, (B, S - P), 0, cfg.vocab_size),
+    }
+    if P:
+        batch["patches"] = jax.random.normal(rng, (B, P, VLM_FRONTEND_DIM))
+    return batch
+
+
+for arch in ARCH_IDS:
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    # prefill + decode
+    pre_batch = dict(batch)
+    pre_batch.pop("labels")
+    logits, cache = jax.jit(model.prefill)(params, pre_batch)
+    assert jnp.all(jnp.isfinite(logits)), arch
+    dcache = model.init_cache(B, S)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits2, dcache = jax.jit(model.decode_step)(params, dcache, tok,
+                                                 jnp.int32(5))
+    assert jnp.all(jnp.isfinite(logits2)), arch
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"OK {arch:25s} loss={float(loss):.3f} params={n_params:,}")
+print("ALL OK")

@@ -1,0 +1,68 @@
+"""Tensor checkpointing on msgpack (no orbax in the environment).
+
+Pytrees of arrays are flattened to ``{"/"-joined key path: (dtype, shape,
+raw bytes)}``; metadata (step, arbitrary JSON-able dict) rides along.
+Writes are atomic (tmp file + rename) so a crashed run never leaves a
+half-written checkpoint behind.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        flat[key] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                     "data": arr.tobytes()}
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int = 0,
+                    metadata: Optional[Dict] = None) -> None:
+    payload = {"step": step, "metadata": metadata or {},
+               "tensors": _flatten(tree)}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str, like=None) -> Tuple[Any, int, Dict]:
+    """Returns (tree, step, metadata). With ``like`` given, restores the
+    exact pytree structure; otherwise returns a flat {path: array} dict."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    tensors = {
+        k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"])).reshape(
+            v["shape"]).copy()
+        for k, v in payload["tensors"].items()
+    }
+    if like is None:
+        return tensors, payload["step"], payload["metadata"]
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in tensors:
+            raise KeyError(f"checkpoint missing tensor {key!r}")
+        leaves.append(jnp.asarray(tensors[key]))
+    return jax.tree_util.tree_unflatten(treedef, leaves), payload["step"], \
+        payload["metadata"]

@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    INPUT_SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    get_config,
+    get_shape,
+    supported_shapes,
+)

@@ -1,0 +1,19 @@
+# FedSAE: self-adaptive workload prediction + AL client selection.
+from repro.core.heterogeneity import HeterogeneitySim  # noqa: F401
+from repro.core.prediction import (  # noqa: F401
+    COMPLETED_H,
+    COMPLETED_L,
+    DROPPED,
+    fassa_predict,
+    fassa_threshold,
+    ira_predict,
+    outcomes,
+    uploaded_epochs,
+)
+from repro.core.selection import (  # noqa: F401
+    ValueTracker,
+    select_active,
+    select_random,
+    selection_probs,
+)
+from repro.core.server import FedSAEServer, ServerConfig  # noqa: F401

@@ -1,0 +1,85 @@
+"""The jitted federated round: vmapped masked-epoch local SGD + weighted
+FedAvg aggregation (DESIGN.md §3 "clients -> mesh data axis").
+
+Heterogeneous per-client trip counts are not SPMD-able, so every client runs
+``max_iters`` scan iterations and updates are masked past its budget
+``n_iters_k`` — bit-identical to "client k trains n_iters_k iterations",
+with uniform control flow.  On a TPU mesh the client axis shards over
+``data`` (the K selected clients are the leading vmapped axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+
+def make_round_fn(model, lr: float, batch_size: int, max_iters: int,
+                  prox_mu: float = 0.0) -> Callable:
+    """Build the jitted round function for an FLModel (loss/accuracy pair).
+
+    round_fn(global_params, x, y, mask, n, n_iters, rng) ->
+        (new_global_params, client_losses, uploaded_any)
+      x: [K, M, ...]  padded client data;  mask: [K, M]
+      n: [K] true sample counts;  n_iters: [K] masked local-SGD budget
+    """
+    B = batch_size
+
+    def local_train(global_params, xk, yk, maskk, nk, iters, key):
+        M = xk.shape[0]
+        perm = jnp.argsort(jax.random.uniform(key, (M,)) + (1.0 - maskk) * 1e9)
+        nk_safe = jnp.maximum(nk, 1)
+
+        def step(params, i):
+            idx = perm[(i * B + jnp.arange(B)) % nk_safe]
+            batch = {"x": xk[idx], "y": yk[idx],
+                     "mask": maskk[idx] * (jnp.arange(B) < nk_safe)}
+            def loss_fn(p):
+                l = model.loss(p, batch)
+                if prox_mu:
+                    sq = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+                        jax.tree.leaves(p), jax.tree.leaves(global_params)))
+                    l = l + 0.5 * prox_mu * sq
+                return l
+            g = jax.grad(loss_fn)(params)
+            active = (i < iters).astype(jnp.float32)
+            params = jax.tree.map(lambda p, gg: p - lr * active * gg,
+                                  params, g)
+            return params, None
+
+        params, _ = jax.lax.scan(step, global_params, jnp.arange(max_iters))
+        final_loss = model.loss(params, {"x": xk, "y": yk, "mask": maskk})
+        return params, final_loss
+
+    @jax.jit
+    def round_fn(global_params, x, y, mask, n, n_iters, rng):
+        K = x.shape[0]
+        keys = jax.random.split(rng, K)
+        params_k, losses = jax.vmap(
+            local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+            global_params, x, y, mask, n, n_iters, keys)
+        uploaded = (n_iters > 0).astype(jnp.float32)
+        wk = n.astype(jnp.float32) * uploaded
+        tot = wk.sum()
+        coef = jnp.where(tot > 0, wk / jnp.maximum(tot, 1e-9), 0.0)
+
+        def agg(stacked, g0):
+            mixed = jnp.tensordot(coef.astype(stacked.dtype), stacked, axes=1)
+            return jnp.where(tot > 0, mixed, g0)
+
+        new_global = jax.tree.map(agg, params_k, global_params)
+        return new_global, losses, tot > 0
+
+    return round_fn
+
+
+def make_eval_fn(model) -> Callable:
+    @jax.jit
+    def eval_fn(params, x, y):
+        batch = {"x": x, "y": y}
+        return model.accuracy(params, batch), model.loss(params, batch)
+    return eval_fn

@@ -1,0 +1,41 @@
+"""Client selection: random (FedAvg) and Active-Learning (paper Eqs. 6-7).
+
+AL: training value v_k = sqrt(n_k) * mean_loss_k (refreshed only for
+participants); selection probability p_k = softmax(beta * v)_k; the server
+samples K distinct participants ~ p (Gumbel top-k, without replacement).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ValueTracker:
+    def __init__(self, n_clients: int, sizes: np.ndarray, init_loss: float = 2.0):
+        self.v = np.sqrt(sizes) * init_loss
+        self.sizes = sizes
+
+    def update(self, client_ids, losses):
+        """Eq. 6: refresh value only for this round's participants."""
+        self.v[np.asarray(client_ids)] = (
+            np.sqrt(self.sizes[np.asarray(client_ids)]) * np.asarray(losses))
+
+
+def selection_probs(v: np.ndarray, beta: float = 0.01) -> np.ndarray:
+    """Eq. 7 — beta-scaled softmax over training values."""
+    z = beta * v
+    z = z - z.max()
+    p = np.exp(z)
+    return p / p.sum()
+
+
+def select_active(rng: np.random.Generator, v: np.ndarray, k: int,
+                  beta: float = 0.01) -> np.ndarray:
+    """Sample k distinct clients with probability proportional to Eq. 7
+    (Gumbel top-k == PL sampling without replacement)."""
+    p = selection_probs(v, beta)
+    g = rng.gumbel(size=len(p))
+    return np.argsort(-(np.log(np.maximum(p, 1e-12)) + g))[:k]
+
+
+def select_random(rng: np.random.Generator, n_clients: int, k: int) -> np.ndarray:
+    return rng.choice(n_clients, size=k, replace=False)

@@ -1,0 +1,173 @@
+"""FedSAE server: the full training loop of Fig. 2.
+
+Per round: (1) predict task pairs from history (Ira/Fassa), (2) convert
+training values to selection probabilities (AL) or select uniformly,
+(3) broadcast + masked local training (jitted round), (4) aggregate and
+update history.  Baselines: FedAvg (fixed workload, stragglers upload
+nothing) and FedProx (ideal partial work, for reference).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prediction as pred
+from repro.core.heterogeneity import HeterogeneitySim
+from repro.core.rounds import make_eval_fn, make_round_fn
+from repro.core.selection import ValueTracker, select_active, select_random
+from repro.data.federated import FederatedDataset
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    algo: str = "ira"            # ira | fassa | fedavg | fedprox
+    n_selected: int = 10         # K
+    lr: float = 0.03
+    batch_size: int = 10
+    rounds: int = 100
+    fixed_epochs: float = 15.0   # FedAvg/FedProx assigned workload E
+    h_cap: float = 24.0          # cap on predicted H (bounds the scan)
+    init_pair: tuple = (1.0, 2.0)
+    U: float = 10.0              # Ira inverse-ratio increment
+    alpha: float = 0.95          # Fassa EMA smoothing
+    gamma1: float = 3.0
+    gamma2: float = 1.0
+    al_rounds: int = 0           # use AL selection for the first n rounds
+    beta: float = 0.01           # AL softmax scale
+    prox_mu: float = 0.1         # FedProx proximal weight
+    seed: int = 0
+    selection_seed: int = 1234   # fixed across frameworks (paper §IV-A)
+    eval_every: int = 1
+
+
+class FedSAEServer:
+    def __init__(self, dataset: FederatedDataset, model, cfg: ServerConfig,
+                 het: Optional[HeterogeneitySim] = None):
+        self.ds = dataset
+        self.model = model
+        self.cfg = cfg
+        self.het = het or HeterogeneitySim(dataset.n_clients, seed=cfg.seed)
+        N = dataset.n_clients
+        self.L = np.full(N, cfg.init_pair[0], np.float64)
+        self.H = np.full(N, cfg.init_pair[1], np.float64)
+        self.theta = np.full(N, 0.5 * sum(cfg.init_pair), np.float64)
+        self.values = ValueTracker(N, dataset.sizes.astype(np.float64))
+        self.sel_rng = np.random.default_rng(cfg.selection_seed)
+        self.data_rng = jax.random.PRNGKey(cfg.seed)
+        self.params = model.init(jax.random.PRNGKey(cfg.seed + 7))
+
+        self.max_n = int(dataset.sizes.max())
+        tau_max = math.ceil(self.max_n / cfg.batch_size)
+        budget = max(cfg.h_cap, cfg.fixed_epochs)
+        self.max_iters = int(math.ceil(budget * tau_max))
+        self.round_fn = make_round_fn(
+            model, cfg.lr, cfg.batch_size, self.max_iters,
+            prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else 0.0)
+        self.eval_fn = make_eval_fn(model)
+        self.history: Dict[str, List] = {
+            "acc": [], "test_loss": [], "train_loss": [], "dropout": [],
+            "assigned": [], "uploaded": [], "true_workload": []}
+
+    # ------------------------------------------------------------------
+    def _workloads(self, ids: np.ndarray, E_true: np.ndarray):
+        """Per-participant uploaded epochs + history update. Returns
+        (e_eff, outcome)."""
+        cfg = self.cfg
+        if cfg.algo == "oracle":
+            # skyline: the server magically knows E~ in advance and assigns
+            # exactly the affordable workload (upper bound for any predictor;
+            # unrealizable — it is what FedProx implicitly assumes)
+            e_eff = np.minimum(E_true, cfg.h_cap)
+            outcome = np.where(e_eff > 0, pred.COMPLETED_H, pred.DROPPED)
+            assigned = e_eff.copy()
+        elif cfg.algo == "fedavg":
+            ok = E_true >= cfg.fixed_epochs
+            e_eff = np.where(ok, cfg.fixed_epochs, 0.0)
+            outcome = np.where(ok, pred.COMPLETED_H, pred.DROPPED)
+            assigned = np.full(len(ids), cfg.fixed_epochs)
+        elif cfg.algo == "fedprox":
+            e_eff = np.minimum(E_true, cfg.fixed_epochs)
+            outcome = np.where(E_true >= cfg.fixed_epochs, pred.COMPLETED_H,
+                               np.where(e_eff > 0, pred.COMPLETED_L,
+                                        pred.DROPPED))
+            assigned = np.full(len(ids), cfg.fixed_epochs)
+        else:
+            L, H = self.L[ids], self.H[ids]
+            assigned = H.copy()
+            e_eff = pred.uploaded_epochs(L, H, E_true)
+            if cfg.algo == "ira":
+                L2, H2, outcome = pred.ira_predict(L, H, E_true, U=cfg.U,
+                                                   h_cap=cfg.h_cap)
+            elif cfg.algo == "fassa":
+                L2, H2, outcome = pred.fassa_predict(
+                    L, H, E_true, self.theta[ids], cfg.gamma1, cfg.gamma2,
+                    h_cap=cfg.h_cap)
+                self.theta[ids] = pred.fassa_threshold(
+                    self.theta[ids], E_true, cfg.alpha)
+            else:
+                raise ValueError(cfg.algo)
+            self.L[ids], self.H[ids] = L2, H2
+        return e_eff, outcome, assigned
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int) -> Dict:
+        cfg = self.cfg
+        E_true_all = self.het.sample_round()
+        if t < cfg.al_rounds:
+            ids = select_active(self.sel_rng, self.values.v, cfg.n_selected,
+                                cfg.beta)
+        else:
+            ids = select_random(self.sel_rng, self.ds.n_clients,
+                                cfg.n_selected)
+        E_true = E_true_all[ids]
+        e_eff, outcome, assigned = self._workloads(ids, E_true)
+
+        x, y, mask, n = self.ds.stacked(ids, self.max_n)
+        tau = np.ceil(n / cfg.batch_size)
+        n_iters = np.minimum(np.round(e_eff * tau), self.max_iters)
+        self.data_rng, sub = jax.random.split(self.data_rng)
+        self.params, losses, _ = self.round_fn(
+            self.params, jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
+            jnp.asarray(n, jnp.int32), jnp.asarray(n_iters, jnp.int32), sub)
+        losses = np.asarray(losses)
+
+        uploaders = np.asarray(n_iters) > 0
+        if uploaders.any():
+            self.values.update(ids[uploaders], losses[uploaders])
+
+        stats = {
+            "round": t,
+            "dropout": float((outcome == pred.DROPPED).mean()),
+            "train_loss": float(losses[uploaders].mean()) if uploaders.any()
+            else float("nan"),
+            "assigned": float(np.mean(assigned)),
+            "uploaded": float(np.mean(e_eff)),
+            "true_workload": float(np.mean(E_true)),
+        }
+        return stats
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: Optional[int] = None, verbose: bool = False):
+        T = rounds or self.cfg.rounds
+        tx, ty = jnp.asarray(self.ds.test_x), jnp.asarray(self.ds.test_y)
+        for t in range(T):
+            stats = self.run_round(t)
+            if t % self.cfg.eval_every == 0 or t == T - 1:
+                acc, tl = self.eval_fn(self.params, tx, ty)
+                stats["acc"], stats["test_loss"] = float(acc), float(tl)
+            else:
+                stats["acc"] = self.history["acc"][-1] if self.history["acc"] \
+                    else float("nan")
+                stats["test_loss"] = float("nan")
+            for k in self.history:
+                self.history[k].append(stats.get(k, float("nan")))
+            if verbose and (t % 10 == 0 or t == T - 1):
+                print(f"[{self.cfg.algo}] round {t:3d} acc={stats['acc']:.3f} "
+                      f"dropout={stats['dropout']:.2f} "
+                      f"loss={stats['train_loss']:.3f}")
+        return self.history

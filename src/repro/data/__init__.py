@@ -1,0 +1,7 @@
+from repro.data.federated import (  # noqa: F401
+    FederatedDataset,
+    make_femnist_like,
+    make_mnist_like,
+    make_sent140_like,
+    make_synthetic,
+)

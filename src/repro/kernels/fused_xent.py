@@ -1,0 +1,76 @@
+"""Pallas fused softmax cross-entropy over a huge vocabulary (§Perf kernel).
+
+Never materializes the [T, V] logit matrix in HBM: grid (row_blocks,
+vocab_blocks) with the vocab axis innermost/sequential; running (m, l, gold)
+live in VMEM scratch, the loss row is emitted at the last vocab block.
+Matters most for minitron-8b (V = 256,000): the logits for one 4k-token
+batch row are 2 GB that never get written.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _xent_kernel(h_ref, w_ref, lab_ref, loss_ref, m_ref, l_ref, gold_ref, *,
+                 bv: int, n_v: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        gold_ref[...] = jnp.zeros_like(gold_ref)
+
+    h = h_ref[...].astype(jnp.float32)              # [br, d]
+    w = w_ref[...].astype(jnp.float32)              # [d, bv]
+    logits = h @ w                                  # [br, bv]
+    cols = j * bv + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    labels = lab_ref[...]                           # [br]
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.exp(logits - m_new[:, None]).sum(-1)
+    m_ref[...] = m_new
+    hit = (cols == labels[:, None])
+    gold_ref[...] += jnp.where(hit, logits, 0.0).sum(axis=-1)
+
+    @pl.when(j == n_v - 1)
+    def _final():
+        loss_ref[...] = (m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+                         - gold_ref[...]).astype(loss_ref.dtype)
+
+
+def fused_softmax_xent_fwd(h, W, labels, *, block_rows: int = 256,
+                           block_v: int = 512, interpret: bool = True):
+    """h: [T, d]; W: [d, V]; labels: [T] int32 -> per-row loss [T] f32."""
+    T, d = h.shape
+    V = W.shape[1]
+    br, bv = min(block_rows, T), min(block_v, V)
+    assert T % br == 0 and V % bv == 0, (T, V, br, bv)
+    n_r, n_v = T // br, V // bv
+
+    kernel = functools.partial(_xent_kernel, bv=bv, n_v=n_v)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_r, n_v),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((br,), jnp.float32),
+            pltpu.VMEM((br,), jnp.float32),
+            pltpu.VMEM((br,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, W, labels)

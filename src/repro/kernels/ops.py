@@ -1,0 +1,95 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each op is a custom_vjp: the forward runs the Pallas kernel, the backward
+recomputes through the jnp oracle (flash-style recompute — the standard
+memory/compute trade on TPU).  ``interpret=True`` everywhere in this
+container (CPU); on a real TPU pass interpret=False via KERNEL_INTERPRET.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import (flash_attention_bwd,
+                                           flash_attention_fwd)
+from repro.kernels.fused_xent import fused_softmax_xent_fwd
+from repro.kernels.selective_scan import selective_scan_fwd
+
+KERNEL_INTERPRET = True  # CPU container: interpret mode; False on real TPU
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    out, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 interpret=KERNEL_INTERPRET)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window):
+    out, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   interpret=KERNEL_INTERPRET)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, res, g):
+    q, k, v, out, lse = res
+    return flash_attention_bwd(q, k, v, out, lse, g, causal=causal,
+                               window=window, interpret=KERNEL_INTERPRET)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def selective_scan(dt, A, Bmat, Cmat, x, h0):
+    return selective_scan_fwd(dt, A, Bmat, Cmat, x, h0,
+                              interpret=KERNEL_INTERPRET)
+
+
+def _ss_fwd(dt, A, Bmat, Cmat, x, h0):
+    return selective_scan(dt, A, Bmat, Cmat, x, h0), (dt, A, Bmat, Cmat, x, h0)
+
+
+def _ss_bwd(res, g):
+    _, vjp = jax.vjp(ref.selective_scan, *res)
+    return vjp(g)
+
+
+selective_scan.defvjp(_ss_fwd, _ss_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def fused_softmax_xent(h, W, labels):
+    return fused_softmax_xent_fwd(h, W, labels, interpret=KERNEL_INTERPRET)
+
+
+def _fx_fwd(h, W, labels):
+    return fused_softmax_xent(h, W, labels), (h, W, labels)
+
+
+def _fx_bwd(res, g):
+    h, W, labels = res
+    _, vjp = jax.vjp(lambda h_, W_: ref.softmax_xent(h_, W_, labels), h, W)
+    dh, dW = vjp(g)
+    return dh, dW, None
+
+
+fused_softmax_xent.defvjp(_fx_fwd, _fx_bwd)

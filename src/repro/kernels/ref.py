@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive full-softmax attention with GQA. q: [B,S,Hq,hd]; k/v: [B,T,Hkv,hd]."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(jnp.float32)) * hd ** -0.5
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def selective_scan(dt, A, Bmat, Cmat, x, h0):
+    """Step-by-step SSM recurrence.  dt/x: [B,S,d]; A: [d,N]; B/C: [B,S,N];
+    h0: [B,d,N] -> (y [B,S,d] f32, hT [B,d,N] f32)."""
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp               # [B,d], [B,N], [B,N], [B,d]
+        dA = jnp.exp(dt_t[..., None] * A)       # [B,d,N]
+        h = dA * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (dt.swapaxes(0, 1), Bmat.astype(jnp.float32).swapaxes(0, 1),
+         Cmat.astype(jnp.float32).swapaxes(0, 1), x.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT
+
+
+def softmax_xent(h, W, labels):
+    """Row-wise CE of logits h @ W.  h: [T,d]; W: [d,V]; labels: [T] -> [T]."""
+    logits = (h.astype(jnp.float32) @ W.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - gold

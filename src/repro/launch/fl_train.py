@@ -1,0 +1,95 @@
+"""Federated training driver — the paper's system end-to-end.
+
+  # paper-style FL over synthetic federated datasets (MCLR/LSTM):
+  PYTHONPATH=src python -m repro.launch.fl_train --dataset femnist \
+      --algo ira --rounds 50
+
+  # cross-silo FL over a production architecture (smoke scale on CPU):
+  PYTHONPATH=src python -m repro.launch.fl_train --silo-arch llama3.2-3b \
+      --silos 4 --rounds 5
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro.core.silo import SiloFedSAE
+from repro.data.federated import DATASETS
+from repro.models.api import build_model
+from repro.models.fl_models import make_lstm, make_mclr
+
+
+def run_flat(args):
+    make = DATASETS[args.dataset]
+    ds = make() if args.paper_scale else {
+        "mnist": lambda: make(n_clients=100, total=7000, dim=64, max_size=120),
+        "femnist": lambda: make(n_clients=60, total=4500, dim=64, max_size=120),
+        "synthetic": lambda: make(n_clients=40, total=3000, max_size=150),
+        "sent140": lambda: make(n_clients=60, total=3000, vocab=300,
+                                max_size=100),
+    }[args.dataset]()
+    if args.dataset == "sent140":
+        model = make_lstm(vocab=int(max(x.max() for x in ds.clients_x)) + 1)
+        lr = 0.3
+    else:
+        model = make_mclr(ds.clients_x[0].shape[1], ds.n_classes)
+        lr = 0.03 if args.dataset != "synthetic" else 0.01
+    cfg = ServerConfig(algo=args.algo, rounds=args.rounds, lr=lr,
+                       n_selected=min(10, ds.n_clients),
+                       al_rounds=args.al_rounds, h_cap=24.0)
+    srv = FedSAEServer(ds, model, cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=cfg.seed))
+    hist = srv.run(verbose=True)
+    print(f"final: acc={hist['acc'][-1]:.3f} "
+          f"mean_dropout={np.nanmean(hist['dropout']):.3f}")
+
+
+def run_silo(args):
+    cfg = jax.tree_util.Partial  # noqa: placeholder to satisfy linters
+    from repro.configs import get_config
+    acfg = get_config(args.silo_arch, smoke=True)
+    model = build_model(acfg)
+    fed = SiloFedSAE(model, args.silos, lr=5e-3, max_steps=args.max_steps)
+    ri = np.random.default_rng(0)
+    K, S = args.silos, 64
+    sizes = np.asarray(ri.integers(100, 1000, K))
+    # each silo has its own token distribution (silo id biases the tokens)
+    for r in range(args.rounds):
+        toks = np.stack([
+            ri.integers(0, acfg.vocab_size // (1 + (k % 3)),
+                        (fed.max_steps, 2, S))
+            for k in range(K)])
+        batches = {"tokens": jnp.asarray(toks, jnp.int32),
+                   "labels": jnp.asarray(toks, jnp.int32)}
+        stats = fed.run_round(batches, sizes)
+        print(f"round {r}: loss={stats['loss'][-1]:.4f} "
+              f"dropout={stats['dropout'][-1]:.2f} "
+              f"uploaded_steps={stats['uploaded_steps'][-1]:.1f}")
+    assert np.isfinite(stats["loss"][-1])
+    print("silo FL done")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="femnist", choices=list(DATASETS))
+    ap.add_argument("--algo", default="ira",
+                    choices=("fedavg", "fedprox", "ira", "fassa", "oracle"))
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--al-rounds", type=int, default=0)
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--silo-arch", default=None)
+    ap.add_argument("--silos", type=int, default=4)
+    ap.add_argument("--max-steps", type=int, default=8)
+    args = ap.parse_args()
+    if args.silo_arch:
+        run_silo(args)
+    else:
+        run_flat(args)
+
+
+if __name__ == "__main__":
+    main()

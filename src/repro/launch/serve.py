@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill a prompt batch, then greedy decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import VLM_FRONTEND_DIM, build_model
+from repro.models.encdec import FRONTEND_DIM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = args.batch, args.prompt_len
+    ri = np.random.default_rng(0)
+
+    batch = {"tokens": jnp.asarray(ri.integers(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch = {"frames": jnp.asarray(ri.normal(size=(B, S, FRONTEND_DIM)),
+                                       jnp.float32),
+                 "tokens": jnp.asarray(
+                     ri.integers(0, cfg.vocab_size,
+                                 (B, min(cfg.max_decoder_len, S))),
+                     jnp.int32)}
+    elif cfg.n_patches:
+        P = min(cfg.n_patches, S // 4)
+        batch["tokens"] = batch["tokens"][:, :S - P]
+        batch["patches"] = jnp.asarray(
+            ri.normal(size=(B, P, VLM_FRONTEND_DIM)), jnp.float32)
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: {B}x{S} in {t_prefill*1e3:.0f}ms")
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out_tokens = [tok]
+    cur = batch["tokens"].shape[1]
+    t0 = time.time()
+    for i in range(args.gen):
+        logits, cache = decode(params, cache, tok, jnp.int32(cur + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    print(f"decode: {args.gen} steps x batch {B} in {dt*1e3:.0f}ms "
+          f"({B*args.gen/dt:.1f} tok/s); sample: {np.asarray(gen[0,:12])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Step builders: jitted train / prefill / decode steps with explicit
+in/out shardings derived from the logical-axis spec trees."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.api import Model, abstract_cache, abstract_params
+from repro.optim import adamw, sgd
+from repro.sharding.rules import logical_spec
+
+
+def _is_spec_leaf(s):
+    return isinstance(s, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in s)
+
+
+def _flat_by_path(tree, is_leaf=None):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    out = {}
+    for path, leaf in flat:
+        key = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+        out[key] = leaf
+    return out
+
+
+def shardings_from_specs(mesh, shapes_tree, specs_tree):
+    """NamedSharding tree matching shapes_tree, using logical-axis specs.
+
+    Must run under ``jax.sharding.use_mesh(mesh)`` (logical_spec reads the
+    ambient abstract mesh for divisibility filtering).
+    """
+    shapes_flat, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    specs_by_path = _flat_by_path(specs_tree, is_leaf=_is_spec_leaf)
+    leaves = []
+    for path, leaf in shapes_flat:
+        key = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+        axes = specs_by_path.get(key)
+        if axes is None:
+            spec = P()
+        else:
+            spec = logical_spec(leaf.shape, list(axes) +
+                                [None] * (len(leaf.shape) - len(axes)))
+        leaves.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(shapes_tree), leaves)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def make_optimizer(name: str, lr: float = 1e-4):
+    if name == "sgd":
+        return sgd(lr)
+    if name == "adamw":
+        return adamw(lr)
+    raise ValueError(name)
+
+
+def opt_state_specs(opt_name: str, param_specs_tree):
+    """Spec tree matching the optimizer state structure."""
+    if opt_name == "sgd":
+        return {"step": ("none",)}
+    if opt_name == "adamw":
+        return {"m": param_specs_tree, "v": param_specs_tree,
+                "step": ("none",)}
+    raise ValueError(opt_name)
+
+
+def make_train_step(model: Model, optimizer):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, cur_index):
+        return model.decode_step(params, cache, tokens, cur_index)
+    return decode_step
+
+
+def lower_step(model: Model, shape: ShapeConfig, mesh, optimizer_name="sgd"):
+    """Lower (not compile) the right step for (model, shape) on ``mesh``.
+
+    Returns (lowered, kind).  Must run under use_mesh(mesh) + use_rules.
+    """
+    cfg = model.cfg
+    aparams = abstract_params(model)
+    pspecs = model.param_specs()
+    psh = shardings_from_specs(mesh, aparams, pspecs)
+    batch, baxes = model.batch_spec(shape)
+    bsh = shardings_from_specs(mesh, batch, baxes)
+
+    if shape.kind == "train":
+        opt = make_optimizer(optimizer_name)
+        aopt = jax.eval_shape(opt.init, aparams)
+        osh = shardings_from_specs(
+            mesh, aopt, opt_state_specs(optimizer_name, pspecs))
+        fn = make_train_step(model, opt)
+        jitted = jax.jit(fn, in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, NamedSharding(mesh, P())),
+                         donate_argnums=(0, 1))
+        return jitted.lower(aparams, aopt, batch), "train"
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        jitted = jax.jit(fn, in_shardings=(psh, bsh))
+        return jitted.lower(aparams, batch), "prefill"
+
+    # decode
+    acache = abstract_cache(model, shape.global_batch, shape.seq_len)
+    cspecs = model.cache_specs()
+    csh = shardings_from_specs(mesh, acache, cspecs)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tsh = shardings_from_specs(mesh, tokens, ("batch", None))
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = make_decode_step(model)
+    jitted = jax.jit(fn, in_shardings=(psh, csh, tsh, NamedSharding(mesh, P())),
+                     donate_argnums=(1,))
+    return jitted.lower(aparams, acache, tokens, idx), "decode"

@@ -1,0 +1,87 @@
+"""Centralized training driver (used by smoke runs and as the per-silo local
+step in cross-silo FL).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
+      --steps 20 --batch 4 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.launch.steps import make_train_step
+from repro.models.api import VLM_FRONTEND_DIM, build_model
+from repro.models.encdec import FRONTEND_DIM
+from repro.optim import adamw, sgd
+
+
+def synth_batch(cfg, rng, batch, seq):
+    ri = np.random.default_rng(int(jax.random.randint(rng, (), 0, 2**31 - 1)))
+    if cfg.is_encoder_decoder:
+        T = min(cfg.max_decoder_len, seq)
+        return {
+            "frames": jnp.asarray(ri.normal(size=(batch, seq, FRONTEND_DIM)),
+                                  jnp.float32),
+            "tokens": jnp.asarray(ri.integers(0, cfg.vocab_size, (batch, T)),
+                                  jnp.int32),
+            "labels": jnp.asarray(ri.integers(0, cfg.vocab_size, (batch, T)),
+                                  jnp.int32),
+        }
+    P = min(cfg.n_patches, seq // 4) if cfg.n_patches else 0
+    out = {
+        "tokens": jnp.asarray(
+            ri.integers(0, cfg.vocab_size, (batch, seq - P)), jnp.int32),
+        "labels": jnp.asarray(
+            ri.integers(0, cfg.vocab_size, (batch, seq - P)), jnp.int32),
+    }
+    if P:
+        out["patches"] = jnp.asarray(
+            ri.normal(size=(batch, P, VLM_FRONTEND_DIM)), jnp.float32)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw", choices=("sgd", "adamw"))
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={args.arch} smoke={args.smoke} params={n_params:,}")
+
+    opt = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+
+    rng = jax.random.PRNGKey(1)
+    t0 = time.time()
+    for step in range(args.steps):
+        rng, sub = jax.random.split(rng)
+        batch = synth_batch(cfg, sub, args.batch, args.seq)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(loss):.4f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+        assert np.isfinite(float(loss)), "loss diverged"
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

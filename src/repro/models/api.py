@@ -1,0 +1,107 @@
+"""Public model surface: build_model(cfg) -> Model.
+
+A Model bundles init / train_loss / prefill / decode_step / init_cache plus
+the *abstract* input builders used by the multi-pod dry-run (ShapeDtypeStruct
+stand-ins + logical-axis shardings; no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import decoder, encdec
+from repro.models.encdec import FRONTEND_DIM
+
+VLM_FRONTEND_DIM = 1024  # InternViT-300M hidden size (stub frontend)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable[[Any], Any]                       # rng -> params
+    param_specs: Callable[[], Any]                   # () -> logical-axis tree
+    train_loss: Callable[[Any, Dict], Tuple[Any, Dict]]
+    prefill: Callable[[Any, Dict], Tuple[Any, Any]]
+    decode_step: Callable[[Any, Any, Any, Any], Tuple[Any, Any]]
+    init_cache: Callable[[int, int], Any]            # (batch, max_len) -> cache
+    cache_specs: Callable[[], Any]
+    batch_spec: Callable[[ShapeConfig], Tuple[Dict, Dict]]  # abstract inputs
+
+
+def _vlm_patches(cfg: ArchConfig, seq_len: int) -> int:
+    if not cfg.n_patches:
+        return 0
+    return min(cfg.n_patches, seq_len // 4)
+
+
+def _decoder_batch_spec(cfg: ArchConfig, shape: ShapeConfig):
+    """(ShapeDtypeStruct tree, logical-axes tree) for train/prefill batches."""
+    B, S = shape.global_batch, shape.seq_len
+    P = _vlm_patches(cfg, S)
+    tok = jax.ShapeDtypeStruct((B, S - P), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    if P:
+        batch["patches"] = jax.ShapeDtypeStruct((B, P, VLM_FRONTEND_DIM),
+                                                jnp.dtype(cfg.dtype))
+        axes["patches"] = ("batch", None, None)
+    if shape.kind == "prefill":
+        del batch["labels"], axes["labels"]
+    return batch, axes
+
+
+def _audio_batch_spec(cfg: ArchConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    T = min(cfg.max_decoder_len, S)
+    batch = {
+        "frames": jax.ShapeDtypeStruct((B, S, FRONTEND_DIM), jnp.dtype(cfg.dtype)),
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+    }
+    axes = {"frames": ("batch", None, None), "tokens": ("batch", None),
+            "labels": ("batch", None)}
+    if shape.kind == "prefill":
+        del batch["labels"], axes["labels"]
+    return batch, axes
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init=lambda rng: encdec.init_params(rng, cfg)[0],
+            param_specs=lambda: encdec.param_specs(cfg),
+            train_loss=lambda p, b: encdec.train_loss(p, cfg, b),
+            prefill=lambda p, b: encdec.prefill(p, cfg, b),
+            decode_step=lambda p, c, t, i: encdec.decode_step(p, cfg, c, t, i),
+            init_cache=lambda batch, max_len: encdec.init_cache(
+                cfg, batch, enc_len=max_len, dec_len=cfg.max_decoder_len),
+            cache_specs=lambda: encdec.cache_specs(cfg),
+            batch_spec=lambda s: _audio_batch_spec(cfg, s),
+        )
+
+    extra = VLM_FRONTEND_DIM if cfg.n_patches else 0
+    return Model(
+        cfg=cfg,
+        init=lambda rng: decoder.init_params(rng, cfg, extra)[0],
+        param_specs=lambda: decoder.param_specs(cfg, extra),
+        train_loss=lambda p, b: decoder.train_loss(p, cfg, b),
+        prefill=lambda p, b: decoder.prefill(p, cfg, b),
+        decode_step=lambda p, c, t, i: decoder.decode_step(p, cfg, c, t, i),
+        init_cache=lambda batch, max_len: decoder.init_cache(cfg, batch, max_len),
+        cache_specs=lambda: decoder.cache_specs(cfg),
+        batch_spec=lambda s: _decoder_batch_spec(cfg, s),
+    )
+
+
+def abstract_params(model: Model):
+    """ShapeDtypeStruct pytree of the params (no allocation)."""
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_cache(model: Model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))

@@ -1,0 +1,284 @@
+"""Unified decoder-only model covering dense / MoE / VLM / SSM / hybrid.
+
+Layers are organized as ``n_groups`` repetitions of a ``period``-layer block
+pattern (period == 1 for uniform stacks, period == attn_period for jamba-style
+hybrids).  Per-position parameters are stacked on a leading group axis and the
+stack is consumed by ``lax.scan`` — HLO size stays O(period), not O(depth).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as Mb
+from repro.models import moe as Moe
+from repro.sharding import shard
+
+
+def block_kinds(cfg, pos: int) -> Tuple[str, str]:
+    """(mixer_kind, ffn_kind) for block position ``pos`` within a group."""
+    mixer = "attn" if cfg.is_attn_layer(pos) else "mamba"
+    if cfg.d_ff <= 0:
+        ffn = "none"
+    elif cfg.is_moe_layer(pos):
+        ffn = "moe"
+    else:
+        ffn = "dense"
+    return mixer, ffn
+
+
+def n_groups(cfg) -> int:
+    period = cfg.attn_period or 1
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    return cfg.n_layers // period
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_one_pos(rng, cfg, pos: int):
+    mixer, ffn = block_kinds(cfg, pos)
+    k1, k2 = jax.random.split(rng)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if mixer == "attn":
+        params["mixer"], specs["mixer"] = L.init_attention(k1, cfg)
+    else:
+        params["mixer"], specs["mixer"] = Mb.init_mamba(k1, cfg)
+    if ffn == "dense":
+        params["ffn"], specs["ffn"] = L.init_ffn(k2, cfg)
+    elif ffn == "moe":
+        params["ffn"], specs["ffn"] = Moe.init_moe(k2, cfg)
+    return params, specs
+
+
+def _is_spec_leaf(s):
+    return isinstance(s, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in s)
+
+
+def param_specs(cfg, extra_embed_dim: int = 0):
+    """Logical-axis spec tree mirroring init_params output (pure metadata)."""
+    period = cfg.attn_period or 1
+    specs: Dict[str, Any] = {"embeddings": dict(L.EMB_SPECS)}
+    if cfg.tie_embeddings:
+        del specs["embeddings"]["unembed"]
+    if extra_embed_dim:
+        specs["modality_proj"] = ("none", "embed")
+    specs["blocks"] = {
+        f"pos{p}": jax.tree.map(lambda s: ("none",) + tuple(s),
+                                _pos_specs(cfg, p), is_leaf=_is_spec_leaf)
+        for p in range(period)
+    }
+    return specs
+
+
+def init_params(rng, cfg, extra_embed_dim: int = 0):
+    """Returns (params, specs).  Per-position params stacked over groups."""
+    period = cfg.attn_period or 1
+    G = n_groups(cfg)
+    keys = jax.random.split(rng, period + 2)
+    params: Dict[str, Any] = {}
+    params["embeddings"], _ = L.init_embeddings(keys[-1], cfg)
+    if extra_embed_dim:
+        params["modality_proj"] = L.dense_init(
+            keys[-2], (extra_embed_dim, cfg.d_model), cfg.params_dtype)
+    blocks: Dict[str, Any] = {}
+    for p in range(period):
+        gkeys = jax.random.split(keys[p], G)
+        blocks[f"pos{p}"] = jax.vmap(
+            lambda r, _p=p: _init_one_pos(r, cfg, _p)[0])(gkeys)
+    params["blocks"] = blocks
+    return params, param_specs(cfg, extra_embed_dim)
+
+
+def _pos_specs(cfg, pos: int):
+    """Spec tree for one (unstacked) block position (pure metadata)."""
+    mixer, ffn = block_kinds(cfg, pos)
+    specs: Dict[str, Any] = {}
+    specs["mixer"] = dict(L.ATTN_SPECS) if mixer == "attn" else dict(Mb.MAMBA_SPECS)
+    if ffn == "dense":
+        specs["ffn"] = dict(L.FFN_SPECS)
+    elif ffn == "moe":
+        specs["ffn"] = dict(Moe.MOE_SPECS)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(pparams, cfg, pos, h, positions, mode, cache, cur_index):
+    mixer, ffn = block_kinds(cfg, pos)
+    aux = jnp.float32(0)
+    if mixer == "attn":
+        if mode == "decode":
+            out, new_mixer_cache = L.attn_decode(
+                pparams["mixer"], cfg, h, cache, cur_index)
+        else:
+            out, kv = L.attn_forward(pparams["mixer"], cfg, h, positions)
+            new_mixer_cache = _kv_to_cache(cfg, kv, h.shape[0], positions)
+    else:
+        out, new_mixer_cache = Mb.mamba_forward(
+            pparams["mixer"], cfg, h, cache=cache if mode == "decode" else None)
+    h = h + out
+    if ffn == "dense":
+        h = h + L.ffn_forward(pparams["ffn"], cfg, h)
+    elif ffn == "moe":
+        out, aux = Moe.moe_forward(pparams["ffn"], cfg, h)
+        h = h + out
+    return h, new_mixer_cache, aux
+
+
+def _kv_to_cache(cfg, kv, batch, positions):
+    """Convert full-sequence prefill K/V into the decode cache layout."""
+    k, v = kv
+    window = cfg.window_size if cfg.attention == "sliding_window" else 0
+    S = k.shape[1]
+    if window and S > window:
+        # keep the trailing window; ring-buffer alignment: slot = pos % W
+        k, v = k[:, -window:], v[:, -window:]
+        S0 = positions[0, 0] + (positions.shape[1] - window)
+        roll = jnp.mod(S0, window)
+        k = jnp.roll(k, roll, axis=1)
+        v = jnp.roll(v, roll, axis=1)
+    k = shard(k.astype(cfg.compute_dtype), "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v.astype(cfg.compute_dtype), "batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": k, "v": v}
+
+
+def _cache_init_pos(cfg, pos: int, batch: int, max_len: int):
+    mixer, _ = block_kinds(cfg, pos)
+    if mixer == "attn":
+        return L.attn_cache_init(cfg, batch, max_len)
+    return Mb.mamba_cache_init(cfg, batch)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Stacked decode cache: {posP: cache stacked over groups}."""
+    period = cfg.attn_period or 1
+    G = n_groups(cfg)
+    out = {}
+    for p in range(period):
+        one = _cache_init_pos(cfg, p, batch, max_len)
+        out[f"pos{p}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape).copy(), one)
+    return out
+
+
+def cache_specs(cfg):
+    """Logical-axis spec tree matching init_cache output."""
+    period = cfg.attn_period or 1
+    out = {}
+    for p in range(period):
+        mixer, _ = block_kinds(cfg, p)
+        if mixer == "attn":
+            one = {"k": ("none", "cache_batch", "kv_seq", "kv_heads", "head_dim"),
+                   "v": ("none", "cache_batch", "kv_seq", "kv_heads", "head_dim")}
+        else:
+            one = {"conv": ("none", "cache_batch", "none", "ssm_inner"),
+                   "ssm": ("none", "cache_batch", "ssm_inner", "ssm_state")}
+        out[f"pos{p}"] = one
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg, h, positions, mode: str, cache=None, cur_index=None):
+    """h: [B, S, d] embeddings.  Returns (h_out, new_cache, aux_loss).
+
+    mode: "train" (no cache emitted), "prefill" (cache emitted),
+    "decode" (cache consumed & updated; S == 1).
+    """
+    period = cfg.attn_period or 1
+    emit_cache = mode in ("prefill", "decode")
+
+    def group_body(carry, xs):
+        h, aux = carry
+        gparams, gcache = xs
+        new_caches = {}
+        for p in range(period):
+            pc = None if gcache is None else gcache[f"pos{p}"]
+            h, ncache, a = _apply_block(gparams[f"pos{p}"], cfg, p, h,
+                                        positions, mode, pc, cur_index)
+            if emit_cache:
+                new_caches[f"pos{p}"] = ncache
+            aux = aux + a
+        return (h, aux), (new_caches if emit_cache else None)
+
+    body = group_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(group_body)
+
+    if cache is None:
+        def body2(carry, gparams):
+            return body(carry, (gparams, None))
+        (h, aux), caches = jax.lax.scan(body2, (h, jnp.float32(0)),
+                                        params["blocks"])
+    else:
+        (h, aux), caches = jax.lax.scan(body, (h, jnp.float32(0)),
+                                        (params["blocks"], cache))
+    return h, caches, aux
+
+
+# ---------------------------------------------------------------------------
+# public model surface (used by api.Model)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg, batch):
+    """Build input embeddings from a batch dict (handles VLM prefix)."""
+    tokens = batch["tokens"]
+    h = L.embed_tokens(params["embeddings"], cfg, tokens)
+    if cfg.n_patches and "patches" in batch:
+        proj = params["modality_proj"].astype(cfg.compute_dtype)
+        pre = batch["patches"].astype(cfg.compute_dtype) @ proj
+        pre = shard(pre, "batch", "seq", "embed")
+        h = jnp.concatenate([pre, h], axis=1)
+    return h
+
+
+def train_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    h = embed_inputs(params, cfg, batch)
+    S = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, _, aux = forward(params, cfg, h, positions, "train")
+    if cfg.n_patches and "patches" in batch:
+        h = h[:, batch["patches"].shape[1]:]
+    loss = L.chunked_lm_loss(params["embeddings"], cfg, h, batch["labels"],
+                             batch.get("mask"))
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux / max(1, cfg.n_layers)
+    return loss, {"lm_loss": loss, "aux_loss": aux}
+
+
+def prefill(params, cfg, batch):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    h = embed_inputs(params, cfg, batch)
+    S = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, cache, _ = forward(params, cfg, h, positions, "prefill")
+    logits = L.logits_fn(params["embeddings"], cfg, h[:, -1])
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens, cur_index):
+    """tokens: [B, 1]; cur_index: scalar int32 (tokens already in cache)."""
+    h = L.embed_tokens(params["embeddings"], cfg, tokens)
+    positions = None  # decode positions derived from cur_index inside attn
+    h, cache, _ = forward(params, cfg, h, positions, "decode", cache, cur_index)
+    logits = L.logits_fn(params["embeddings"], cfg, h[:, -1])
+    return logits, cache

@@ -1,0 +1,202 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv feature extractor is a STUB per the brief:
+``input_specs()`` supplies precomputed frame embeddings [B, F, frontend_dim];
+this module implements the transformer encoder + causal decoder with
+cross-attention, teacher-forced training and cached decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard
+
+FRONTEND_DIM = 128
+
+CROSS_SPECS = {
+    "wq": ("fsdp", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "fsdp"),
+    "norm": ("embed",),
+}
+
+
+def init_params(rng, cfg):
+    ks = jax.random.split(rng, 6)
+    G_enc, G_dec = cfg.n_encoder_layers, cfg.n_layers
+    dt = cfg.params_dtype
+
+    def stack(key, n, initfn):
+        return jax.vmap(lambda r: initfn(r)[0])(jax.random.split(key, n))
+
+    def enc_block(r):
+        k1, k2 = jax.random.split(r)
+        pa, _ = L.init_attention(k1, cfg)
+        pf, _ = L.init_ffn(k2, cfg)
+        return {"attn": pa, "ffn": pf}, None
+
+    def dec_block(r):
+        k1, k2, k3 = jax.random.split(r, 3)
+        pa, _ = L.init_attention(k1, cfg)
+        pc, _ = L.init_attention(k2, cfg)
+        pf, _ = L.init_ffn(k3, cfg)
+        return {"self": pa, "cross": pc, "ffn": pf}, None
+
+    emb, _ = L.init_embeddings(ks[0], cfg)
+    params = {
+        "embeddings": emb,
+        "enc_proj": L.dense_init(ks[1], (FRONTEND_DIM, cfg.d_model), dt),
+        "enc_blocks": stack(ks[2], G_enc, enc_block),
+        "dec_blocks": stack(ks[3], G_dec, dec_block),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    return params, param_specs(cfg)
+
+
+def param_specs(cfg):
+    lift = lambda tree: jax.tree.map(
+        lambda s: ("none",) + tuple(s), tree,
+        is_leaf=lambda s: isinstance(s, tuple) and all(
+            isinstance(e, (str, type(None))) for e in s))
+    specs = {
+        "embeddings": dict(L.EMB_SPECS),
+        "enc_proj": ("none", "embed"),
+        "enc_blocks": lift({"attn": dict(L.ATTN_SPECS), "ffn": dict(L.FFN_SPECS)}),
+        "dec_blocks": lift({"self": dict(L.ATTN_SPECS),
+                            "cross": dict(CROSS_SPECS),
+                            "ffn": dict(L.FFN_SPECS)}),
+        "enc_norm": ("embed",),
+    }
+    if cfg.tie_embeddings:
+        del specs["embeddings"]["unembed"]
+    return specs
+
+
+def encode(params, cfg, frames):
+    """frames: [B, F, FRONTEND_DIM] -> [B, F, d]."""
+    B, F, _ = frames.shape
+    h = frames.astype(cfg.compute_dtype) @ params["enc_proj"].astype(cfg.compute_dtype)
+    h = shard(h, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def body(h, bp):
+        out, _ = L.attn_forward(bp["attn"], cfg, h, positions, causal=False)
+        h = h + out
+        h = h + L.ffn_forward(bp["ffn"], cfg, h)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attn(bp, cfg, x, ck, cv):
+    """x: [B, T, d]; ck/cv: [B, F, Hkv, hd] (pre-projected encoder K/V)."""
+    B, T, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.resolved_head_dim
+    h = L.rms_norm(x, bp["norm"], cfg.norm_eps)
+    q = (h @ bp["wq"].astype(h.dtype)).reshape(B, T, hq, hd)
+    out = L.attention_ref(q, ck, cv, causal=False)
+    out = out.reshape(B, T, -1) @ bp["wo"].astype(h.dtype)
+    return shard(out, "batch", "seq", "embed")
+
+
+def _cross_kv(bp, cfg, enc):
+    B, F, _ = enc.shape
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = (enc @ bp["wk"].astype(enc.dtype)).reshape(B, F, hkv, hd)
+    v = (enc @ bp["wv"].astype(enc.dtype)).reshape(B, F, hkv, hd)
+    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return k, v
+
+
+def decoder_forward(params, cfg, tokens, enc, mode, cache=None, cur_index=None):
+    """tokens: [B, T]; enc: [B, F, d] or None (decode w/ cached cross-KV)."""
+    B, T = tokens.shape
+    h = L.embed_tokens(params["embeddings"], cfg, tokens)
+    if mode == "decode":
+        positions = None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(carry, xs):
+        h = carry
+        bp, lcache = xs
+        if mode == "decode":
+            out, new_self = L.attn_decode(bp["self"], cfg, h, lcache["self"],
+                                          cur_index)
+            ck, cv = lcache["cross_k"], lcache["cross_v"]
+        else:
+            out, kv = L.attn_forward(bp["self"], cfg, h, positions)
+            pad = max(0, cfg.max_decoder_len - T)
+            padded = [jnp.pad(t.astype(cfg.compute_dtype),
+                              ((0, 0), (0, pad), (0, 0), (0, 0)))[:, :cfg.max_decoder_len]
+                      for t in kv]
+            new_self = {"k": padded[0], "v": padded[1]}
+            ck, cv = _cross_kv(bp["cross"], cfg, enc)
+        h = h + out
+        h = h + _cross_attn(bp["cross"], cfg, h, ck, cv)
+        h = h + L.ffn_forward(bp["ffn"], cfg, h)
+        new_cache = {"self": new_self, "cross_k": ck, "cross_v": cv}
+        return h, new_cache
+
+    if cache is None:
+        if mode == "train":
+            def body_t(hh, bp):
+                hh, _ = body(hh, (bp, None))
+                return hh, None
+            h, caches = jax.lax.scan(body_t, h, params["dec_blocks"])
+        else:
+            h, caches = jax.lax.scan(lambda hh, bp: body(hh, (bp, None)),
+                                     h, params["dec_blocks"])
+    else:
+        h, caches = jax.lax.scan(body, h, (params["dec_blocks"], cache))
+    return h, caches
+
+
+def train_loss(params, cfg, batch):
+    enc = encode(params, cfg, batch["frames"])
+    h, _ = decoder_forward(params, cfg, batch["tokens"], enc, "train")
+    loss = L.chunked_lm_loss(params["embeddings"], cfg, h, batch["labels"],
+                             batch.get("mask"))
+    return loss, {"lm_loss": loss}
+
+
+def prefill(params, cfg, batch):
+    """Encode frames + run decoder over the prompt; emit decode cache."""
+    enc = encode(params, cfg, batch["frames"])
+    h, caches = decoder_forward(params, cfg, batch["tokens"], enc, "prefill")
+    logits = L.logits_fn(params["embeddings"], cfg, h[:, -1])
+    # convert prefill self-attn K/V (full prompt) into fixed decode cache
+    return logits, caches
+
+
+def decode_step(params, cfg, cache, tokens, cur_index):
+    h, caches = decoder_forward(params, cfg, tokens, None, "decode",
+                                cache=cache, cur_index=cur_index)
+    logits = L.logits_fn(params["embeddings"], cfg, h[:, -1])
+    return logits, caches
+
+
+def init_cache(cfg, batch: int, enc_len: int, dec_len: int):
+    """Decode cache: per decoder layer, self KV ring + cross KV over frames."""
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.compute_dtype
+    G = cfg.n_layers
+    one = {
+        "self": {"k": jnp.zeros((batch, dec_len, hkv, hd), dt),
+                 "v": jnp.zeros((batch, dec_len, hkv, hd), dt)},
+        "cross_k": jnp.zeros((batch, enc_len, hkv, hd), dt),
+        "cross_v": jnp.zeros((batch, enc_len, hkv, hd), dt),
+    }
+    return jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, x.dtype), one)
+
+
+def cache_specs(cfg):
+    kv = ("none", "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    return {"self": {"k": kv, "v": kv}, "cross_k": kv, "cross_v": kv}

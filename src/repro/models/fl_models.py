@@ -1,0 +1,128 @@
+"""The paper's own model families: multinomial logistic regression (MCLR)
+and an LSTM sentiment classifier — used by the FedSAE reproduction
+experiments (FEMNIST / MNIST / Synthetic(1,1) / Sent140).
+
+Pure-functional; every model exposes ``init(rng)``, ``loss(params, batch)``
+and ``accuracy(params, batch)``, which is the interface the federated round
+consumes (the big architectures wrap their train_loss into the same shape).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# MCLR — the paper's convex model (7,850 params on MNIST)
+# ---------------------------------------------------------------------------
+
+
+def mclr_init(rng, n_features: int, n_classes: int):
+    kw, _ = jax.random.split(rng)
+    return {"w": jax.random.normal(kw, (n_features, n_classes)) * 0.01,
+            "b": jnp.zeros((n_classes,))}
+
+
+def mclr_logits(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def mclr_loss(params, batch):
+    logits = mclr_logits(params, batch["x"])
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    mask = batch.get("mask", jnp.ones_like(nll))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def mclr_accuracy(params, batch):
+    pred = jnp.argmax(mclr_logits(params, batch["x"]), axis=-1)
+    mask = batch.get("mask", jnp.ones(pred.shape))
+    return ((pred == batch["y"]) * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# LSTM — the paper's Sent140 model
+# ---------------------------------------------------------------------------
+
+
+def lstm_init(rng, vocab: int, embed: int = 32, hidden: int = 64,
+              n_classes: int = 2):
+    ks = jax.random.split(rng, 4)
+    s = lambda *sh: jax.random.normal(ks[0], sh) * (sh[0] ** -0.5)
+    return {
+        "emb": jax.random.normal(ks[0], (vocab, embed)) * 0.1,
+        "wx": jax.random.normal(ks[1], (embed, 4 * hidden)) * embed ** -0.5,
+        "wh": jax.random.normal(ks[2], (hidden, 4 * hidden)) * hidden ** -0.5,
+        "b": jnp.zeros((4 * hidden,)),
+        "w_out": jax.random.normal(ks[3], (hidden, n_classes)) * hidden ** -0.5,
+        "b_out": jnp.zeros((n_classes,)),
+    }
+
+
+def lstm_logits(params, tokens):
+    """tokens: [B, S] int32 -> [B, n_classes]."""
+    B, S = tokens.shape
+    hidden = params["wh"].shape[0]
+    emb = params["emb"][tokens]  # [B, S, E]
+
+    def cell(carry, x_t):
+        h, c = carry
+        z = x_t @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = (jnp.zeros((B, hidden)), jnp.zeros((B, hidden)))
+    (h, _), _ = jax.lax.scan(cell, h0, emb.swapaxes(0, 1))
+    return h @ params["w_out"] + params["b_out"]
+
+
+def lstm_loss(params, batch):
+    logits = lstm_logits(params, batch["x"].astype(jnp.int32))
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    mask = batch.get("mask", jnp.ones_like(nll))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def lstm_accuracy(params, batch):
+    pred = jnp.argmax(lstm_logits(params, batch["x"].astype(jnp.int32)), -1)
+    mask = batch.get("mask", jnp.ones(pred.shape))
+    return ((pred == batch["y"]) * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# uniform FL-model facade
+# ---------------------------------------------------------------------------
+
+
+class FLModel:
+    """What core.federated consumes: init/loss/accuracy triple."""
+
+    def __init__(self, init, loss, accuracy):
+        self.init = init
+        self.loss = loss
+        self.accuracy = accuracy
+
+
+def make_mclr(n_features: int, n_classes: int) -> FLModel:
+    return FLModel(
+        init=lambda rng: mclr_init(rng, n_features, n_classes),
+        loss=mclr_loss,
+        accuracy=mclr_accuracy,
+    )
+
+
+def make_lstm(vocab: int, n_classes: int = 2, embed: int = 32,
+              hidden: int = 64) -> FLModel:
+    return FLModel(
+        init=lambda rng: lstm_init(rng, vocab, embed, hidden, n_classes),
+        loss=lstm_loss,
+        accuracy=lstm_accuracy,
+    )

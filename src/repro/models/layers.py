@@ -1,0 +1,370 @@
+"""Shared neural building blocks (pure-functional, sharding-annotated).
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the param
+pytree with tuples of *logical* axis names (see repro.sharding.rules).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def zeros_init(rng, shape, dtype, scale=None):
+    del rng, scale
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, hd]; positions: [B, S] (absolute)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (reference path — chunked, flash-style memory behaviour)
+# ---------------------------------------------------------------------------
+
+
+def _attn_one_chunk(q, k, v, q_pos, k_valid, causal, window):
+    """q: [B, qc, Hq, hd]; k/v: [B, T, Hkv, hd]; q_pos: [B, qc];
+    k_valid: [B, T] bool (False = padded/unwritten cache slot)."""
+    B, qc, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, qc, Hkv, G, hd)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores *= hd ** -0.5
+    k_pos = jnp.arange(T)[None, None, None, None, :]  # [1,1,1,1,T]
+    qp = q_pos[:, None, None, :, None]                # [B,1,1,qc,1]
+    mask = k_valid[:, None, None, None, :]
+    if causal:
+        mask = mask & (k_pos <= qp)
+    if window:
+        mask = mask & (k_pos > qp - window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, qc, Hq, hd)
+
+
+def attention_ref(q, k, v, *, causal: bool, window: int = 0,
+                  q_offset=0, k_valid=None, q_chunk: int = 512):
+    """Chunked multi-head attention with GQA, causal & sliding-window masks.
+
+    q: [B, S, Hq, hd]; k/v: [B, T, Hkv, hd].  ``q_offset`` is the absolute
+    position of q[0] (scalar or [B]).  Memory is O(S/qc * qc * T) per chunk.
+    """
+    B, S, _, _ = q.shape
+    q_offset = jnp.asarray(q_offset)
+    if q_offset.ndim == 0:
+        q_offset = jnp.full((B,), q_offset)
+    if k_valid is None:
+        k_valid = jnp.ones((B, k.shape[1]), dtype=bool)
+    positions = q_offset[:, None] + jnp.arange(S)[None, :]
+    if S <= q_chunk:
+        return _attn_one_chunk(q, k, v, positions, k_valid, causal, window
+                               ).astype(q.dtype)
+
+    n_chunks = -(-S // q_chunk)
+    pad = n_chunks * q_chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)))
+    qs = q.reshape(B, n_chunks, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+    ps = positions.reshape(B, n_chunks, q_chunk).swapaxes(0, 1)
+
+    def body(args):
+        qc_, pc_ = args
+        return _attn_one_chunk(qc_, k, v, pc_, k_valid, causal, window)
+
+    out = jax.lax.map(body, (qs, ps))              # [nc, B, qc, Hq, hd]
+    out = out.swapaxes(0, 1).reshape(B, n_chunks * q_chunk, *q.shape[2:])
+    return out[:, :S].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+ATTN_SPECS = {
+    "wq": ("fsdp", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "fsdp"),
+    "norm": ("embed",),
+}
+
+
+def init_attention(rng, cfg):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.params_dtype
+    ks = jax.random.split(rng, 5)
+    params = {
+        "wq": dense_init(ks[0], (d, hq * hd), dt),
+        "wk": dense_init(ks[1], (d, hkv * hd), dt),
+        "wv": dense_init(ks[2], (d, hkv * hd), dt),
+        "wo": dense_init(ks[3], (hq * hd, d), dt, scale=(hq * hd) ** -0.5),
+        "norm": jnp.ones((d,), dt),
+    }
+    return params, dict(ATTN_SPECS)
+
+
+def _qkv(params, cfg, x, positions):
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    # constrain the flat projection to the weight's output sharding so GSPMD
+    # reshards the (tiny) activation at the reshape instead of all-gathering
+    # the projection weights (matters for the decode2d serving layout)
+    q = shard(h @ params["wq"].astype(h.dtype), "batch", "seq", "heads")
+    q = q.reshape(B, S, hq, hd)
+    k = (h @ params["wk"].astype(h.dtype)).reshape(B, S, hkv, hd)
+    v = (h @ params["wv"].astype(h.dtype)).reshape(B, S, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def attn_forward(params, cfg, x, positions, *, window: Optional[int] = None,
+                 causal: bool = True):
+    """Full-sequence (train/prefill) self-attention. Returns (out, (k, v))."""
+    window = cfg.window_size if (window is None and cfg.attention == "sliding_window") \
+        else (window or 0)
+    if not causal:
+        window = 0
+    q, k, v = _qkv(params, cfg, x, positions)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = attention_ref(q, k, v, causal=causal, window=window,
+                            q_offset=positions[:, 0])
+    out = out.reshape(*x.shape[:2], -1)
+    out = out @ params["wo"].astype(out.dtype)
+    return shard(out, "batch", "seq", "embed"), (k, v)
+
+
+def attn_decode(params, cfg, x, cache, cur_index):
+    """Single-token decode. cache: dict(k=[B,W,Hkv,hd], v=..., pos scalar int32
+    tracking total tokens seen). For sliding-window archs W == window (ring
+    buffer); otherwise W == max context."""
+    B = x.shape[0]
+    window = cfg.window_size if cfg.attention == "sliding_window" else 0
+    positions = jnp.broadcast_to(cur_index[None, None], (B, 1)).astype(jnp.int32)
+    q, k, v = _qkv(params, cfg, x, positions)
+    W = cache["k"].shape[1]
+    slot = jnp.mod(cur_index, W) if window else jnp.minimum(cur_index, W - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    ck = shard(ck, "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    cv = shard(cv, "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    # align q with the cache's batch sharding (decode2d replicates activation
+    # batch but keeps the cache batch-sharded; without this constraint GSPMD
+    # all-gathers the whole KV cache instead of slicing q)
+    q = shard(q, "cache_batch", None, None, None)
+    n_seen = cur_index + 1
+    kpos = jnp.arange(W)[None, :]
+    valid = jnp.broadcast_to(kpos < n_seen, (B, W))
+    # Ring buffer: every live slot is inside the window by construction, so we
+    # disable positional masking and rely on slot validity alone.
+    out = attention_ref(q, ck, cv, causal=False, window=0,
+                        q_offset=positions[:, 0], k_valid=valid)
+    # match wo's contraction-dim sharding (heads -> model[,data]) so the
+    # output projection partial-sums instead of all-gathering wo
+    flat = shard(out.reshape(B, 1, -1), "batch", "seq", "heads")
+    out = flat @ params["wo"].astype(x.dtype)
+    return shard(out, "batch", "seq", "embed"), {"k": ck, "v": cv}
+
+
+def attn_cache_init(cfg, batch: int, max_len: int):
+    window = cfg.window_size if cfg.attention == "sliding_window" else 0
+    W = min(window, max_len) if window else max_len
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.compute_dtype
+    return {"k": jnp.zeros((batch, W, hkv, hd), dt),
+            "v": jnp.zeros((batch, W, hkv, hd), dt)}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+
+FFN_SPECS = {
+    "w_gate": ("fsdp", "ff"),
+    "w_up": ("fsdp", "ff"),
+    "w_down": ("ff", "fsdp"),
+    "norm": ("embed",),
+}
+
+
+def init_ffn(rng, cfg, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.params_dtype
+    ks = jax.random.split(rng, 3)
+    params = {
+        "w_gate": dense_init(ks[0], (d, f), dt),
+        "w_up": dense_init(ks[1], (d, f), dt),
+        "w_down": dense_init(ks[2], (f, d), dt, scale=f ** -0.5),
+        "norm": jnp.ones((d,), dt),
+    }
+    return params, dict(FFN_SPECS)
+
+
+def ffn_forward(params, cfg, x):
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    g = h @ params["w_gate"].astype(h.dtype)
+    u = h @ params["w_up"].astype(h.dtype)
+    g = shard(g, "batch", "seq", "ff")
+    u = shard(u, "batch", "seq", "ff")
+    out = (jax.nn.silu(g) * u) @ params["w_down"].astype(h.dtype)
+    return shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+EMB_SPECS = {
+    "tok": ("fsdp", "embed"),
+    "unembed": ("fsdp", "vocab"),
+    "final_norm": ("embed",),
+}
+
+
+def init_embeddings(rng, cfg):
+    dt = cfg.params_dtype
+    ks = jax.random.split(rng, 3)
+    params = {
+        "tok": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, scale=1.0),
+        "unembed": dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    specs = dict(EMB_SPECS)
+    if cfg.tie_embeddings:
+        del params["unembed"], specs["unembed"]
+    return params, specs
+
+
+def embed_tokens(params, cfg, tokens):
+    out = params["tok"].astype(cfg.compute_dtype)[tokens]
+    return shard(out, "batch", "seq", "embed")
+
+
+def _unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["tok"].T.astype(cfg.compute_dtype)
+    return params["unembed"].astype(cfg.compute_dtype)
+
+
+def logits_fn(params, cfg, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ _unembed_matrix(params, cfg)
+    if logits.ndim == 3:
+        return shard(logits, "batch", "seq", "vocab")
+    return shard(logits, "batch", "vocab")
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Numerically stable CE in f32; labels: int ids; mask: [.., S] bool."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1)
+    return loss.mean()
+
+
+def chunked_lm_loss(params, cfg, h, labels, mask=None, chunk: int = 1024,
+                    use_fused: bool = False):
+    """Cross-entropy over big vocab without materializing [B, S, V].
+
+    Scans over sequence chunks; per chunk computes logits + CE.  ``use_fused``
+    switches the per-chunk CE to the Pallas fused kernel (§Perf).
+    """
+    B, S, _ = h.shape
+    if mask is None:
+        mask = jnp.ones((B, S), dtype=bool)
+    n_chunks = max(1, S // chunk)
+    if S % chunk:
+        n_chunks = 1
+        chunk = S
+    hs = h.reshape(B, n_chunks, chunk, -1).swapaxes(0, 1)
+    ls = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    ms = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hc, lc, mc = xs
+        hc = rms_norm(hc, params["final_norm"], cfg.norm_eps)
+        if use_fused:
+            from repro.kernels import ops as kops
+            losses = kops.fused_softmax_xent(
+                hc.reshape(-1, hc.shape[-1]), _unembed_matrix(params, cfg),
+                lc.reshape(-1))
+            losses = losses.reshape(lc.shape)
+        else:
+            logits = hc @ _unembed_matrix(params, cfg)
+            logits = shard(logits, "batch", "seq", "vocab")
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            losses = lse - gold
+        losses = losses * mc
+        return (carry[0] + losses.sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,202 @@
+"""Mamba-1 selective-state-space mixer (falcon-mamba / jamba hybrid).
+
+TPU adaptation (DESIGN.md §3): the recurrence never materializes the full
+[B, S, d_inner, N] state tensor.  Training/prefill uses a *chunked* scan —
+``lax.scan`` over sequence chunks, ``associative_scan`` within a chunk — so
+peak state memory is [B, Q, d_inner, N] for chunk size Q.  Decode keeps a
+constant [B, d_inner, N] state (+ a [B, d_inner, k-1] conv ring), which is
+what makes long_500k decode O(1) in context length.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding import shard
+
+CHUNK = 256
+
+
+MAMBA_SPECS = {
+    "in_proj": ("fsdp", "ssm_inner"),
+    "conv_w": ("none", "ssm_inner"),
+    "conv_b": ("ssm_inner",),
+    "x_proj": ("ssm_inner", "none"),
+    "dt_proj": ("none", "ssm_inner"),
+    "dt_bias": ("ssm_inner",),
+    "A_log": ("ssm_inner", "ssm_state"),
+    "D": ("ssm_inner",),
+    "out_proj": ("ssm_inner", "fsdp"),
+    "norm": ("embed",),
+}
+
+
+def init_mamba(rng, cfg):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, K = cfg.resolved_dt_rank, cfg.ssm_conv
+    dt = cfg.params_dtype
+    ks = jax.random.split(rng, 7)
+    params = {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (K, di), dt, scale=K ** -0.5),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * N), dt),
+        "dt_proj": dense_init(ks[3], (dtr, di), dt, scale=dtr ** -0.5),
+        "dt_bias": jnp.zeros((di,), dt),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                          (di, N)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dt, scale=di ** -0.5),
+        "norm": jnp.ones((d,), dt),
+    }
+    return params, dict(MAMBA_SPECS)
+
+
+def _ssm_pieces(params, cfg, xz):
+    """xz: [B, S, di] post-conv activations -> (dt, A, B, C) raw pieces."""
+    N, dtr = cfg.ssm_state, cfg.resolved_dt_rank
+    proj = xz @ params["x_proj"].astype(xz.dtype)       # [B,S,dtr+2N]
+    dt_lr, Bmat, Cmat = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_lr @ params["dt_proj"].astype(xz.dtype)
+        + params["dt_bias"].astype(xz.dtype)).astype(jnp.float32)  # [B,S,di]
+    A = -jnp.exp(params["A_log"])                        # [di, N]
+    return dt, A, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+
+
+def _ssm_inputs(params, cfg, xz):
+    """xz: [B, S, di] post-conv activations -> (dA, dBx, C) pieces.
+
+    dA stays f32 (cumulative products are precision-critical); dBx/C can be
+    stored in bf16 (additive terms) — halves the dominant HBM tensors
+    (§Perf hillclimb 3)."""
+    idt = jnp.dtype(cfg.ssm_input_dtype)
+    dt, A, Bmat, Cmat = _ssm_pieces(params, cfg, xz)
+    dA = jnp.exp(dt[..., None] * A)                      # [B,S,di,N]
+    dBx = ((dt * xz.astype(jnp.float32))[..., None] *
+           Bmat[..., None, :]).astype(idt)               # [B,S,di,N]
+    return dA, dBx, Cmat.astype(idt)
+
+
+def _chunk_scan(dA, dBx, h0):
+    """Associative scan within one chunk. dA/dBx: [B,Q,di,N]; h0: [B,di,N]."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        # keep each element's dtype through the levels: a stays f32
+        # (precision-critical products), b may be bf16 (halves the HBM
+        # traffic of every scan level — §Perf hillclimb 3)
+        return a1 * a2, (a2 * b1 + b2).astype(b1.dtype)
+
+    a_cum, h_local = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = a_cum * h0[:, None] + h_local.astype(jnp.float32)  # [B,Q,di,N]
+    return h, h[:, -1]
+
+
+def selective_scan(params, cfg, xz, h0=None, chunk: int = 0):
+    """xz: [B, S, di] -> (y [B, S, di], h_final [B, di, N])."""
+    chunk = chunk or cfg.ssm_chunk
+    B, S, di = xz.shape
+    N = cfg.ssm_state
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    if cfg.use_pallas and S >= chunk:
+        from repro.kernels import ops as kops
+        dt, A, Bmat, Cmat = _ssm_pieces(params, cfg, xz)
+        y, hT = kops.selective_scan(dt, A, Bmat, Cmat,
+                                    xz.astype(jnp.float32), h0)
+        y = y + params["D"] * xz.astype(jnp.float32)
+        return y.astype(xz.dtype), hT
+
+    if cfg.ssm_scan == "sequential" and S > 1:
+        # kernel-equivalent data movement (what the Pallas kernel does on
+        # TPU): strictly sequential over time, O(B*d*N) live state, no
+        # [B,S,d,N] materialization.  Used by the §Perf memory hillclimb.
+        dt, A, Bmat, Cmat = _ssm_pieces(params, cfg, xz)
+
+        def step(h, inp):
+            dt_t, b_t, c_t, x_t = inp
+            dA_t = jnp.exp(dt_t[..., None] * A)
+            h = dA_t * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+            return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+        hT, ys = jax.lax.scan(
+            step, h0.astype(jnp.float32),
+            (dt.swapaxes(0, 1), Bmat.swapaxes(0, 1), Cmat.swapaxes(0, 1),
+             xz.astype(jnp.float32).swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1) + params["D"] * xz.astype(jnp.float32)
+        return y.astype(xz.dtype), hT
+
+    chunk = min(chunk, S)
+    n_chunks = max(1, -(-S // chunk))
+    pad = n_chunks * chunk - S
+    xzp = jnp.pad(xz, ((0, 0), (0, pad), (0, 0))) if pad else xz
+    dA, dBx, Cmat = _ssm_inputs(params, cfg, xzp)
+    if pad:
+        # padded steps must be identity transitions (dA=1, dBx=0) or they
+        # corrupt the final state h_T (dt(0) = softplus(bias) != 0)
+        valid = (jnp.arange(n_chunks * chunk) < S)[None, :, None, None]
+        dA = jnp.where(valid, dA, 1.0)
+        dBx = jnp.where(valid, dBx, jnp.zeros((), dBx.dtype))
+    dA = shard(dA, "batch", "seq", "ssm_inner", "ssm_state")
+    dBx = shard(dBx, "batch", "seq", "ssm_inner", "ssm_state")
+
+    def body(h, xs):
+        dA_c, dBx_c, C_c = xs
+        h_all, h_next = _chunk_scan(dA_c, dBx_c, h)
+        y_c = jnp.einsum("bqdn,bqn->bqd", h_all, C_c.astype(h_all.dtype))
+        return h_next, y_c
+
+    reshape = lambda t: t.reshape(B, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+    hT, ys = jax.lax.scan(body, h0, (reshape(dA), reshape(dBx), reshape(Cmat)))
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * chunk, di)[:, :S]
+    y = y + params["D"] * xzp[:, :S].astype(jnp.float32)
+    return y.astype(xz.dtype), hT
+
+
+def _causal_conv(params, cfg, x, conv_state=None):
+    """Depthwise causal conv1d. x: [B, S, di]."""
+    K = cfg.ssm_conv
+    w = params["conv_w"].astype(x.dtype)                 # [K, di]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return out + params["conv_b"].astype(x.dtype), new_state
+
+
+def mamba_forward(params, cfg, x, positions=None, *, cache=None):
+    """Full-sequence mixer. Returns (out, new_cache)."""
+    del positions
+    B, S, _ = x.shape
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    xz = h @ params["in_proj"].astype(h.dtype)           # [B,S,2di]
+    xpart, z = jnp.split(xz, 2, axis=-1)
+    xpart = shard(xpart, "batch", "seq", "ssm_inner")
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(params, cfg, xpart, conv_state)
+    xc = jax.nn.silu(xc)
+    h0 = None if cache is None else cache["ssm"]
+    y, hT = selective_scan(params, cfg, xc, h0)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(x.dtype)
+    out = shard(out, "batch", "seq", "embed")
+    new_cache = {"conv": new_conv.astype(cfg.compute_dtype), "ssm": hT}
+    return out, new_cache
+
+
+def mamba_decode(params, cfg, x, cache, cur_index):
+    """Single-token decode with constant state. x: [B, 1, d]."""
+    del cur_index
+    return mamba_forward(params, cfg, x, cache=cache)
+
+
+def mamba_cache_init(cfg, batch: int, max_len: int = 0):
+    del max_len
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {"conv": jnp.zeros((batch, K - 1, di), cfg.compute_dtype),
+            "ssm": jnp.zeros((batch, di, N), jnp.float32)}

@@ -1,0 +1,201 @@
+"""Expert-parallel Mixture-of-Experts FFN.
+
+TPU-native design (DESIGN.md §6): activations are TP-replicated between
+blocks, so each model shard owns E/M experts and serves them from its local
+copy of the tokens — dispatch needs **no all-to-all**; the only collective is
+the output combine (an all-reduce over the `model` axis), i.e. the same
+collective footprint as a dense row-parallel FFN.
+
+Implementation notes:
+  * routing/sort is computed replicated (cheap: int sort of S*k per row);
+  * dispatch is k sequential batched scatter-adds  (no [T*k, d] transient);
+  * combine is k sequential batched gathers weighted by the gates;
+  * the expert shard axis M is a *physical* leading axis sharded over
+    `model`, so GSPMD keeps every scatter/gather local to its shard and the
+    final sum over M lowers to one all-reduce.
+  * capacity per (row, expert) C = ceil(S*k/E * capacity_factor); overflow
+    tokens are dropped (standard capacity-based MoE semantics).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding import shard
+from repro.sharding.rules import _abstract_mesh, current_rules
+
+
+def model_shard_count() -> int:
+    """Static size of the mesh axes backing the `experts` logical axis."""
+    mesh = _abstract_mesh()
+    if mesh is None:
+        return 1
+    n = 1
+    for ax in current_rules().mesh_axes("experts"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n
+
+
+MOE_SPECS = {
+    "router": ("embed", "none"),
+    "w_gate": ("experts", "fsdp", "expert_ff"),
+    "w_up": ("experts", "fsdp", "expert_ff"),
+    "w_down": ("experts", "expert_ff", "fsdp"),
+    "norm": ("embed",),
+}
+
+
+def init_moe(rng, cfg, d_ff=None):
+    d, f, E = cfg.d_model, d_ff or cfg.d_ff, cfg.n_experts
+    dt = cfg.params_dtype
+    ks = jax.random.split(rng, 4)
+    params = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), dt),
+        "w_up": dense_init(ks[2], (E, d, f), dt),
+        "w_down": dense_init(ks[3], (E, f, d), dt, scale=f ** -0.5),
+        "norm": jnp.ones((d,), dt),
+    }
+    return params, dict(MOE_SPECS)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _dispatch(xc, dest_all, C_tot, k):
+    """Scatter tokens into per-expert-shard buffers.
+
+    xc: [B, S, d]; dest_all: [M, B, S*k] -> buf [M, B, C_tot+1, d]."""
+    M, B, Sk = dest_all.shape
+    d = xc.shape[-1]
+    tok_ids = jnp.arange(Sk) // k
+    buf = jnp.zeros((M, B, C_tot + 1, d), xc.dtype)
+    buf = shard(buf, "experts", "batch", None, None)
+
+    def scatter_row(bufrow, dest_row, xrow):
+        return bufrow.at[dest_row].add(xrow[tok_ids])
+
+    scatter_b = jax.vmap(scatter_row, in_axes=(0, 0, 0))      # over B
+    scatter_mb = jax.vmap(scatter_b, in_axes=(0, 0, None))    # over M
+    return scatter_mb(buf, dest_all, xc)
+
+
+def _dispatch_fwd(xc, dest_all, C_tot, k):
+    return _dispatch(xc, dest_all, C_tot, k), dest_all
+
+
+def _dispatch_bwd(C_tot, k, dest_all, dbuf):
+    M, B, Sk = dest_all.shape
+    S = Sk // k
+
+    def gather_row(dbufrow, dest_row):
+        return dbufrow[dest_row]                       # [S*k, d]
+
+    dxr = jax.vmap(jax.vmap(gather_row))(dbuf, dest_all)  # [M, B, S*k, d]
+    dxr = shard(dxr, "experts", "batch", None, None)
+    dxc_m = dxr.reshape(M, B, S, k, -1).sum(3)             # local k-reduce
+    dxc_m = shard(dxc_m, "experts", "batch", None, None)
+    dxc = dxc_m.sum(0)                                     # psum over model
+    return dxc.astype(dbuf.dtype), None
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+def moe_capacity(cfg, seq_len: int) -> int:
+    per_expert = seq_len * cfg.experts_per_token / cfg.n_experts
+    return max(1, int(math.ceil(per_expert * cfg.capacity_factor)))
+
+
+def moe_forward(params, cfg, x, d_ff=None):
+    """x: [B, S, d] -> [B, S, d].  Aux: router load-balance loss (returned)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    M = model_shard_count()
+    if E % M:
+        M = 1  # fall back to replicated experts if the mesh doesn't divide
+    El = E // M
+    C = moe_capacity(cfg, S)
+    C_tot = El * C
+    cdt = cfg.compute_dtype
+
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    logits = (h.astype(jnp.float32) @ params["router"])       # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, k)                  # [B, S, k]
+    gates = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch-style) ----
+    me = probs.mean(axis=(0, 1))                               # [E]
+    ce = jax.nn.one_hot(eidx[..., 0], E).mean(axis=(0, 1))
+    aux_loss = E * jnp.sum(me * ce)
+
+    # ---- assignment bookkeeping (replicated, int-only) ----
+    eflat = eidx.reshape(B, S * k)                             # [B, S*k]
+    order = jnp.argsort(eflat, axis=-1, stable=True)
+    inv_order = jnp.argsort(order, axis=-1)
+    sorted_e = jnp.take_along_axis(eflat, order, axis=-1)
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(eflat)   # [B, E]
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    pos_sorted = jnp.arange(S * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1)                             # [B, S*k]
+    keep_sorted = pos_sorted < C
+    # destination slot within the owning shard's buffer, sorted order
+    slot_sorted = (sorted_e % El) * C + jnp.minimum(pos_sorted, C - 1)
+    owner_sorted = sorted_e // El                              # [B, S*k]
+    # back to unsorted (token-major) order: assignment j of token t at t*k+j
+    slot = jnp.take_along_axis(slot_sorted, inv_order, axis=-1)
+    owner = jnp.take_along_axis(owner_sorted, inv_order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv_order, axis=-1)
+
+    m_ids = jnp.arange(M)                                      # [M]
+    # dest[m, b, j]: slot if shard m owns assignment j else overflow slot C_tot
+    dest = jnp.where((owner[None] == m_ids[:, None, None]) & keep[None],
+                     slot[None], C_tot)                        # [M, B, S*k]
+    dest = dest.reshape(M, B, S, k)
+
+    # ---- dispatch: ONE batched scatter-add into [M, B, C_tot+1, d] ----
+    # NB: both M and B must be *vmapped batching dims* of the scatter (not
+    # explicit index arrays) or GSPMD cannot prove per-shard locality and
+    # falls back to replicate + all-reduce of the whole dispatch buffer
+    # (measured: 18.9 TB of AR per MoE layer on kimi-k2 — see EXPERIMENTS
+    # §Perf hillclimb 2).  The custom VJP reduces cotangents over k locally
+    # *before* the cross-shard psum (otherwise XLA all-reduces the expanded
+    # [B, S*k, d] tensor — 8x the wire bytes).
+    xc = x.astype(cdt)
+    dest_all = dest.reshape(M, B, S * k)          # token-major (t*k + j)
+    buf = _dispatch(xc, dest_all, C_tot, k)
+    buf = shard(buf, "experts", "batch", None, None)
+    ebuf = buf[:, :, :C_tot].reshape(M, B, El, C, d)
+    ebuf = shard(ebuf, "experts", "batch", None, None, None)
+
+    # ---- expert computation (local to each shard) ----
+    wg = params["w_gate"].reshape(M, El, d, -1).astype(cdt)
+    wu = params["w_up"].reshape(M, El, d, -1).astype(cdt)
+    wd = params["w_down"].reshape(M, El, -1, d).astype(cdt)
+    g = jnp.einsum("mbecd,medf->mbecf", ebuf, wg)
+    u = jnp.einsum("mbecd,medf->mbecf", ebuf, wu)
+    o = jnp.einsum("mbecf,mefd->mbecd", jax.nn.silu(g) * u, wd)
+    o = o.reshape(M, B, C_tot, d)
+    o = jnp.concatenate([o, jnp.zeros((M, B, 1, d), o.dtype)], axis=2)
+    o = shard(o, "experts", "batch", None, None)
+
+    # ---- combine: ONE batched gather over all S*k assignments, weighted
+    # sum over k locally per expert shard, then a single psum over M per
+    # layer (k separate gathers/sums lower as k all-reduces of [B,S,d] in
+    # both fwd and bwd — 8x the wire bytes on kimi-k2) ----
+    def gather_row(orow, idx_row):
+        # orow: [C_tot+1, d]; idx_row: [S*k] -> [S*k, d]
+        return orow[idx_row]
+
+    gall = jax.vmap(jax.vmap(gather_row))(o, dest_all)   # [M, B, S*k, d]
+    gall = shard(gall, "experts", "batch", None, None)
+    acc = (gall.reshape(M, B, S, k, d).astype(jnp.float32)
+           * gates[None, ..., None]).sum(3)              # [M, B, S, d]
+    acc = shard(acc, "experts", "batch", None, None)
+    out = acc.sum(0)                             # one all-reduce over model
+    out = shard(out.astype(x.dtype), "batch", "seq", "embed")
+    return out, aux_loss

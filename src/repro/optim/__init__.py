@@ -1,0 +1,1 @@
+from repro.optim.optimizers import adamw, sgd  # noqa: F401

@@ -1,0 +1,94 @@
+"""Optimizers from scratch (no optax in the environment).
+
+Each optimizer is a (init, update) pair:
+    state = init(params)
+    new_params, new_state = update(grads, state, params)
+Plain SGD is the paper's local-training optimizer (FedAvg/FedSAE clients run
+mini-batch SGD); AdamW is provided for the centralized training driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
+        grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(jnp.zeros_like, params),
+                    "step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g,
+                              state["mu"], grads)
+            new_params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+            return new_params, {"mu": mu, "step": state["step"] + 1}
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new_params, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, grad_clip: float = 1.0,
+          warmup_steps: int = 0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        sched = jnp.minimum(1.0, step / max(1, warmup_steps)) if warmup_steps \
+            else 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** step), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** step), v)
+
+        def upd(p, mh_, vh_):
+            delta = mh_ / (jnp.sqrt(vh_) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * sched * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mh, vh)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)

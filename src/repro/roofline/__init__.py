@@ -1,0 +1,2 @@
+from repro.roofline.hlo import HloCost, analyze_hlo  # noqa: F401
+from repro.roofline.analysis import RooflineReport, roofline_terms  # noqa: F401

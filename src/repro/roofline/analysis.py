@@ -1,0 +1,95 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs  / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes  / HBM_bw               (per chip)
+    collective term = wire_bytes / ICI link bw          (per chip)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+All inputs are per-device (post-SPMD HLO), so no further division by chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline.hlo import HloCost, analyze_hlo
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float = 0.0       # 6*N*D (dense) / 6*N_active*D (MoE)
+    useful_ratio: float = 0.0      # model_flops / (chips * HLO_flops)
+    bytes_per_device: float = 0.0  # from memory_analysis
+    notes: str = ""
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.flops:.3e} | {self.bytes_accessed:.3e} | "
+                f"{self.collective_bytes:.3e} | "
+                f"{self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} | "
+                f"{self.t_collective*1e3:.2f} | {self.bottleneck} | "
+                f"{self.useful_ratio:.2f} | {self.bytes_per_device/2**30:.2f} |")
+
+
+def roofline_terms(hlo_text: str, n_devices: int, *, arch: str = "",
+                   shape: str = "", mesh: str = "",
+                   model_flops: float = 0.0,
+                   bytes_per_device: float = 0.0) -> RooflineReport:
+    cost = analyze_hlo(hlo_text, n_devices)
+    t_c = cost.flops / PEAK_FLOPS
+    t_m = cost.bytes_accessed / HBM_BW
+    t_x = cost.collective_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    useful = 0.0
+    if model_flops and cost.flops:
+        useful = model_flops / (n_devices * cost.flops)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh,
+        flops=cost.flops, bytes_accessed=cost.bytes_accessed,
+        collective_bytes=cost.collective_bytes,
+        collective_breakdown=cost.collective_breakdown,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=useful, bytes_per_device=bytes_per_device)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D with N = active params (MoE: routed active only)."""
+    from repro.models.api import build_model, abstract_params
+    import jax
+    model = build_model(cfg)
+    aparams = abstract_params(model)
+    total = sum(x.size for x in jax.tree.leaves(aparams))
+    if cfg.n_experts:
+        # subtract inactive expert params
+        period = cfg.attn_period or 1
+        moe_positions = sum(1 for p in range(period) if cfg.is_moe_layer(p))
+        n_moe_layers = (cfg.n_layers // period) * moe_positions
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        inactive = n_moe_layers * (cfg.n_experts - cfg.experts_per_token) \
+            * per_expert
+        total = total - inactive
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * total * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * total * tokens
+    # decode: one token per sequence
+    return 2.0 * total * shape.global_batch

@@ -1,0 +1,51 @@
+"""Debug: top collectives / byte contributors of a compiled HLO dump.
+
+  PYTHONPATH=src python -m repro.roofline.debug path/to/dump.hlo.txt
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+from repro.roofline import hlo as H
+
+
+def top_collectives(text: str, n_devices: int = 256, k: int = 15):
+    an = H._Analyzer(text, n_devices)
+
+    entries = []
+
+    def walk(comp, mult=1.0, seen=()):
+        if comp in seen:
+            return
+        for op in an.ops.get(comp, {}).values():
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in H.COLLECTIVE_OPS and not op.opcode.endswith("-done"):
+                import dataclasses
+                wire = H._collective_wire_bytes(
+                    dataclasses.replace(op, opcode=base), an.ops[comp],
+                    n_devices)
+                entries.append((wire * mult, base, op.shape[:70], comp[:40],
+                                mult))
+            elif op.opcode == "while":
+                mb = re.search(r"body=\{?%?([\w.\-]+)", op.rest)
+                mc = re.search(r"condition=\{?%?([\w.\-]+)", op.rest)
+                trips = an.trip_count(mc.group(1)) if mc else 1.0
+                if mb:
+                    walk(mb.group(1), mult * trips, seen + (comp,))
+            elif op.opcode in ("fusion", "call", "conditional"):
+                m = H._CALLED_RE.search(op.rest)
+                if m:
+                    walk(m.group(1), mult, seen + (comp,))
+
+    walk("__entry__")
+    entries.sort(reverse=True)
+    total = sum(e[0] for e in entries)
+    print(f"total wire bytes/device: {total:.3e}")
+    for wire, kind, shape, comp, mult in entries[:k]:
+        print(f"  {wire:.3e} {kind:20s} x{mult:<6.0f} {shape} [{comp}]")
+
+
+if __name__ == "__main__":
+    top_collectives(open(sys.argv[1]).read(),
+                    int(sys.argv[2]) if len(sys.argv) > 2 else 256)

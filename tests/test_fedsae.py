@@ -1,0 +1,203 @@
+"""FedSAE algorithm unit + property tests (hypothesis) — the system's
+invariants per Alg. 2/3 and Eqs. 3-7."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prediction as pred
+from repro.core.heterogeneity import HeterogeneitySim
+from repro.core.selection import (ValueTracker, select_active, select_random,
+                                  selection_probs)
+
+pairs = st.tuples(
+    st.floats(0.5, 20.0),            # L
+    st.floats(0.1, 20.0),            # H - L gap
+    st.floats(0.0, 40.0),            # E_true
+)
+
+
+# ---------------------------------------------------------------------------
+# task-pair semantics
+# ---------------------------------------------------------------------------
+
+
+@given(pairs)
+@settings(max_examples=200, deadline=None)
+def test_outcome_partition(p):
+    L, gap, E = p
+    H = L + gap
+    out = pred.outcomes(np.array([L]), np.array([H]), np.array([E]))[0]
+    if E >= H:
+        assert out == pred.COMPLETED_H
+    elif E >= L:
+        assert out == pred.COMPLETED_L
+    else:
+        assert out == pred.DROPPED
+
+
+@given(pairs)
+@settings(max_examples=200, deadline=None)
+def test_uploaded_epochs_never_exceed_true_capacity(p):
+    L, gap, E = p
+    H = L + gap
+    up = pred.uploaded_epochs(np.array([L]), np.array([H]), np.array([E]))[0]
+    assert up <= E + 1e-9          # a client can never upload more work
+    assert up in (0.0, L, H) or np.isclose(up, L) or np.isclose(up, H)
+
+
+# ---------------------------------------------------------------------------
+# FedSAE-Ira (AIMD, Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+@given(pairs, st.floats(1.0, 20.0))
+@settings(max_examples=200, deadline=None)
+def test_ira_invariants(p, U):
+    L, gap, E = p
+    H = L + gap
+    L2, H2, out = pred.ira_predict(np.array([L]), np.array([H]),
+                                   np.array([E]), U=U)
+    assert L2[0] <= H2[0] + 1e-9                    # pair stays ordered
+    assert L2[0] > 0 and H2[0] > 0
+    if out[0] == pred.COMPLETED_H:                  # additive increase
+        assert np.isclose(L2[0], L + U / L)
+        # H grows by U/H, possibly lifted by the L<=H ordering clamp
+        assert np.isclose(H2[0], max(H + U / H, L2[0] + 1e-3))
+    elif out[0] == pred.DROPPED:                    # multiplicative decrease
+        assert np.isclose(L2[0], max(L / 2, 0.25))
+        assert H2[0] <= max(H / 2, L2[0] + 1e-3) + 1e-9
+
+
+@given(st.floats(1.0, 30.0), st.floats(1.0, 20.0))
+@settings(max_examples=100, deadline=None)
+def test_ira_increment_inverse_to_workload(E0, U):
+    """Bigger current workload -> smaller increment (the 'inverse ratio')."""
+    small, big = E0, E0 * 2
+    inc_small = U / small
+    inc_big = U / big
+    assert inc_big < inc_small
+
+
+def test_ira_converges_to_stationary_capacity():
+    """With constant true capacity, Ira's pair oscillates around it."""
+    L, H = np.array([1.0]), np.array([2.0])
+    cap = np.array([8.0])
+    hist = []
+    for _ in range(200):
+        L, H, _ = pred.ira_predict(L, H, cap, U=10.0)
+        hist.append((L[0], H[0]))
+    tail = np.array(hist[-50:])
+    # the easy task stays below-but-near capacity, the pair brackets ~cap
+    assert tail[:, 0].mean() < 8.0 + 2.0
+    assert tail[:, 1].max() >= 8.0   # H probes above capacity
+    assert tail[:, 0].min() >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# FedSAE-Fassa (EMA + two-stage growth, Eqs. 4-5)
+# ---------------------------------------------------------------------------
+
+
+@given(pairs, st.floats(0.5, 0.99), st.floats(0.0, 30.0))
+@settings(max_examples=200, deadline=None)
+def test_fassa_threshold_is_ema(p, alpha, theta0):
+    _, _, E = p
+    th = pred.fassa_threshold(np.array([theta0]), np.array([E]), alpha)
+    assert np.isclose(th[0], alpha * theta0 + (1 - alpha) * E)
+    lo, hi = min(theta0, E), max(theta0, E)
+    assert lo - 1e-9 <= th[0] <= hi + 1e-9          # EMA stays bracketed
+
+
+@given(pairs, st.floats(0.0, 30.0))
+@settings(max_examples=200, deadline=None)
+def test_fassa_invariants(p, theta):
+    L, gap, E = p
+    H = L + gap
+    g1, g2 = 3.0, 1.0
+    L2, H2, out = pred.fassa_predict(np.array([L]), np.array([H]),
+                                     np.array([E]), np.array([theta]),
+                                     g1, g2)
+    assert L2[0] <= H2[0] + 1e-9
+    assert L2[0] > 0
+    if out[0] == pred.COMPLETED_H:
+        # start stage grows at least as fast as arise stage
+        assert L2[0] - L <= g1 + 1e-9
+        assert L2[0] - L >= g2 - 1e-9
+    if out[0] == pred.DROPPED:
+        assert np.isclose(L2[0], max(L / 2, 0.25))
+
+
+def test_fassa_start_stage_grows_faster_than_arise():
+    L, H = np.array([2.0]), np.array([4.0])
+    E = np.array([50.0])  # always completes
+    # start stage: theta far above the pair
+    Ls, Hs, _ = pred.fassa_predict(L, H, E, np.array([30.0]), 3.0, 1.0)
+    # arise stage: theta below the pair
+    La, Ha, _ = pred.fassa_predict(L, H, E, np.array([1.0]), 3.0, 1.0)
+    assert Ls[0] - L[0] > La[0] - L[0]
+
+
+# ---------------------------------------------------------------------------
+# heterogeneity simulator
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneity_matches_paper_distribution():
+    sim = HeterogeneitySim(5000, seed=3)
+    assert (sim.mu >= 5.0).all() and (sim.mu < 10.0).all()
+    assert (sim.sigma >= 0.25 * sim.mu - 1e-9).all()
+    assert (sim.sigma < 0.5 * sim.mu).all()
+    draws = np.stack([sim.sample_round() for _ in range(50)])
+    assert (draws >= 0).all()
+    # per-client mean over rounds tracks mu
+    err = np.abs(draws.mean(0) - sim.mu) / sim.mu
+    assert np.median(err) < 0.25
+
+
+def test_same_seed_same_workloads():
+    a = HeterogeneitySim(100, seed=5).sample_round()
+    b = HeterogeneitySim(100, seed=5).sample_round()
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# AL selection (Eqs. 6-7)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0.0, 100.0), min_size=3, max_size=50),
+       st.floats(0.001, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_selection_probs_valid_distribution(vals, beta):
+    p = selection_probs(np.array(vals), beta)
+    assert np.isclose(p.sum(), 1.0)
+    assert (p >= 0).all()
+    # monotone: higher value -> no smaller probability
+    order = np.argsort(vals)
+    assert (np.diff(p[order]) >= -1e-12).all()
+
+
+def test_active_selection_prefers_high_value_clients():
+    rng = np.random.default_rng(0)
+    v = np.zeros(100)
+    v[:10] = 500.0  # 10 high-value clients
+    counts = np.zeros(100)
+    for _ in range(200):
+        ids = select_active(rng, v, 10, beta=0.05)
+        counts[ids] += 1
+    assert counts[:10].mean() > 5 * counts[10:].mean()
+
+
+def test_value_tracker_updates_only_participants():
+    t = ValueTracker(5, np.array([4.0, 4.0, 4.0, 4.0, 4.0]))
+    before = t.v.copy()
+    t.update([1, 3], [10.0, 20.0])
+    assert t.v[0] == before[0] and t.v[2] == before[2] and t.v[4] == before[4]
+    assert np.isclose(t.v[1], 2 * 10.0)   # sqrt(4)*loss
+    assert np.isclose(t.v[3], 2 * 20.0)
+
+
+def test_random_selection_no_replacement():
+    rng = np.random.default_rng(1)
+    ids = select_random(rng, 50, 20)
+    assert len(set(ids.tolist())) == 20

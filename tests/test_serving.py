@@ -1,0 +1,99 @@
+"""Serving-path correctness: ring-buffer sliding-window decode must agree
+with full-cache decode while the window isn't exceeded, and prefill+decode
+must agree with teacher-forced full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models.api import build_model
+
+
+def test_ring_buffer_matches_full_cache_within_window():
+    cfg_full = get_config("llama3.2-3b", smoke=True).replace(attention="full")
+    cfg_ring = cfg_full.replace(attention="sliding_window", window_size=32)
+    params, _ = L.init_attention(jax.random.PRNGKey(0), cfg_full)
+    B, steps = 2, 16   # < window: ring and full must agree exactly
+    rng = np.random.default_rng(0)
+
+    def run(cfg):
+        cache = L.attn_cache_init(cfg, B, max_len=64)
+        outs = []
+        for t in range(steps):
+            x = jnp.asarray(rng_seq[t], jnp.float32)
+            out, cache = L.attn_decode(params, cfg, x, cache, jnp.int32(t))
+            outs.append(out)
+        return jnp.concatenate(outs, axis=1)
+
+    rng_seq = [rng.normal(size=(B, 1, cfg_full.d_model)).astype(np.float32)
+               for _ in range(steps)]
+    full = run(cfg_full)
+    ring = run(cfg_ring)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(ring, np.float32),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ring_buffer_evicts_beyond_window():
+    """After > window steps, the ring must only attend to the last W keys:
+    feeding garbage early tokens must not affect late outputs."""
+    cfg = get_config("llama3.2-3b", smoke=True).replace(
+        attention="sliding_window", window_size=8)
+    params, _ = L.init_attention(jax.random.PRNGKey(0), cfg)
+    B, steps = 1, 20
+    rng = np.random.default_rng(1)
+    seq = [rng.normal(size=(B, 1, cfg.d_model)).astype(np.float32)
+           for _ in range(steps)]
+
+    def run(first_token):
+        cache = L.attn_cache_init(cfg, B, max_len=64)
+        x0 = first_token
+        outs = []
+        for t in range(steps):
+            x = jnp.asarray(seq[t] if t > 0 else x0, jnp.float32)
+            out, cache = L.attn_decode(params, cfg, x, cache, jnp.int32(t))
+            outs.append(out)
+        return outs
+
+    a = run(seq[0])
+    # different token-0 *content* (scaling is invisible through rms_norm)
+    b = run(rng.normal(size=(B, 1, cfg.d_model)).astype(np.float32))
+    # last output only saw tokens [steps-8, steps): token 0 long evicted
+    np.testing.assert_allclose(np.asarray(a[-1]), np.asarray(b[-1]),
+                               atol=1e-4, rtol=1e-4)
+    # but an early output (t=3) did see token 0 and must differ
+    assert not np.allclose(np.asarray(a[3]), np.asarray(b[3]), atol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "falcon-mamba-7b",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Greedy step-by-step decode logits == full-sequence forward logits."""
+    cfg = get_config(arch, smoke=True)
+    if cfg.attention == "sliding_window":
+        cfg = cfg.replace(window_size=64)
+    if cfg.n_experts:
+        # capacity drops differ between full prefill and one-token decode
+        # (a known capacity-MoE serving semantic); lift the cap so routing
+        # is drop-free and the comparison is exact
+        cfg = cfg.replace(capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+
+    # full prefill over S tokens -> logits for next position
+    logits_full, _ = model.prefill(params, {"tokens": toks})
+
+    # incremental: decode tokens one by one from an empty cache
+    cache = model.init_cache(B, S + 4)
+    logits = None
+    for t in range(S):
+        logits, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                          jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               atol=2e-2, rtol=2e-2)
