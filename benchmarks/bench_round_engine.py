@@ -1,0 +1,247 @@
+"""Rounds/sec: the seed round path vs the device-resident RoundEngine.
+
+Seed path (pre-refactor `FedSAEServer.run_round` + `core.rounds`): restack
+the selected cohort on the host and re-upload O(K * max_n * feature_dim)
+padded samples every round (~37 MB/round at paper-scale MNIST with K=30),
+then run local SGD over a per-round epoch permutation obtained by a vmapped
+argsort (as expensive on CPU as the restack itself).
+
+Engine paths (`RoundEngine.make_packed_round`): the packed federation is
+uploaded once and the cohort is gathered on device — only [K] ids/budgets
+cross the host edge.  Two legs are timed so the two wins are attributable
+separately:
+
+  engine+shuffle  seed-exact minibatch rule (bit-identical results to the
+                  seed path) — isolates the data-movement win alone
+  engine+iid      `sampling="iid"` with-replacement minibatches (standard
+                  SGD, opt-in via ServerConfig.sampling / --sampling) —
+                  additionally drops the per-round epoch-permutation argsort
+
+Same masked iteration count, same cohorts, same rng discipline in all legs.
+
+  PYTHONPATH=src python benchmarks/bench_round_engine.py --scale reduced
+  PYTHONPATH=src python benchmarks/bench_round_engine.py --scale both
+
+Results are merged into BENCH_round_engine.json at the repo root, one entry
+per scale, so the perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import get_aggregator
+from repro.core.engine import RoundEngine
+from repro.data.federated import make_mnist_like
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_round_engine.json")
+
+# K=30 selected per round as in the paper's MNIST runs.  The reduced scale
+# keeps the paper's max client size (400 samples) so the data path carries a
+# representative share of the round; batch size is scaled with the client
+# size to hold the local-SGD budget at the same fraction of an epoch.
+SCALES = {
+    "reduced": dict(n_clients=100, total=12000, dim=64, max_size=400, k=30,
+                    batch_size=40),
+    "paper": dict(n_clients=1000, total=69035, dim=784, max_size=400, k=30,
+                  batch_size=40),
+}
+
+
+def _seed_round_fn(model, lr, batch_size, max_iters):
+    """Verbatim copy of the pre-refactor core/rounds.py round (the baseline
+    this benchmark tracks; tests/test_engine.py proves make_round_fn still
+    reproduces it bit-for-bit)."""
+    B = batch_size
+
+    def local_train(global_params, xk, yk, maskk, nk, iters, key):
+        M = xk.shape[0]
+        perm = jnp.argsort(jax.random.uniform(key, (M,)) + (1.0 - maskk) * 1e9)
+        nk_safe = jnp.maximum(nk, 1)
+
+        def step(params, i):
+            idx = perm[(i * B + jnp.arange(B)) % nk_safe]
+            batch = {"x": xk[idx], "y": yk[idx],
+                     "mask": maskk[idx] * (jnp.arange(B) < nk_safe)}
+            g = jax.grad(model.loss)(params, batch)
+            active = (i < iters).astype(jnp.float32)
+            params = jax.tree.map(lambda p, gg: p - lr * active * gg,
+                                  params, g)
+            return params, None
+
+        params, _ = jax.lax.scan(step, global_params, jnp.arange(max_iters))
+        final_loss = model.loss(params, {"x": xk, "y": yk, "mask": maskk})
+        return params, final_loss
+
+    @jax.jit
+    def round_fn(global_params, x, y, mask, n, n_iters, rng):
+        keys = jax.random.split(rng, x.shape[0])
+        params_k, losses = jax.vmap(
+            local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+            global_params, x, y, mask, n, n_iters, keys)
+        wk = n.astype(jnp.float32) * (n_iters > 0).astype(jnp.float32)
+        tot = wk.sum()
+        coef = jnp.where(tot > 0, wk / jnp.maximum(tot, 1e-9), 0.0)
+
+        def agg(stacked, g0):
+            mixed = jnp.tensordot(coef.astype(stacked.dtype), stacked, axes=1)
+            return jnp.where(tot > 0, mixed, g0)
+
+        return jax.tree.map(agg, params_k, global_params), losses, tot > 0
+
+    return round_fn
+
+
+def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
+                reps: int = 3):
+    from repro.models.fl_models import make_mclr
+
+    spec = SCALES[scale]
+    ds = make_mnist_like(seed=seed, n_clients=spec["n_clients"],
+                         total=spec["total"], dim=spec["dim"],
+                         max_size=spec["max_size"])
+    model = make_mclr(spec["dim"], ds.n_classes)
+    params = model.init(jax.random.PRNGKey(seed))
+    K = spec["k"]
+    batch_size = spec["batch_size"]
+    max_n = int(ds.sizes.max())
+    max_iters = int(np.ceil(epochs * np.ceil(max_n / batch_size)))
+    sizes = np.asarray(ds.sizes)
+
+    seed_fn = _seed_round_fn(model, 0.03, batch_size, max_iters)
+    engine = RoundEngine(lr=0.03, aggregator=get_aggregator("fedavg"))
+    packed = ds.packed(max_n)
+    packed_fns = {
+        sampling: engine.make_packed_round(model, batch_size, max_iters,
+                                           packed.max_n, sampling=sampling)
+        for sampling in ("shuffle", "iid")}
+
+    sel = np.random.default_rng(seed)
+    cohorts = [sel.choice(ds.n_clients, K, replace=False)
+               for _ in range(rounds)]
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), rounds)
+
+    def budgets(n):
+        return np.minimum(np.round(epochs * np.ceil(n / batch_size)),
+                          max_iters)
+
+    def seed_path_round(p, ids, key):
+        """Pre-refactor dataflow: host restack + per-round upload."""
+        x, y, mask, n = ds.stacked(ids, max_n)
+        p, losses, _ = seed_fn(
+            p, jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
+            jnp.asarray(n, jnp.int32),
+            jnp.asarray(budgets(n), jnp.int32), key)
+        return p, losses
+
+    def engine_round(packed_fn):
+        def round_(p, ids, key):
+            """Device-resident dataflow: ids/budgets cross the host edge."""
+            n = np.minimum(sizes[ids], max_n)
+            p, losses, _ = packed_fn(
+                p, packed.x, packed.y, packed.offsets, packed.lengths,
+                jnp.asarray(ids, jnp.int32),
+                jnp.asarray(budgets(n), jnp.int32), key)
+            return p, losses
+        return round_
+
+    def timed(round_fn):
+        p = jax.tree.map(jnp.copy, params)
+        p, losses = round_fn(p, cohorts[0], keys[0])   # compile warmup
+        jax.block_until_ready(losses)
+        t0 = time.perf_counter()
+        for ids, key in zip(cohorts, keys):
+            p, losses = round_fn(p, ids, key)
+        jax.block_until_ready(losses)
+        dt = time.perf_counter() - t0
+        return rounds / dt, p
+
+    legs = {"seed": seed_path_round,
+            "shuffle": engine_round(packed_fns["shuffle"]),
+            "iid": engine_round(packed_fns["iid"])}
+    # interleave repetitions so machine drift hits every leg equally; report
+    # the median rep per leg (robust to contention spikes either way)
+    samples = {name: [] for name in legs}
+    final_p = {}
+    for _ in range(reps):
+        for name, fn in legs.items():
+            r, final_p[name] = timed(fn)
+            samples[name].append(r)
+    rps = {name: float(np.median(v)) for name, v in samples.items()}
+    seed_rps, shuffle_rps, iid_rps = rps["seed"], rps["shuffle"], rps["iid"]
+    p_seed, p_shuf, p_iid = final_p["seed"], final_p["shuffle"], final_p["iid"]
+    # engine+shuffle is bit-identical to the seed path (same cohorts/rng)
+    for a, b in zip(jax.tree.leaves(p_seed), jax.tree.leaves(p_shuf)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for leaf in jax.tree.leaves(p_iid):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+    itemsize = np.dtype(np.float32).itemsize
+    restack_bytes = K * max_n * (spec["dim"] + 2) * itemsize  # x + y + mask
+    return {
+        "scale": scale,
+        "n_clients": spec["n_clients"],
+        "k_selected": K,
+        "max_n": max_n,
+        "feature_dim": spec["dim"],
+        "batch_size": batch_size,
+        "rounds_timed": rounds,
+        "max_iters": max_iters,
+        "epochs_per_round": epochs,
+        "seed_path": {"sampling": "shuffle", "data": "host restack/upload",
+                      "rounds_per_sec": round(seed_rps, 3)},
+        "engine_shuffle_path": {"sampling": "shuffle",
+                                "data": "device-resident gather",
+                                "rounds_per_sec": round(shuffle_rps, 3)},
+        "engine_path": {"sampling": "iid", "data": "device-resident gather",
+                        "rounds_per_sec": round(iid_rps, 3)},
+        "seed_path_rounds_per_sec": round(seed_rps, 3),
+        "engine_rounds_per_sec": round(iid_rps, 3),
+        "speedup": round(iid_rps / seed_rps, 3),
+        "speedup_data_path_only": round(shuffle_rps / seed_rps, 3),
+        "seed_path_host_bytes_per_round": int(restack_bytes),
+        "engine_host_bytes_per_round": int(2 * K * 4),  # ids + n_iters
+        "backend": jax.default_backend(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", choices=("reduced", "paper", "both"),
+                    default="reduced")
+    ap.add_argument("--rounds", type=int, default=30,
+                    help="timed rounds per path")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="interleaved repetitions per path (best kept)")
+    ap.add_argument("--epochs", type=float, default=0.25,
+                    help="local epochs per client per round (kept small so "
+                         "the round's data path, which this benchmark "
+                         "tracks, is not drowned by local-SGD compute)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    scales = ("reduced", "paper") if args.scale == "both" else (args.scale,)
+    merged = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            merged = json.load(f)
+    for scale in scales:
+        res = bench_scale(scale, args.rounds, args.epochs, reps=args.reps)
+        merged[scale] = res
+        print(f"[{scale}] seed path: {res['seed_path_rounds_per_sec']:.2f} "
+              f"rounds/s   engine: {res['engine_rounds_per_sec']:.2f} "
+              f"rounds/s   speedup: {res['speedup']:.2f}x")
+    with open(args.out, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,13 @@
 # FedSAE: self-adaptive workload prediction + AL client selection.
+from repro.core.aggregation import (  # noqa: F401
+    AGGREGATORS,
+    FedAvg,
+    FedProx,
+    Median,
+    TrimmedMean,
+    get_aggregator,
+)
+from repro.core.engine import RoundEngine  # noqa: F401
 from repro.core.heterogeneity import HeterogeneitySim  # noqa: F401
 from repro.core.prediction import (  # noqa: F401
     COMPLETED_H,
@@ -11,8 +20,11 @@ from repro.core.prediction import (  # noqa: F401
     uploaded_epochs,
 )
 from repro.core.selection import (  # noqa: F401
+    SELECTIONS,
     ValueTracker,
+    get_selection,
     select_active,
+    select_loss_proportional,
     select_random,
     selection_probs,
 )

@@ -1,0 +1,143 @@
+"""Pluggable server-side aggregation for the federated round engine.
+
+Every aggregator is a callable
+
+    aggregator(params_k, global_params, weights) -> new_global_params
+
+where ``params_k`` is the vmapped client-parameter pytree (leading axis K),
+``global_params`` the current global pytree and ``weights`` a ``[K]`` float32
+vector (0 = the client uploaded nothing).  All math runs inside the jitted
+round function, so aggregators must be pure jnp.
+
+Included:
+
+  fedavg        size-weighted mean (McMahan et al.) — the seed behaviour
+  fedprox       same mixing rule, but carries the proximal weight ``prox_mu``
+                that the engine adds to every client's local objective
+                (Li et al., 2020: the aggregation is FedAvg; the variant
+                lives in the local loss)
+  trimmed_mean  coordinate-wise trimmed mean over uploading clients — robust
+                to adversarial / diverged updates (Yin et al., 2018)
+  median        coordinate-wise median (trim band collapsed to the middle)
+
+The robust aggregators are *unweighted* over valid uploads by construction:
+sample-count weighting would let a single large adversarial client dominate,
+which is exactly what trimming is meant to prevent.  Validity (weight > 0)
+is still respected — dropped clients never enter the statistic.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Aggregator = Callable[[Any, Any, jnp.ndarray], Any]
+
+
+class FedAvg:
+    """Size-weighted average; falls back to the old global on an empty round."""
+
+    name = "fedavg"
+    prox_mu = 0.0
+
+    def __call__(self, params_k, global_params, weights):
+        tot = weights.sum()
+        coef = jnp.where(tot > 0, weights / jnp.maximum(tot, 1e-9), 0.0)
+
+        def agg(stacked, g0):
+            mixed = jnp.tensordot(coef.astype(jnp.float32),
+                                  stacked.astype(jnp.float32), axes=1)
+            return jnp.where(tot > 0, mixed,
+                             g0.astype(jnp.float32)).astype(g0.dtype)
+
+        return jax.tree.map(agg, params_k, global_params)
+
+
+class FedProx(FedAvg):
+    """FedAvg mixing + a proximal term mu/2 * ||p - g||^2 in the local loss.
+
+    The engine reads ``prox_mu`` off the aggregator, so selecting this
+    aggregator is all it takes to run FedProx-style local objectives.
+    """
+
+    name = "fedprox"
+
+    def __init__(self, prox_mu: float = 0.1):
+        if prox_mu < 0:
+            raise ValueError(f"prox_mu must be >= 0, got {prox_mu}")
+        self.prox_mu = float(prox_mu)
+
+
+class TrimmedMean:
+    """Coordinate-wise trimmed mean over clients with weight > 0.
+
+    Per coordinate: sort the valid client values, drop ``floor(trim_ratio*m)``
+    from each end (m = number of valid uploads) and average the rest.  Invalid
+    clients are pushed to +inf so they always land past rank m and are never
+    selected.  With no valid uploads the old global is kept.
+    """
+
+    name = "trimmed_mean"
+    prox_mu = 0.0
+
+    def __init__(self, trim_ratio: float = 0.1):
+        if not 0.0 <= trim_ratio < 0.5:
+            raise ValueError(f"trim_ratio must be in [0, 0.5), got {trim_ratio}")
+        self.trim_ratio = trim_ratio
+
+    def _band(self, m):
+        t = jnp.floor(self.trim_ratio * m).astype(jnp.int32)
+        return t, jnp.maximum(m - 2 * t, 1)
+
+    def __call__(self, params_k, global_params, weights):
+        valid = weights > 0
+        m = valid.sum().astype(jnp.int32)
+        K = weights.shape[0]
+        t, keep = self._band(m)
+        rank = jnp.arange(K)
+        sel = (rank >= t) & (rank < m - t)
+
+        def agg(stacked, g0):
+            shape = (-1,) + (1,) * (stacked.ndim - 1)
+            v = jnp.where(valid.reshape(shape),
+                          stacked.astype(jnp.float32), jnp.inf)
+            s = jnp.sort(v, axis=0)
+            # zero the trimmed/invalid ranks *before* summing (0 * inf = nan)
+            s = jnp.where(sel.reshape(shape), s, 0.0)
+            mixed = s.sum(axis=0) / keep.astype(jnp.float32)
+            return jnp.where(m > 0, mixed,
+                             g0.astype(jnp.float32)).astype(g0.dtype)
+
+        return jax.tree.map(agg, params_k, global_params)
+
+
+class Median(TrimmedMean):
+    """Coordinate-wise median: the trim band collapsed onto the middle
+    element (odd m) or middle pair (even m)."""
+
+    name = "median"
+
+    def __init__(self):
+        super().__init__(0.0)
+
+    def _band(self, m):
+        t = jnp.maximum(m - 1, 0) // 2
+        return t, jnp.maximum(m - 2 * t, 1)
+
+
+AGGREGATORS: Dict[str, type] = {
+    "fedavg": FedAvg,
+    "fedprox": FedProx,
+    "trimmed_mean": TrimmedMean,
+    "median": Median,
+}
+
+
+def get_aggregator(name: str, **kwargs) -> Aggregator:
+    try:
+        cls = AGGREGATORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {name!r}; choose from {sorted(AGGREGATORS)}")
+    return cls(**kwargs)

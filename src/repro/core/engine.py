@@ -1,0 +1,259 @@
+"""RoundEngine — the single device-resident substrate executing a federated
+round for every training path in the repo.
+
+One engine owns the three pieces every round needs, so no scenario
+re-implements them (DESIGN.md §3, ISSUE 1):
+
+  * the jitted masked-epoch local-SGD ``lax.scan`` (heterogeneous per-client
+    budgets are not SPMD-able, so every client runs ``max_iters`` slots and
+    updates are masked past ``n_iters_k`` — bit-identical to "client k trains
+    n_iters_k iterations" with uniform control flow);
+  * the vmapped client axis (K selected clients lead every array; on a mesh
+    this axis shards over ``data``);
+  * pluggable aggregation (``repro.core.aggregation``) — who merges, how.
+
+Three round flavours share that substrate:
+
+  make_padded_round   the seed interface: host-stacked padded [K, max_n, ...]
+                      arrays (kept for parity tests and the old-path bench)
+  make_packed_round   device-resident data: the full federation lives on
+                      device as one flat array + per-client offsets/lengths,
+                      uploaded once; the per-round cohort gather happens on
+                      device, so a round moves only O(K) ids host->device
+                      instead of O(K * max_n * feature_dim) padded samples
+  make_stream_round   cross-silo: a pre-batched stream of ``max_steps`` batch
+                      pytrees per silo (repro.core.silo)
+
+Global params are donated to the round function (``donate_argnums=0``) so the
+update happens in place on accelerators; donation is skipped on CPU where XLA
+does not implement it (it would only emit warnings).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import Aggregator, FedAvg
+
+
+class RoundEngine:
+    """Shared executor for federated rounds with pluggable aggregation.
+
+    Parameters
+    ----------
+    lr        : local-SGD learning rate
+    aggregator: callable from repro.core.aggregation (default FedAvg)
+    prox_mu   : proximal weight added to every local objective; defaults to
+                the aggregator's own ``prox_mu`` (FedProx carries it)
+    donate    : donate the global-params argument to the jitted round
+    """
+
+    def __init__(self, lr: float, aggregator: Optional[Aggregator] = None,
+                 prox_mu: Optional[float] = None, donate: bool = True):
+        self.lr = lr
+        self.aggregator = aggregator if aggregator is not None else FedAvg()
+        self.prox_mu = float(prox_mu if prox_mu is not None
+                             else getattr(self.aggregator, "prox_mu", 0.0))
+        self.donate = donate
+
+    # ------------------------------------------------------------------
+    def _donate_argnums(self):
+        if self.donate and jax.default_backend() != "cpu":
+            return (0,)
+        return ()
+
+    def _prox(self, loss, params, global_params):
+        if not self.prox_mu:
+            return loss
+        sq = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+            jax.tree.leaves(params), jax.tree.leaves(global_params)))
+        return loss + 0.5 * self.prox_mu * sq
+
+    # ------------------------------------------------------------------
+    # sample-level local SGD: resample batches from a padded client shard
+    # ------------------------------------------------------------------
+    def _local_sgd(self, model, batch_size: int, max_iters: int,
+                   sampling: str = "shuffle"):
+        """``sampling`` picks the minibatch rule:
+
+        shuffle  the seed semantics — one random epoch permutation per round,
+                 batches walk it modulo n_k, and the reported client loss is
+                 a dedicated post-training pass over the full local shard.
+                 Bit-identical to the pre-refactor round, but the vmapped
+                 argsort costs as much as the whole restack it replaced
+                 (XLA CPU sort is slow).
+        iid      per-iteration uniform minibatches with replacement
+                 (standard SGD).  No sort, and the reported client loss is
+                 the mean minibatch loss over executed iterations (free from
+                 value_and_grad — the same semantic the silo stream round
+                 uses), so the full-shard loss pass is skipped too.  Zero-
+                 budget clients report 0.0; the server never consumes losses
+                 of non-uploaders.
+        """
+        if sampling not in ("shuffle", "iid"):
+            raise ValueError(f"unknown sampling {sampling!r}")
+        lr = self.lr
+        B = batch_size
+
+        def local_train(global_params, xk, yk, maskk, nk, iters, key):
+            M = xk.shape[0]
+            nk_safe = jnp.maximum(nk, 1)
+
+            def sgd_step(params, i, idx, bmask):
+                batch = {"x": xk[idx], "y": yk[idx], "mask": bmask}
+
+                def loss_fn(p):
+                    return self._prox(model.loss(p, batch), p, global_params)
+
+                loss, g = jax.value_and_grad(loss_fn)(params)
+                active = (i < iters).astype(jnp.float32)
+                return jax.tree.map(lambda p, gg: p - lr * active * gg,
+                                    params, g), loss
+
+            if sampling == "shuffle":
+                perm = jnp.argsort(jax.random.uniform(key, (M,))
+                                   + (1.0 - maskk) * 1e9)
+
+                def step(params, i):
+                    idx = perm[(i * B + jnp.arange(B)) % nk_safe]
+                    bmask = maskk[idx] * (jnp.arange(B) < nk_safe)
+                    params, _ = sgd_step(params, i, idx, bmask)
+                    return params, None
+
+                params, _ = jax.lax.scan(step, global_params,
+                                         jnp.arange(max_iters))
+                # seed semantics: post-training loss over the full shard
+                final_loss = model.loss(params,
+                                        {"x": xk, "y": yk, "mask": maskk})
+            else:
+                # one threefry call for the whole round instead of a
+                # fold_in+randint per iteration; idx < nk always lands on a
+                # real sample (both stacked() and the packed gather lay
+                # clients out real-samples-first), so the maskk gather of the
+                # shuffle path is identically 1 and elided
+                idx_all = jax.random.randint(key, (max_iters, B), 0, nk_safe)
+                bmask = (jnp.arange(B) < nk_safe).astype(jnp.float32)
+
+                def step(params, xs):
+                    i, idx = xs
+                    return sgd_step(params, i, idx, bmask)
+
+                params, losses = jax.lax.scan(
+                    step, global_params, (jnp.arange(max_iters), idx_all))
+                # mean minibatch loss over executed iterations (silo-round
+                # semantics): no extra full-shard pass
+                msk = (jnp.arange(max_iters) < iters).astype(jnp.float32)
+                final_loss = (losses * msk).sum() / jnp.maximum(msk.sum(), 1)
+
+            return params, final_loss
+
+        return local_train
+
+    def _finish(self, global_params, params_k, n, n_iters):
+        weights = n.astype(jnp.float32) * (n_iters > 0).astype(jnp.float32)
+        new_global = self.aggregator(params_k, global_params, weights)
+        return new_global, weights.sum() > 0
+
+    # ------------------------------------------------------------------
+    def make_padded_round(self, model, batch_size: int, max_iters: int,
+                          sampling: str = "shuffle") -> Callable:
+        """Seed-interface round over host-stacked padded arrays.
+
+        round_fn(global_params, x, y, mask, n, n_iters, rng) ->
+            (new_global_params, client_losses, uploaded_any)
+          x: [K, max_n, ...] padded client data;  mask: [K, max_n]
+          n: [K] true sample counts;  n_iters: [K] masked local-SGD budget
+        """
+        local_train = self._local_sgd(model, batch_size, max_iters, sampling)
+
+        def round_fn(global_params, x, y, mask, n, n_iters, rng):
+            keys = jax.random.split(rng, x.shape[0])
+            params_k, losses = jax.vmap(
+                local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                global_params, x, y, mask, n, n_iters, keys)
+            new_global, any_up = self._finish(global_params, params_k,
+                                              n, n_iters)
+            return new_global, losses, any_up
+
+        return jax.jit(round_fn, donate_argnums=self._donate_argnums())
+
+    # ------------------------------------------------------------------
+    def make_packed_round(self, model, batch_size: int, max_iters: int,
+                          max_n: int, sampling: str = "shuffle") -> Callable:
+        """Device-resident round: cohort gather from packed client data.
+
+        round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
+                 n_iters, rng) -> (new_global_params, client_losses,
+                 uploaded_any)
+
+        ``flat_x/flat_y/offsets/lengths`` are the once-uploaded packed
+        federation (repro.data.federated.PackedClients); ``ids`` is the [K]
+        cohort.  The [K, max_n, ...] shards are gathered on device.  Padding
+        rows read (clipped) neighbouring clients' samples rather than zeros —
+        they are masked out of every loss and never enter batch sampling, so
+        with ``sampling="shuffle"`` results are bit-identical to the padded
+        path (proved by tests/test_engine.py).
+        """
+        local_train = self._local_sgd(model, batch_size, max_iters, sampling)
+
+        def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
+                     n_iters, rng):
+            total = flat_x.shape[0]
+            offs = offsets[ids]
+            n = jnp.minimum(lengths[ids], max_n)
+            pos = jnp.arange(max_n)
+            idx = jnp.minimum(offs[:, None] + pos[None, :], total - 1)
+            x = flat_x[idx]
+            y = flat_y[idx]
+            mask = (pos[None, :] < n[:, None]).astype(jnp.float32)
+            keys = jax.random.split(rng, ids.shape[0])
+            params_k, losses = jax.vmap(
+                local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                global_params, x, y, mask, n, n_iters, keys)
+            new_global, any_up = self._finish(global_params, params_k,
+                                              n, n_iters)
+            return new_global, losses, any_up
+
+        return jax.jit(round_fn, donate_argnums=self._donate_argnums())
+
+    # ------------------------------------------------------------------
+    def make_stream_round(self, loss_fn: Callable,
+                          max_steps: int) -> Callable:
+        """Cross-silo round over pre-batched per-silo streams.
+
+        round_fn(global_params, batches, n_steps, weights) ->
+            (new_global_params, silo_mean_losses)
+          batches: pytree with leading axes [K, max_steps, ...]
+          n_steps: [K] int32 masked local-step budgets
+          weights: [K] f32 aggregation weights (0 = no upload)
+        """
+        lr = self.lr
+
+        def local_train(global_params, silo_batches, n_steps):
+            def step(params, xs):
+                i, batch = xs
+
+                def obj(p):
+                    return self._prox(loss_fn(p, batch), p, global_params)
+
+                loss, g = jax.value_and_grad(obj)(params)
+                active = (i < n_steps).astype(jnp.float32)
+                params = jax.tree.map(lambda p, gg: p - lr * active
+                                      * gg.astype(p.dtype), params, g)
+                return params, loss
+
+            params, losses = jax.lax.scan(
+                step, global_params, (jnp.arange(max_steps), silo_batches))
+            # mean loss over executed steps only
+            msk = (jnp.arange(max_steps) < n_steps).astype(jnp.float32)
+            mean_loss = (losses * msk).sum() / jnp.maximum(msk.sum(), 1)
+            return params, mean_loss
+
+        def round_fn(global_params, batches, n_steps, weights):
+            params_k, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
+                global_params, batches, n_steps)
+            return self.aggregator(params_k, global_params, weights), losses
+
+        return jax.jit(round_fn, donate_argnums=self._donate_argnums())

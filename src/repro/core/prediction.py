@@ -94,9 +94,15 @@ def fassa_predict(L: np.ndarray, H: np.ndarray, E_true: np.ndarray,
     out = outcomes(L, H, E_true)
     r1, r2 = gamma1, gamma2  # start-stage (fast) / arise-stage (slow)
 
-    # success branch: stage per bound determined by theta
-    L_s = np.where(theta <= L, L + r2,  # whole pair in arise stage
-                   np.where(theta <= H, L + r1, L + r1))
+    # success branch: stage per bound determined by where the EMA threshold
+    # theta sits relative to the pair (three regimes):
+    #   theta <= L      whole pair above the threshold -> both arise (r2)
+    #   L < theta <= H  pair brackets the threshold    -> L start (r1),
+    #                   H arise (r2)
+    #   theta > H       pair fell below the threshold  -> L arise (r2),
+    #                   H start (r1) to catch up
+    L_s = np.where(theta <= L, L + r2,
+                   np.where(theta <= H, L + r1, L + r2))
     H_s = np.where(theta <= L, H + r2,
                    np.where(theta <= H, H + r2, H + r1))
 

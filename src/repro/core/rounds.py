@@ -1,21 +1,20 @@
-"""The jitted federated round: vmapped masked-epoch local SGD + weighted
-FedAvg aggregation (DESIGN.md §3 "clients -> mesh data axis").
+"""Paper-scale federated round — a thin dispatcher onto the shared
+``repro.core.engine.RoundEngine`` (which owns the masked-scan/vmap/aggregate
+machinery for every training path; see DESIGN.md §3 "clients -> mesh data
+axis").
 
-Heterogeneous per-client trip counts are not SPMD-able, so every client runs
-``max_iters`` scan iterations and updates are masked past its budget
-``n_iters_k`` — bit-identical to "client k trains n_iters_k iterations",
-with uniform control flow.  On a TPU mesh the client axis shards over
-``data`` (the K selected clients are the leading vmapped axis).
+Kept as a module so the seed call sites (`make_round_fn`, `make_eval_fn`)
+stay importable; new code should construct a ``RoundEngine`` directly to pick
+aggregation/selection policies.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.sharding import shard
+from repro.core.aggregation import get_aggregator
+from repro.core.engine import RoundEngine
 
 
 def make_round_fn(model, lr: float, batch_size: int, max_iters: int,
@@ -27,54 +26,9 @@ def make_round_fn(model, lr: float, batch_size: int, max_iters: int,
       x: [K, M, ...]  padded client data;  mask: [K, M]
       n: [K] true sample counts;  n_iters: [K] masked local-SGD budget
     """
-    B = batch_size
-
-    def local_train(global_params, xk, yk, maskk, nk, iters, key):
-        M = xk.shape[0]
-        perm = jnp.argsort(jax.random.uniform(key, (M,)) + (1.0 - maskk) * 1e9)
-        nk_safe = jnp.maximum(nk, 1)
-
-        def step(params, i):
-            idx = perm[(i * B + jnp.arange(B)) % nk_safe]
-            batch = {"x": xk[idx], "y": yk[idx],
-                     "mask": maskk[idx] * (jnp.arange(B) < nk_safe)}
-            def loss_fn(p):
-                l = model.loss(p, batch)
-                if prox_mu:
-                    sq = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
-                        jax.tree.leaves(p), jax.tree.leaves(global_params)))
-                    l = l + 0.5 * prox_mu * sq
-                return l
-            g = jax.grad(loss_fn)(params)
-            active = (i < iters).astype(jnp.float32)
-            params = jax.tree.map(lambda p, gg: p - lr * active * gg,
-                                  params, g)
-            return params, None
-
-        params, _ = jax.lax.scan(step, global_params, jnp.arange(max_iters))
-        final_loss = model.loss(params, {"x": xk, "y": yk, "mask": maskk})
-        return params, final_loss
-
-    @jax.jit
-    def round_fn(global_params, x, y, mask, n, n_iters, rng):
-        K = x.shape[0]
-        keys = jax.random.split(rng, K)
-        params_k, losses = jax.vmap(
-            local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
-            global_params, x, y, mask, n, n_iters, keys)
-        uploaded = (n_iters > 0).astype(jnp.float32)
-        wk = n.astype(jnp.float32) * uploaded
-        tot = wk.sum()
-        coef = jnp.where(tot > 0, wk / jnp.maximum(tot, 1e-9), 0.0)
-
-        def agg(stacked, g0):
-            mixed = jnp.tensordot(coef.astype(stacked.dtype), stacked, axes=1)
-            return jnp.where(tot > 0, mixed, g0)
-
-        new_global = jax.tree.map(agg, params_k, global_params)
-        return new_global, losses, tot > 0
-
-    return round_fn
+    engine = RoundEngine(lr=lr, aggregator=get_aggregator("fedavg"),
+                         prox_mu=prox_mu, donate=False)
+    return engine.make_padded_round(model, batch_size, max_iters)
 
 
 def make_eval_fn(model) -> Callable:

@@ -1,10 +1,26 @@
-"""Client selection: random (FedAvg) and Active-Learning (paper Eqs. 6-7).
+"""Client selection strategies, behind a registry the server/engine pulls
+from (ISSUE 1): random (FedAvg), Active-Learning softmax (paper Eqs. 6-7)
+and a loss-proportional variant without the softmax.
 
 AL: training value v_k = sqrt(n_k) * mean_loss_k (refreshed only for
 participants); selection probability p_k = softmax(beta * v)_k; the server
 samples K distinct participants ~ p (Gumbel top-k, without replacement).
+
+Loss-proportional: p_k = v_k / sum(v) directly.  Unlike the softmax it is
+scale-equivariant (doubling every loss leaves the distribution unchanged)
+and needs no beta temperature — useful when loss magnitudes drift over
+training and a fixed beta would saturate the softmax.
+
+Every strategy shares the signature
+
+    strategy(rng, values, n_clients, k, beta=0.01) -> ids [k]
+
+so policies are swappable without touching the server loop; resolve by name
+via ``get_selection``.
 """
 from __future__ import annotations
+
+from typing import Callable, Dict
 
 import numpy as np
 
@@ -39,3 +55,39 @@ def select_active(rng: np.random.Generator, v: np.ndarray, k: int,
 
 def select_random(rng: np.random.Generator, n_clients: int, k: int) -> np.ndarray:
     return rng.choice(n_clients, size=k, replace=False)
+
+
+def select_loss_proportional(rng: np.random.Generator, v: np.ndarray,
+                             k: int) -> np.ndarray:
+    """Sample k distinct clients with p_k proportional to the raw training
+    value (no softmax; Gumbel top-k without replacement)."""
+    v = np.asarray(v, np.float64)
+    p = np.maximum(v, 1e-12)
+    p = p / p.sum()
+    g = rng.gumbel(size=len(p))
+    return np.argsort(-(np.log(p) + g))[:k]
+
+
+# ---------------------------------------------------------------------------
+# registry — uniform signature (rng, values, n_clients, k, beta)
+# ---------------------------------------------------------------------------
+
+SelectionFn = Callable[..., np.ndarray]
+
+SELECTIONS: Dict[str, SelectionFn] = {
+    "random": lambda rng, v, n_clients, k, beta=0.01:
+        select_random(rng, n_clients, k),
+    "active": lambda rng, v, n_clients, k, beta=0.01:
+        select_active(rng, v, k, beta),
+    "loss_proportional": lambda rng, v, n_clients, k, beta=0.01:
+        select_loss_proportional(rng, v, k),
+}
+
+
+def get_selection(name: str) -> SelectionFn:
+    try:
+        return SELECTIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown selection strategy {name!r}; "
+            f"choose from {sorted(SELECTIONS)}")

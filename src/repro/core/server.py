@@ -17,9 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import prediction as pred
+from repro.core.aggregation import get_aggregator
+from repro.core.engine import RoundEngine
 from repro.core.heterogeneity import HeterogeneitySim
-from repro.core.rounds import make_eval_fn, make_round_fn
-from repro.core.selection import ValueTracker, select_active, select_random
+from repro.core.rounds import make_eval_fn
+from repro.core.selection import ValueTracker, get_selection, select_active
 from repro.data.federated import FederatedDataset
 
 
@@ -40,6 +42,12 @@ class ServerConfig:
     al_rounds: int = 0           # use AL selection for the first n rounds
     beta: float = 0.01           # AL softmax scale
     prox_mu: float = 0.1         # FedProx proximal weight
+    aggregator: str = "fedavg"   # fedavg | fedprox | trimmed_mean | median
+    trim_ratio: float = 0.1      # trimmed_mean band (fraction cut per end)
+    selection: str = "random"    # post-AL-phase strategy (core.selection)
+    sampling: str = "shuffle"    # shuffle (seed-exact, default) | iid (the
+                                 # fast path: with-replacement minibatches,
+                                 # no per-round epoch-permutation argsort)
     seed: int = 0
     selection_seed: int = 1234   # fixed across frameworks (paper §IV-A)
     eval_every: int = 1
@@ -61,13 +69,27 @@ class FedSAEServer:
         self.data_rng = jax.random.PRNGKey(cfg.seed)
         self.params = model.init(jax.random.PRNGKey(cfg.seed + 7))
 
-        self.max_n = int(dataset.sizes.max())
+        self.sizes = dataset.sizes          # cached: the property recomputes
+        self.max_n = int(self.sizes.max())
         tau_max = math.ceil(self.max_n / cfg.batch_size)
         budget = max(cfg.h_cap, cfg.fixed_epochs)
         self.max_iters = int(math.ceil(budget * tau_max))
-        self.round_fn = make_round_fn(
-            model, cfg.lr, cfg.batch_size, self.max_iters,
-            prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else 0.0)
+
+        # one-time device upload: rounds gather their cohort on device
+        self.packed = dataset.packed(self.max_n)
+        agg_kwargs = {}
+        if cfg.aggregator == "trimmed_mean":
+            agg_kwargs["trim_ratio"] = cfg.trim_ratio
+        elif cfg.aggregator == "fedprox":
+            agg_kwargs["prox_mu"] = cfg.prox_mu
+        aggregator = get_aggregator(cfg.aggregator, **agg_kwargs)
+        self.engine = RoundEngine(
+            lr=cfg.lr, aggregator=aggregator,
+            prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else None)
+        self.round_fn = self.engine.make_packed_round(
+            model, cfg.batch_size, self.max_iters, self.packed.max_n,
+            sampling=cfg.sampling)
+        self.select_fn = get_selection(cfg.selection)
         self.eval_fn = make_eval_fn(model)
         self.history: Dict[str, List] = {
             "acc": [], "test_loss": [], "train_loss": [], "dropout": [],
@@ -122,18 +144,21 @@ class FedSAEServer:
             ids = select_active(self.sel_rng, self.values.v, cfg.n_selected,
                                 cfg.beta)
         else:
-            ids = select_random(self.sel_rng, self.ds.n_clients,
-                                cfg.n_selected)
+            ids = self.select_fn(self.sel_rng, self.values.v,
+                                 self.ds.n_clients, cfg.n_selected, cfg.beta)
         E_true = E_true_all[ids]
         e_eff, outcome, assigned = self._workloads(ids, E_true)
 
-        x, y, mask, n = self.ds.stacked(ids, self.max_n)
+        # no host restack: only the [K] cohort ids / budgets cross to device;
+        # the packed federation was uploaded once at construction
+        n = np.minimum(self.sizes[ids], self.max_n)
         tau = np.ceil(n / cfg.batch_size)
         n_iters = np.minimum(np.round(e_eff * tau), self.max_iters)
         self.data_rng, sub = jax.random.split(self.data_rng)
         self.params, losses, _ = self.round_fn(
-            self.params, jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
-            jnp.asarray(n, jnp.int32), jnp.asarray(n_iters, jnp.int32), sub)
+            self.params, self.packed.x, self.packed.y, self.packed.offsets,
+            self.packed.lengths, jnp.asarray(ids, jnp.int32),
+            jnp.asarray(n_iters, jnp.int32), sub)
         losses = np.asarray(losses)
 
         uploaders = np.asarray(n_iters) > 0

@@ -9,7 +9,6 @@ arbitrary batch pytrees, and pjit-able on a mesh (silos shard over `data`).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Tuple
 
 import jax
@@ -17,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import prediction as pred
+from repro.core.aggregation import get_aggregator
+from repro.core.engine import RoundEngine
 from repro.core.heterogeneity import HeterogeneitySim
 
 
@@ -27,46 +28,20 @@ def make_silo_round_fn(loss_fn: Callable, lr: float, max_steps: int):
       batches: pytree with leading axes [K, max_steps, ...] (per-silo stream)
       n_steps: [K] int32 masked local-step budgets
       weights: [K] f32 aggregation weights (0 = no upload)
+
+    Thin dispatcher onto the shared RoundEngine (seed-compatible interface).
     """
-
-    def local_train(global_params, silo_batches, n_steps):
-        def step(params, xs):
-            i, batch = xs
-            loss, g = jax.value_and_grad(loss_fn)(params, batch)
-            active = (i < n_steps).astype(jnp.float32)
-            params = jax.tree.map(lambda p, gg: p - lr * active
-                                  * gg.astype(p.dtype), params, g)
-            return params, loss
-
-        params, losses = jax.lax.scan(
-            step, global_params, (jnp.arange(max_steps), silo_batches))
-        # mean loss over executed steps only
-        msk = (jnp.arange(max_steps) < n_steps).astype(jnp.float32)
-        mean_loss = (losses * msk).sum() / jnp.maximum(msk.sum(), 1)
-        return params, mean_loss
-
-    @jax.jit
-    def round_fn(global_params, batches, n_steps, weights):
-        params_k, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
-            global_params, batches, n_steps)
-        tot = weights.sum()
-        coef = jnp.where(tot > 0, weights / jnp.maximum(tot, 1e-9), 0.0)
-
-        def agg(stacked, g0):
-            mixed = jnp.tensordot(coef.astype(jnp.float32),
-                                  stacked.astype(jnp.float32), axes=1)
-            return jnp.where(tot > 0, mixed, g0).astype(g0.dtype)
-
-        return jax.tree.map(agg, params_k, global_params), losses
-
-    return round_fn
+    engine = RoundEngine(lr=lr, aggregator=get_aggregator("fedavg"),
+                         donate=False)
+    return engine.make_stream_round(loss_fn, max_steps)
 
 
 class SiloFedSAE:
     """FedSAE-Ira over K silos training a production model."""
 
     def __init__(self, model, n_silos: int, lr: float = 5e-3,
-                 max_steps: int = 16, U: float = 2.0, seed: int = 0):
+                 max_steps: int = 16, U: float = 2.0, seed: int = 0,
+                 aggregator: str = "fedavg", **agg_kwargs):
         self.model = model
         self.K = n_silos
         self.max_steps = max_steps
@@ -79,7 +54,9 @@ class SiloFedSAE:
         self.H = np.full(n_silos, 2.0)
         self.params = model.init(jax.random.PRNGKey(seed))
         loss_fn = lambda p, b: model.train_loss(p, b)[0]
-        self.round_fn = make_silo_round_fn(loss_fn, lr, max_steps)
+        self.engine = RoundEngine(
+            lr=lr, aggregator=get_aggregator(aggregator, **agg_kwargs))
+        self.round_fn = self.engine.make_stream_round(loss_fn, max_steps)
         self.stats: Dict[str, list] = {"loss": [], "dropout": [],
                                        "uploaded_steps": []}
 

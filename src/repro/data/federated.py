@@ -21,6 +21,23 @@ import numpy as np
 
 
 @dataclasses.dataclass
+class PackedClients:
+    """Device-resident flat federation (ISSUE 1): every client's samples
+    concatenated into one array, addressed by per-client offset/length.
+
+    Uploaded to device once (at server construction); the per-round cohort
+    gather — ``x[offsets[ids, None] + arange(max_n)]`` — runs on device, so a
+    round moves O(K) ids host->device instead of O(K * max_n * feature_dim)
+    restacked padded samples.
+    """
+    x: object         # jnp [total, ...feat]
+    y: object         # jnp [total] int32
+    offsets: object   # jnp [n_clients] int32
+    lengths: object   # jnp [n_clients] int32
+    max_n: int        # cohort shard width; consumed by make_packed_round
+
+
+@dataclasses.dataclass
 class FederatedDataset:
     name: str
     clients_x: List[np.ndarray]
@@ -56,6 +73,25 @@ class FederatedDataset:
             y[j, :n] = self.clients_y[i][:n]
             mask[j, :n] = 1.0
         return x, y, mask, np.minimum(ns, m)
+
+    def packed(self, max_n: Optional[int] = None) -> PackedClients:
+        """One-time device upload of the whole federation (see PackedClients).
+
+        ``max_n`` bounds the per-round cohort shard width (defaults to the
+        largest client), mirroring ``stacked``'s padding width.
+        """
+        import jax.numpy as jnp  # lazy: generators stay importable sans jax
+
+        ns = self.sizes
+        offsets = np.zeros(len(ns), np.int64)
+        np.cumsum(ns[:-1], out=offsets[1:])
+        x = np.concatenate(self.clients_x, axis=0)
+        y = np.concatenate(self.clients_y, axis=0).astype(np.int32)
+        return PackedClients(
+            x=jnp.asarray(x), y=jnp.asarray(y),
+            offsets=jnp.asarray(offsets, jnp.int32),
+            lengths=jnp.asarray(ns, jnp.int32),
+            max_n=int(max_n or ns.max()))
 
 
 def power_law_sizes(rng: np.random.Generator, n_clients: int, total: int,

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -40,7 +39,11 @@ def run_flat(args):
         lr = 0.03 if args.dataset != "synthetic" else 0.01
     cfg = ServerConfig(algo=args.algo, rounds=args.rounds, lr=lr,
                        n_selected=min(10, ds.n_clients),
-                       al_rounds=args.al_rounds, h_cap=24.0)
+                       al_rounds=args.al_rounds, h_cap=24.0,
+                       aggregator=args.aggregator,
+                       trim_ratio=args.trim_ratio,
+                       selection=args.selection,
+                       sampling=args.sampling)
     srv = FedSAEServer(ds, model, cfg,
                        het=HeterogeneitySim(ds.n_clients, seed=cfg.seed))
     hist = srv.run(verbose=True)
@@ -49,11 +52,13 @@ def run_flat(args):
 
 
 def run_silo(args):
-    cfg = jax.tree_util.Partial  # noqa: placeholder to satisfy linters
     from repro.configs import get_config
     acfg = get_config(args.silo_arch, smoke=True)
     model = build_model(acfg)
-    fed = SiloFedSAE(model, args.silos, lr=5e-3, max_steps=args.max_steps)
+    agg_kwargs = ({"trim_ratio": args.trim_ratio}
+                  if args.aggregator == "trimmed_mean" else {})
+    fed = SiloFedSAE(model, args.silos, lr=5e-3, max_steps=args.max_steps,
+                     aggregator=args.aggregator, **agg_kwargs)
     ri = np.random.default_rng(0)
     K, S = args.silos, 64
     sizes = np.asarray(ri.integers(100, 1000, K))
@@ -80,6 +85,18 @@ def main():
                     choices=("fedavg", "fedprox", "ira", "fassa", "oracle"))
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--al-rounds", type=int, default=0)
+    ap.add_argument("--aggregator", default="fedavg",
+                    choices=("fedavg", "fedprox", "trimmed_mean", "median"))
+    ap.add_argument("--trim-ratio", type=float, default=0.1,
+                    help="fraction trimmed per end (trimmed_mean only)")
+    ap.add_argument("--selection", default="random",
+                    choices=("random", "active", "loss_proportional"),
+                    help="cohort selection after the AL warm-up rounds")
+    ap.add_argument("--sampling", default="shuffle",
+                    choices=("shuffle", "iid"),
+                    help="local minibatch rule: shuffle reproduces the seed "
+                         "bit-for-bit; iid is the faster with-replacement "
+                         "path (see BENCH_round_engine.json)")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--silo-arch", default=None)
     ap.add_argument("--silos", type=int, default=4)

@@ -1,20 +1,41 @@
 """Production meshes (defined as functions so importing this module never
-touches jax device state)."""
+touches jax device state) + compat shims spanning old/new JAX.
+
+JAX 0.4.x has neither ``jax.sharding.AxisType`` (explicit-sharding axis
+types) nor ``jax.set_mesh``; both arrived with the explicit-sharding API.
+``_make_mesh`` passes ``axis_types`` only when available, and ``set_mesh``
+falls back to the ambient-mesh context manager (a ``Mesh`` is its own
+context manager on every JAX version we support).
+"""
 from __future__ import annotations
 
 import jax
+
+
+def _make_mesh(shape, axes):
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` where it exists; the mesh's own ambient context
+    manager otherwise.  Use as ``with set_mesh(mesh): ...``."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 v5e pod (256 chips) or 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist locally (tests / smoke runs)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n, 1), ("data", "model"))

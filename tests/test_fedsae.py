@@ -2,6 +2,9 @@
 invariants per Alg. 2/3 and Eqs. 3-7."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import prediction as pred
@@ -130,8 +133,8 @@ def test_fassa_invariants(p, theta):
 def test_fassa_start_stage_grows_faster_than_arise():
     L, H = np.array([2.0]), np.array([4.0])
     E = np.array([50.0])  # always completes
-    # start stage: theta far above the pair
-    Ls, Hs, _ = pred.fassa_predict(L, H, E, np.array([30.0]), 3.0, 1.0)
+    # start stage for L: theta inside the pair (L < theta <= H)
+    Ls, Hs, _ = pred.fassa_predict(L, H, E, np.array([3.0]), 3.0, 1.0)
     # arise stage: theta below the pair
     La, Ha, _ = pred.fassa_predict(L, H, E, np.array([1.0]), 3.0, 1.0)
     assert Ls[0] - L[0] > La[0] - L[0]

@@ -8,7 +8,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, get_shape
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.launch.steps import (lower_step, make_optimizer, opt_state_specs,
                                 shardings_from_specs)
 from repro.models.api import abstract_params, build_model
@@ -19,7 +19,7 @@ def test_shardings_from_specs_structure():
     shapes = {"a": jax.ShapeDtypeStruct((8, 4), jnp.float32),
               "b": {"c": jax.ShapeDtypeStruct((4,), jnp.float32)}}
     specs = {"a": ("batch", "ff"), "b": {"c": ("embed",)}}
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         sh = shardings_from_specs(mesh, shapes, specs)
     assert sh["a"].mesh.shape == mesh.shape
     assert isinstance(sh["b"]["c"].spec, P)
@@ -35,7 +35,7 @@ def test_opt_state_specs_match_structure():
         specs = opt_state_specs(name, model.param_specs())
         # every opt-state leaf has a reachable spec path (no KeyErrors)
         mesh = make_host_mesh()
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             sh = shardings_from_specs(mesh, aopt, specs)
         assert jax.tree_util.tree_structure(sh) == \
             jax.tree_util.tree_structure(aopt)
@@ -51,7 +51,7 @@ def test_lower_step_on_host_mesh(shape_id):
     kind = "train" if shape_id == "train_4k" else "decode"
     shape = ShapeConfig("t", seq_len=64, global_batch=2, kind=kind)
     mesh = make_host_mesh()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered, k = lower_step(model, shape, mesh)
         compiled = lowered.compile()
     assert k == kind

@@ -1,0 +1,63 @@
+"""Plain (non-hypothesis) prediction tests: the Fassa success-branch stage
+split across all three theta regimes (ISSUE 1 satellite — the seed shipped a
+dead branch whose arms were identical)."""
+import numpy as np
+
+from repro.core import prediction as pred
+
+G1, G2 = 3.0, 1.0  # start-stage (fast) / arise-stage (slow) increments
+
+
+def _step(L, H, E, theta):
+    return pred.fassa_predict(np.array([L]), np.array([H]), np.array([E]),
+                              np.array([theta]), G1, G2)
+
+
+def test_fassa_success_theta_below_pair_both_arise():
+    """theta <= L: the whole pair sits above the threshold -> slow growth."""
+    L2, H2, out = _step(4.0, 8.0, 50.0, theta=2.0)
+    assert out[0] == pred.COMPLETED_H
+    assert np.isclose(L2[0], 4.0 + G2)
+    assert np.isclose(H2[0], 8.0 + G2)
+
+
+def test_fassa_success_theta_inside_pair_fast_easy_bound():
+    """L < theta <= H: the pair brackets the threshold -> L grows fast (r1),
+    H stays in the arise stage (r2)."""
+    L2, H2, out = _step(4.0, 8.0, 50.0, theta=6.0)
+    assert out[0] == pred.COMPLETED_H
+    assert np.isclose(L2[0], 4.0 + G1)
+    assert np.isclose(H2[0], 8.0 + G2)
+
+
+def test_fassa_success_theta_above_pair_hard_bound_catches_up():
+    """theta > H: the pair fell below the threshold -> H probes fast (r1),
+    L grows in the arise stage (r2).  This is the regime the seed's dead
+    branch (identical np.where arms) silently conflated with the middle one.
+    """
+    L2, H2, out = _step(4.0, 8.0, 50.0, theta=20.0)
+    assert out[0] == pred.COMPLETED_H
+    assert np.isclose(L2[0], 4.0 + G2)
+    assert np.isclose(H2[0], 8.0 + G1)
+
+
+def test_fassa_regimes_differ():
+    """Regression for the dead branch: the three regimes must produce three
+    distinct (L', H') updates on the same pair."""
+    updates = {tuple(np.round([_step(4.0, 8.0, 50.0, th)[i][0]
+                               for i in (0, 1)], 6))
+               for th in (2.0, 6.0, 20.0)}
+    assert len(updates) == 3
+
+
+def test_fassa_partial_and_drop_branches_unaffected():
+    """The stage split only touches the success branch."""
+    # partial: L <= E < H
+    L2, H2, out = _step(4.0, 8.0, 5.0, theta=6.0)
+    assert out[0] == pred.COMPLETED_L
+    assert L2[0] <= H2[0]
+    # drop: E < L -> multiplicative decrease
+    L2, H2, out = _step(4.0, 8.0, 1.0, theta=6.0)
+    assert out[0] == pred.DROPPED
+    assert np.isclose(L2[0], 2.0)
+    assert np.isclose(H2[0], 4.0)
