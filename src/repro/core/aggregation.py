@@ -19,6 +19,12 @@ Included:
   trimmed_mean  coordinate-wise trimmed mean over uploading clients — robust
                 to adversarial / diverged updates (Yin et al., 2018)
   median        coordinate-wise median (trim band collapsed to the middle)
+  krum          (multi-)Krum: keep the upload(s) closest to their nearest
+                neighbours in full parameter space (Blanchard et al., 2017)
+  geometric_median
+                Weiszfeld-iterated geometric median of the uploads — the
+                l2 analogue of the coordinate-wise median (RFA, Pillutla
+                et al., 2019)
 
 The robust aggregators are *unweighted* over valid uploads by construction:
 sample-count weighting would let a single large adversarial client dominate,
@@ -126,11 +132,133 @@ class Median(TrimmedMean):
         return t, jnp.maximum(m - 2 * t, 1)
 
 
+# ---------------------------------------------------------------------------
+# full-parameter-space robust aggregators (distances across the whole
+# flattened update, not per coordinate)
+# ---------------------------------------------------------------------------
+
+
+def _flatten_clients(params_k):
+    """Stacked client pytree [K, ...] -> [K, P] float32 matrix."""
+    leaves = jax.tree.leaves(params_k)
+    K = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(K, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def _unflatten_like(vec, global_params):
+    """[P] float32 vector -> pytree shaped/dtyped like ``global_params``."""
+    leaves, treedef = jax.tree.flatten(global_params)
+    out, pos = [], 0
+    for leaf in leaves:
+        out.append(vec[pos:pos + leaf.size]
+                   .reshape(leaf.shape).astype(leaf.dtype))
+        pos += leaf.size
+    return jax.tree.unflatten(treedef, out)
+
+
+_FAR = 1e30   # sentinel distance for invalid clients (inf would 0*inf=nan)
+
+
+class Krum:
+    """(multi-)Krum (Blanchard et al., 2017).
+
+    Per valid client: score = sum of squared distances to its
+    ``m - n_byzantine - 2`` closest valid peers (m = number of valid
+    uploads; the band is clamped to [1, K-1] so small cohorts degrade
+    gracefully).  The ``multi`` lowest-scoring clients are averaged
+    (``multi=1`` is classic Krum: the single most central upload wins).
+    Invalid clients (weight 0) never enter distances or selection.
+    """
+
+    name = "krum"
+    prox_mu = 0.0
+
+    def __init__(self, n_byzantine: int = 0, multi: int = 1):
+        if n_byzantine < 0:
+            raise ValueError(f"n_byzantine must be >= 0, got {n_byzantine}")
+        if multi < 1:
+            raise ValueError(f"multi must be >= 1, got {multi}")
+        self.n_byzantine = int(n_byzantine)
+        self.multi = int(multi)
+
+    def __call__(self, params_k, global_params, weights):
+        valid = weights > 0
+        m = valid.sum().astype(jnp.int32)
+        K = weights.shape[0]
+        flat = _flatten_clients(params_k)                       # [K, P]
+        sq = jnp.sum(flat * flat, axis=1)
+        d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * flat @ flat.T, 0.0)
+        excluded = ~(valid[:, None] & valid[None, :]) | jnp.eye(K, dtype=bool)
+        d2 = jnp.where(excluded, _FAR, d2)
+        # band capped at m-1: a valid client has only m-1 valid peers, and
+        # letting a _FAR sentinel into its score would tie it with the
+        # invalid clients' masked scores (m == 1 would then select by index)
+        c = jnp.minimum(jnp.clip(m - self.n_byzantine - 2, 1, K - 1),
+                        jnp.maximum(m - 1, 0))
+        nearest = jnp.sort(d2, axis=1)
+        scores = jnp.where(jnp.arange(K)[None, :] < c, nearest, 0.0).sum(1)
+        scores = jnp.where(valid, scores, _FAR)
+        order = jnp.argsort(scores)                  # invalid ranks last
+        q = jnp.minimum(self.multi, jnp.maximum(m, 1))
+        chosen = jnp.zeros(K).at[order].set(
+            (jnp.arange(K) < q).astype(jnp.float32))
+        mixed = (chosen @ flat) / q.astype(jnp.float32)
+        g0 = _flatten_clients(
+            jax.tree.map(lambda g: g[None], global_params))[0]
+        return _unflatten_like(jnp.where(m > 0, mixed, g0), global_params)
+
+
+class GeometricMedian:
+    """Geometric median via Weiszfeld iteration (RFA, Pillutla et al., 2019).
+
+    Minimises sum_i ||x_i - y|| over valid uploads with ``iters`` fixed-point
+    steps; ``eps`` guards the reciprocal when the iterate lands on an upload.
+    Iteration starts from the coordinate-wise median (not the mean — a single
+    unbounded adversary would park the mean arbitrarily far away and
+    Weiszfeld's linear convergence would need many steps to walk back), so a
+    handful of refinement steps suffices.  A fixed iteration count keeps the
+    aggregator pure jnp (jit/scan-safe).
+    """
+
+    name = "geometric_median"
+    prox_mu = 0.0
+
+    def __init__(self, iters: int = 8, eps: float = 1e-8):
+        if iters < 1:
+            raise ValueError(f"iters must be >= 1, got {iters}")
+        self.iters = int(iters)
+        self.eps = float(eps)
+
+    def __call__(self, params_k, global_params, weights):
+        valid = (weights > 0).astype(jnp.float32)
+        m = valid.sum()
+        flat = _flatten_clients(params_k)                       # [K, P]
+        m_int = m.astype(jnp.int32)
+        s = jnp.sort(jnp.where(valid[:, None] > 0, flat, _FAR), axis=0)
+        lo = jnp.take(s, jnp.maximum(m_int - 1, 0) // 2, axis=0)
+        hi = jnp.take(s, jnp.maximum(m_int - 1, 0) - (m_int - 1) // 2, axis=0)
+        y0 = 0.5 * (lo + hi)   # coordinate-wise median of the valid uploads
+
+        def step(_, y):
+            d = jnp.sqrt(jnp.maximum(
+                jnp.sum((flat - y[None, :]) ** 2, axis=1), self.eps ** 2))
+            w = valid / d
+            return (w @ flat) / jnp.maximum(w.sum(), 1e-12)
+
+        y = jax.lax.fori_loop(0, self.iters, step, y0)
+        g0 = _flatten_clients(
+            jax.tree.map(lambda g: g[None], global_params))[0]
+        return _unflatten_like(jnp.where(m > 0, y, g0), global_params)
+
+
 AGGREGATORS: Dict[str, type] = {
     "fedavg": FedAvg,
     "fedprox": FedProx,
     "trimmed_mean": TrimmedMean,
     "median": Median,
+    "krum": Krum,
+    "geometric_median": GeometricMedian,
 }
 
 

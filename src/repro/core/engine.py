@@ -24,9 +24,22 @@ Three round flavours share that substrate:
   make_stream_round   cross-silo: a pre-batched stream of ``max_steps`` batch
                       pytrees per silo (repro.core.silo)
 
+Every round flavour takes a ``backend`` option (``"xla"`` | ``"pallas"``,
+default ``"xla"``).  ``"pallas"`` swaps the hot stages for the fused kernels
+in ``repro.kernels`` — the cohort gather (``fed_gather``) and, for MCLR
+models with ``sampling="iid"``, the budgeted local-SGD loop
+(``fed_local_sgd``) — and falls back to the XLA implementation for any stage
+with no applicable kernel (non-MCLR models, the seed-exact ``"shuffle"``
+minibatch rule, silo streams), so the flag is safe to flip on every
+scenario.  On CPU the kernels run in interpret mode
+(``repro.kernels.ops.KERNEL_INTERPRET``).
+
 Global params are donated to the round function (``donate_argnums=0``) so the
 update happens in place on accelerators; donation is skipped on CPU where XLA
-does not implement it (it would only emit warnings).
+does not implement it (it would only emit warnings).  The backend check is
+deferred to the round function's FIRST CALL, not engine or round-function
+construction, so an engine built before device selection still donates
+correctly.
 """
 from __future__ import annotations
 
@@ -36,6 +49,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import Aggregator, FedAvg
+
+BACKENDS = ("xla", "pallas")
 
 
 class RoundEngine:
@@ -48,21 +63,49 @@ class RoundEngine:
     prox_mu   : proximal weight added to every local objective; defaults to
                 the aggregator's own ``prox_mu`` (FedProx carries it)
     donate    : donate the global-params argument to the jitted round
+    backend   : default compute backend for the round functions ("xla" |
+                "pallas"); each make_* call can override it
     """
 
     def __init__(self, lr: float, aggregator: Optional[Aggregator] = None,
-                 prox_mu: Optional[float] = None, donate: bool = True):
+                 prox_mu: Optional[float] = None, donate: bool = True,
+                 backend: str = "xla"):
         self.lr = lr
         self.aggregator = aggregator if aggregator is not None else FedAvg()
         self.prox_mu = float(prox_mu if prox_mu is not None
                              else getattr(self.aggregator, "prox_mu", 0.0))
         self.donate = donate
+        self.backend = self._resolve_backend(backend)
 
     # ------------------------------------------------------------------
-    def _donate_argnums(self):
-        if self.donate and jax.default_backend() != "cpu":
-            return (0,)
-        return ()
+    def _resolve_backend(self, backend: Optional[str]) -> str:
+        backend = getattr(self, "backend", "xla") if backend is None \
+            else backend
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; choose from {BACKENDS}")
+        return backend
+
+    def _jit_round(self, fn: Callable) -> Callable:
+        """Jit ``fn``, deciding donation lazily at the first call.
+
+        ``jax.default_backend()`` must not be read while the round function
+        is being built — an engine constructed before device/mesh selection
+        would bake in the wrong answer.  The wrapper records its decision on
+        ``.donate_argnums`` (None until the first call)."""
+        state: dict = {}
+
+        def call(*args):
+            jitted = state.get("jitted")
+            if jitted is None:
+                donate = ((0,) if self.donate
+                          and jax.default_backend() != "cpu" else ())
+                jitted = state["jitted"] = jax.jit(fn, donate_argnums=donate)
+                call.donate_argnums = donate
+            return jitted(*args)
+
+        call.donate_argnums = None
+        return call
 
     def _prox(self, loss, params, global_params):
         if not self.prox_mu:
@@ -157,8 +200,32 @@ class RoundEngine:
         return new_global, weights.sum() > 0
 
     # ------------------------------------------------------------------
+    # pallas-backend stages (repro.kernels); each falls back to the XLA
+    # implementation when no kernel applies
+    # ------------------------------------------------------------------
+    def _can_fuse_sgd(self, model, sampling: str) -> bool:
+        """The fused local-SGD kernel covers the paper's convex model with
+        iid minibatches; everything else keeps the XLA masked scan."""
+        return sampling == "iid" and getattr(model, "kind", None) == "mclr"
+
+    def _fused_sgd(self, global_params, x, y, n, n_iters, keys,
+                   batch_size: int, max_iters: int):
+        """Budgeted local SGD through the fed_local_sgd kernel.  Minibatch
+        indices are drawn with the exact randint call the XLA iid path uses,
+        so the two backends see bit-identical batches."""
+        from repro.kernels import ops as kops
+        idx = jax.vmap(lambda key, nk: jax.random.randint(
+            key, (max_iters, batch_size), 0, jnp.maximum(nk, 1)))(keys, n)
+        w_k, b_k, losses = kops.fed_local_sgd_mclr(
+            x, y, idx, global_params["w"], global_params["b"],
+            n.astype(jnp.int32), n_iters.astype(jnp.int32),
+            lr=self.lr, prox_mu=self.prox_mu)
+        return {"w": w_k, "b": b_k}, losses
+
+    # ------------------------------------------------------------------
     def make_padded_round(self, model, batch_size: int, max_iters: int,
-                          sampling: str = "shuffle") -> Callable:
+                          sampling: str = "shuffle",
+                          backend: Optional[str] = None) -> Callable:
         """Seed-interface round over host-stacked padded arrays.
 
         round_fn(global_params, x, y, mask, n, n_iters, rng) ->
@@ -166,22 +233,31 @@ class RoundEngine:
           x: [K, max_n, ...] padded client data;  mask: [K, max_n]
           n: [K] true sample counts;  n_iters: [K] masked local-SGD budget
         """
-        local_train = self._local_sgd(model, batch_size, max_iters, sampling)
+        backend = self._resolve_backend(backend)
+        fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
+        local_train = None if fuse_sgd else \
+            self._local_sgd(model, batch_size, max_iters, sampling)
 
         def round_fn(global_params, x, y, mask, n, n_iters, rng):
             keys = jax.random.split(rng, x.shape[0])
-            params_k, losses = jax.vmap(
-                local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
-                global_params, x, y, mask, n, n_iters, keys)
+            if fuse_sgd:
+                params_k, losses = self._fused_sgd(
+                    global_params, x, y, n, n_iters, keys,
+                    batch_size, max_iters)
+            else:
+                params_k, losses = jax.vmap(
+                    local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                    global_params, x, y, mask, n, n_iters, keys)
             new_global, any_up = self._finish(global_params, params_k,
                                               n, n_iters)
             return new_global, losses, any_up
 
-        return jax.jit(round_fn, donate_argnums=self._donate_argnums())
+        return self._jit_round(round_fn)
 
     # ------------------------------------------------------------------
     def make_packed_round(self, model, batch_size: int, max_iters: int,
-                          max_n: int, sampling: str = "shuffle") -> Callable:
+                          max_n: int, sampling: str = "shuffle",
+                          backend: Optional[str] = None) -> Callable:
         """Device-resident round: cohort gather from packed client data.
 
         round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
@@ -191,36 +267,53 @@ class RoundEngine:
         ``flat_x/flat_y/offsets/lengths`` are the once-uploaded packed
         federation (repro.data.federated.PackedClients); ``ids`` is the [K]
         cohort.  The [K, max_n, ...] shards are gathered on device.  Padding
-        rows read (clipped) neighbouring clients' samples rather than zeros —
-        they are masked out of every loss and never enter batch sampling, so
-        with ``sampling="shuffle"`` results are bit-identical to the padded
-        path (proved by tests/test_engine.py).
+        rows carry neighbouring clients' samples (XLA clamp-gather) or the
+        DMA window tail (pallas fed_gather kernel) rather than zeros — they
+        are masked out of every loss and never enter batch sampling, so with
+        ``sampling="shuffle"`` BOTH backends are bit-identical to the padded
+        path (proved by tests/test_engine.py and tests/test_fed_kernels.py).
         """
-        local_train = self._local_sgd(model, batch_size, max_iters, sampling)
+        backend = self._resolve_backend(backend)
+        fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
+        local_train = None if fuse_sgd else \
+            self._local_sgd(model, batch_size, max_iters, sampling)
+
+        def gather_xla(flat_x, flat_y, offs, n):
+            total = flat_x.shape[0]
+            pos = jnp.arange(max_n)
+            idx = jnp.minimum(offs[:, None] + pos[None, :], total - 1)
+            mask = (pos[None, :] < n[:, None]).astype(jnp.float32)
+            return flat_x[idx], flat_y[idx], mask
+
+        def gather_pallas(flat_x, flat_y, offs, n):
+            from repro.kernels import ops as kops
+            return kops.fed_cohort_gather(flat_x, flat_y, offs, n, max_n)
+
+        gather = gather_pallas if backend == "pallas" else gather_xla
 
         def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
                      n_iters, rng):
-            total = flat_x.shape[0]
             offs = offsets[ids]
             n = jnp.minimum(lengths[ids], max_n)
-            pos = jnp.arange(max_n)
-            idx = jnp.minimum(offs[:, None] + pos[None, :], total - 1)
-            x = flat_x[idx]
-            y = flat_y[idx]
-            mask = (pos[None, :] < n[:, None]).astype(jnp.float32)
+            x, y, mask = gather(flat_x, flat_y, offs, n)
             keys = jax.random.split(rng, ids.shape[0])
-            params_k, losses = jax.vmap(
-                local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
-                global_params, x, y, mask, n, n_iters, keys)
+            if fuse_sgd:
+                params_k, losses = self._fused_sgd(
+                    global_params, x, y, n, n_iters, keys,
+                    batch_size, max_iters)
+            else:
+                params_k, losses = jax.vmap(
+                    local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                    global_params, x, y, mask, n, n_iters, keys)
             new_global, any_up = self._finish(global_params, params_k,
                                               n, n_iters)
             return new_global, losses, any_up
 
-        return jax.jit(round_fn, donate_argnums=self._donate_argnums())
+        return self._jit_round(round_fn)
 
     # ------------------------------------------------------------------
-    def make_stream_round(self, loss_fn: Callable,
-                          max_steps: int) -> Callable:
+    def make_stream_round(self, loss_fn: Callable, max_steps: int,
+                          backend: Optional[str] = None) -> Callable:
         """Cross-silo round over pre-batched per-silo streams.
 
         round_fn(global_params, batches, n_steps, weights) ->
@@ -228,7 +321,12 @@ class RoundEngine:
           batches: pytree with leading axes [K, max_steps, ...]
           n_steps: [K] int32 masked local-step budgets
           weights: [K] f32 aggregation weights (0 = no upload)
+
+        ``backend`` is accepted for interface uniformity; no fused kernel
+        applies to arbitrary batch pytrees, so "pallas" falls back to the
+        XLA scan (the flag is validated either way).
         """
+        self._resolve_backend(backend)
         lr = self.lr
 
         def local_train(global_params, silo_batches, n_steps):
@@ -256,4 +354,4 @@ class RoundEngine:
                 global_params, batches, n_steps)
             return self.aggregator(params_k, global_params, weights), losses
 
-        return jax.jit(round_fn, donate_argnums=self._donate_argnums())
+        return self._jit_round(round_fn)

@@ -18,17 +18,23 @@ from repro.core.engine import RoundEngine
 
 
 def make_round_fn(model, lr: float, batch_size: int, max_iters: int,
-                  prox_mu: float = 0.0) -> Callable:
+                  prox_mu: float = 0.0, sampling: str = "shuffle",
+                  backend: str = "xla") -> Callable:
     """Build the jitted round function for an FLModel (loss/accuracy pair).
 
     round_fn(global_params, x, y, mask, n, n_iters, rng) ->
         (new_global_params, client_losses, uploaded_any)
       x: [K, M, ...]  padded client data;  mask: [K, M]
       n: [K] true sample counts;  n_iters: [K] masked local-SGD budget
+    ``backend="pallas"`` selects the fused-kernel path where one applies:
+    on this padded interface that is the fused local-SGD kernel, which
+    needs ``sampling="iid"`` and an MCLR model (see RoundEngine; anything
+    else falls back to the XLA scan).
     """
     engine = RoundEngine(lr=lr, aggregator=get_aggregator("fedavg"),
-                         prox_mu=prox_mu, donate=False)
-    return engine.make_padded_round(model, batch_size, max_iters)
+                         prox_mu=prox_mu, donate=False, backend=backend)
+    return engine.make_padded_round(model, batch_size, max_iters,
+                                    sampling=sampling)
 
 
 def make_eval_fn(model) -> Callable:

@@ -48,6 +48,9 @@ class ServerConfig:
     sampling: str = "shuffle"    # shuffle (seed-exact, default) | iid (the
                                  # fast path: with-replacement minibatches,
                                  # no per-round epoch-permutation argsort)
+    backend: str = "xla"         # round compute backend: xla | pallas (the
+                                 # fused repro.kernels path; stages with no
+                                 # applicable kernel fall back to XLA)
     seed: int = 0
     selection_seed: int = 1234   # fixed across frameworks (paper §IV-A)
     eval_every: int = 1
@@ -88,7 +91,7 @@ class FedSAEServer:
             prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else None)
         self.round_fn = self.engine.make_packed_round(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
-            sampling=cfg.sampling)
+            sampling=cfg.sampling, backend=cfg.backend)
         self.select_fn = get_selection(cfg.selection)
         self.eval_fn = make_eval_fn(model)
         self.history: Dict[str, List] = {

@@ -21,7 +21,8 @@ from repro.core.engine import RoundEngine
 from repro.core.heterogeneity import HeterogeneitySim
 
 
-def make_silo_round_fn(loss_fn: Callable, lr: float, max_steps: int):
+def make_silo_round_fn(loss_fn: Callable, lr: float, max_steps: int,
+                       backend: str = "xla"):
     """loss_fn(params, batch)->scalar.  Returns jitted round_fn.
 
     round_fn(global_params, batches, n_steps, weights):
@@ -30,9 +31,11 @@ def make_silo_round_fn(loss_fn: Callable, lr: float, max_steps: int):
       weights: [K] f32 aggregation weights (0 = no upload)
 
     Thin dispatcher onto the shared RoundEngine (seed-compatible interface).
+    ``backend`` is validated and currently always falls back to the XLA
+    scan — no fused kernel applies to arbitrary batch pytrees.
     """
     engine = RoundEngine(lr=lr, aggregator=get_aggregator("fedavg"),
-                         donate=False)
+                         donate=False, backend=backend)
     return engine.make_stream_round(loss_fn, max_steps)
 
 

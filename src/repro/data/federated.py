@@ -29,9 +29,15 @@ class PackedClients:
     gather — ``x[offsets[ids, None] + arange(max_n)]`` — runs on device, so a
     round moves O(K) ids host->device instead of O(K * max_n * feature_dim)
     restacked padded samples.
+
+    ``x``/``y`` carry ``max_n`` zero rows of tail slack past the last
+    client's samples, so every client's ``[offset, offset + max_n)`` window
+    is in bounds — the contract the Pallas ``fed_gather`` kernel DMAs
+    against (kernels/fed_gather.py).  The slack rows are masked out of every
+    statistic like any other padding.
     """
-    x: object         # jnp [total, ...feat]
-    y: object         # jnp [total] int32
+    x: object         # jnp [total + max_n, ...feat]
+    y: object         # jnp [total + max_n] int32
     offsets: object   # jnp [n_clients] int32
     lengths: object   # jnp [n_clients] int32
     max_n: int        # cohort shard width; consumed by make_packed_round
@@ -83,15 +89,21 @@ class FederatedDataset:
         import jax.numpy as jnp  # lazy: generators stay importable sans jax
 
         ns = self.sizes
+        m = int(max_n or ns.max())
         offsets = np.zeros(len(ns), np.int64)
         np.cumsum(ns[:-1], out=offsets[1:])
-        x = np.concatenate(self.clients_x, axis=0)
-        y = np.concatenate(self.clients_y, axis=0).astype(np.int32)
+        # max_n rows of tail slack: every per-client [offset, offset+max_n)
+        # window stays in bounds (the fed_gather DMA contract)
+        pad_x = np.zeros((m,) + self.clients_x[0].shape[1:],
+                         self.clients_x[0].dtype)
+        x = np.concatenate(self.clients_x + [pad_x], axis=0)
+        y = np.concatenate(self.clients_y + [np.zeros(m, np.int32)],
+                           axis=0).astype(np.int32)
         return PackedClients(
             x=jnp.asarray(x), y=jnp.asarray(y),
             offsets=jnp.asarray(offsets, jnp.int32),
             lengths=jnp.asarray(ns, jnp.int32),
-            max_n=int(max_n or ns.max()))
+            max_n=m)
 
 
 def power_law_sizes(rng: np.random.Generator, n_clients: int, total: int,

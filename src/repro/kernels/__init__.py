@@ -1,3 +1,37 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: compute hot-spots with custom TPU kernels.
+
+Layout convention: one ``<name>.py`` per kernel family (the raw
+``pallas_call`` machinery), ``ops.py`` for the jit'd public entry points,
+``ref.py`` for the pure-jnp oracles every kernel is validated against.
+Everything runs with ``interpret=True`` in this CPU container; on a real
+TPU the identical ``pallas_call``s lower to Mosaic
+(``ops.KERNEL_INTERPRET``).
+
+Model kernels (custom_vjp, backward recomputes through the oracle):
+
+  flash_attention.py  online-softmax attention fwd/bwd, causal/window/GQA
+  selective_scan.py   SSM recurrence (Mamba-style selective scan)
+  fused_xent.py       fused softmax cross-entropy
+
+Federated kernels (ISSUE 2) — the ``RoundEngine`` compute backend,
+forward-only (round functions are never differentiated through):
+
+  fed_gather.py       fused cohort gather+mask: per-client offsets arrive
+                      via scalar prefetch, each grid step DMAs one client's
+                      [max_n, feat] window from the packed federation in
+                      HBM and writes the validity mask in-registers — no
+                      [K, max_n] index tensor, no clamp-gather intermediate
+  fed_local_sgd.py    fused masked budgeted local SGD for the paper's MCLR
+                      model: all ``max_iters`` slots for a client run in one
+                      grid step with the params held in VMEM scratch
+                      (heterogeneous FedSAE budgets stay uniform control
+                      flow via the ``i < n_iters_k`` update mask)
+
+Select the kernel path with ``backend="pallas"`` on
+``RoundEngine.make_packed_round`` / ``make_padded_round`` (plumbed through
+``ServerConfig.backend`` and ``launch/fl_train.py --backend``; default
+``"xla"``).  The flag is accepted by every scenario: stages with no
+applicable kernel (non-MCLR models, ``sampling="shuffle"`` local SGD, silo
+streams) fall back to the XLA implementation automatically, so flipping the
+flag is always safe.
+"""

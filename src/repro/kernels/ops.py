@@ -1,9 +1,11 @@
 """jit'd public wrappers for the Pallas kernels.
 
-Each op is a custom_vjp: the forward runs the Pallas kernel, the backward
-recomputes through the jnp oracle (flash-style recompute — the standard
-memory/compute trade on TPU).  ``interpret=True`` everywhere in this
-container (CPU); on a real TPU pass interpret=False via KERNEL_INTERPRET.
+Each model op is a custom_vjp: the forward runs the Pallas kernel, the
+backward recomputes through the jnp oracle (flash-style recompute — the
+standard memory/compute trade on TPU).  The federated ops at the bottom are
+forward-only (round functions are not differentiated through).
+``interpret=True`` everywhere in this container (CPU); on a real TPU pass
+interpret=False via KERNEL_INTERPRET.
 """
 from __future__ import annotations
 
@@ -13,6 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.fed_gather import fed_cohort_gather_fwd
+from repro.kernels.fed_local_sgd import fed_local_sgd_mclr_fwd
 from repro.kernels.flash_attention import (flash_attention_bwd,
                                            flash_attention_fwd)
 from repro.kernels.fused_xent import fused_softmax_xent_fwd
@@ -93,3 +97,32 @@ def _fx_bwd(res, g):
 
 
 fused_softmax_xent.defvjp(_fx_fwd, _fx_bwd)
+
+
+# ---------------------------------------------------------------------------
+# federated kernels (RoundEngine backend="pallas")
+#
+# Forward-only by design: federated round functions are never differentiated
+# through — the gather is a data movement, and the local-SGD kernel computes
+# its softmax-xent gradients in closed form inside the kernel — so neither op
+# carries a custom_vjp.
+# ---------------------------------------------------------------------------
+
+
+def fed_cohort_gather(flat_x, flat_y, starts, ns, max_n: int):
+    """Fused gather+mask over the packed federation (see fed_gather.py).
+
+    flat_x/flat_y must carry >= max_n rows of tail slack after the last
+    client's samples (FederatedDataset.packed pads at upload)."""
+    return fed_cohort_gather_fwd(flat_x, flat_y, starts, ns, max_n=max_n,
+                                 interpret=KERNEL_INTERPRET)
+
+
+def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, lr: float,
+                       prox_mu: float = 0.0):
+    """Fused masked budgeted MCLR local SGD (see fed_local_sgd.py).
+
+    Returns (w_k [K, d, C], b_k [K, C], losses [K])."""
+    return fed_local_sgd_mclr_fwd(x, y, idx, w0, b0, ns, n_iters, lr=lr,
+                                  prox_mu=prox_mu,
+                                  interpret=KERNEL_INTERPRET)

@@ -51,3 +51,57 @@ def softmax_xent(h, W, labels):
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return lse - gold
+
+
+def fed_cohort_gather(flat_x, flat_y, starts, ns, *, max_n):
+    """Windowed cohort gather: for each client k, rows
+    [starts[k], starts[k]+max_n) of the flat federation, plus the validity
+    mask ``pos < ns[k]``.  Mirrors the Pallas kernel's DMA-window semantics
+    (padding rows hold the window tail, cancelled by the mask)."""
+    starts = jnp.minimum(starts, flat_x.shape[0] - max_n)
+    idx = starts[:, None] + jnp.arange(max_n)[None, :]
+    mask = (jnp.arange(max_n)[None, :] < ns[:, None]).astype(jnp.float32)
+    return flat_x[idx], flat_y[idx], mask
+
+
+def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, *, lr,
+                       prox_mu: float = 0.0):
+    """Masked budgeted MCLR local SGD over precomputed iid minibatch
+    indices — the pure-jnp oracle for the fused kernel.  Shapes as in
+    fed_local_sgd.fed_local_sgd_mclr_fwd."""
+    max_iters, B = idx.shape[1], idx.shape[2]
+    C = w0.shape[1]
+
+    def one_client(xk, yk, idxk, nk, iters):
+        nk_safe = jnp.maximum(nk, 1)
+        bmask = (jnp.arange(B) < nk_safe).astype(jnp.float32)
+        bsum = jnp.maximum(bmask.sum(), 1.0)
+        oy = jax.nn.one_hot(yk, C, dtype=jnp.float32)
+
+        def step(carry, xs):
+            w, b = carry
+            i, idx_row = xs
+            xb = xk[idx_row].astype(jnp.float32)
+            oyb = oy[idx_row]
+            logits = xb @ w + b
+            logp = jax.nn.log_softmax(logits)
+            nll = -jnp.sum(logp * oyb, axis=-1)
+            loss = jnp.sum(nll * bmask) / bsum
+            err = (jnp.exp(logp) - oyb) * bmask[:, None] / bsum
+            gw = xb.T @ err
+            gb = err.sum(0)
+            if prox_mu:
+                loss = loss + 0.5 * prox_mu * (
+                    jnp.sum((w - w0) ** 2) + jnp.sum((b - b0) ** 2))
+                gw = gw + prox_mu * (w - w0)
+                gb = gb + prox_mu * (b - b0)
+            active = (i < iters).astype(jnp.float32)
+            return (w - lr * active * gw, b - lr * active * gb), loss
+
+        (w, b), losses = jax.lax.scan(
+            step, (w0.astype(jnp.float32), b0.astype(jnp.float32)),
+            (jnp.arange(max_iters), idxk))
+        msk = (jnp.arange(max_iters) < iters).astype(jnp.float32)
+        return w, b, (losses * msk).sum() / jnp.maximum(msk.sum(), 1.0)
+
+    return jax.vmap(one_client)(x, y, idx, ns, n_iters)

@@ -43,7 +43,8 @@ def run_flat(args):
                        aggregator=args.aggregator,
                        trim_ratio=args.trim_ratio,
                        selection=args.selection,
-                       sampling=args.sampling)
+                       sampling=args.sampling,
+                       backend=args.backend)
     srv = FedSAEServer(ds, model, cfg,
                        het=HeterogeneitySim(ds.n_clients, seed=cfg.seed))
     hist = srv.run(verbose=True)
@@ -86,7 +87,8 @@ def main():
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--al-rounds", type=int, default=0)
     ap.add_argument("--aggregator", default="fedavg",
-                    choices=("fedavg", "fedprox", "trimmed_mean", "median"))
+                    choices=("fedavg", "fedprox", "trimmed_mean", "median",
+                             "krum", "geometric_median"))
     ap.add_argument("--trim-ratio", type=float, default=0.1,
                     help="fraction trimmed per end (trimmed_mean only)")
     ap.add_argument("--selection", default="random",
@@ -97,6 +99,12 @@ def main():
                     help="local minibatch rule: shuffle reproduces the seed "
                          "bit-for-bit; iid is the faster with-replacement "
                          "path (see BENCH_round_engine.json)")
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas"),
+                    help="round compute backend: pallas runs the fused "
+                         "cohort-gather / local-SGD kernels (repro.kernels), "
+                         "falling back to XLA for stages with no kernel; "
+                         "interpret mode on CPU")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--silo-arch", default=None)
     ap.add_argument("--silos", type=int, default=4)

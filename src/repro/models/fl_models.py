@@ -103,12 +103,18 @@ def lstm_accuracy(params, batch):
 
 
 class FLModel:
-    """What core.federated consumes: init/loss/accuracy triple."""
+    """What core.federated consumes: init/loss/accuracy triple.
 
-    def __init__(self, init, loss, accuracy):
+    ``kind`` tags model families the kernel layer has a fused implementation
+    for (RoundEngine backend="pallas" fuses local SGD when kind == "mclr";
+    anything else falls back to the XLA scan).
+    """
+
+    def __init__(self, init, loss, accuracy, kind=None):
         self.init = init
         self.loss = loss
         self.accuracy = accuracy
+        self.kind = kind
 
 
 def make_mclr(n_features: int, n_classes: int) -> FLModel:
@@ -116,6 +122,7 @@ def make_mclr(n_features: int, n_classes: int) -> FLModel:
         init=lambda rng: mclr_init(rng, n_features, n_classes),
         loss=mclr_loss,
         accuracy=mclr_accuracy,
+        kind="mclr",
     )
 
 

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregation import (FedAvg, FedProx, Median, TrimmedMean,
-                                    get_aggregator)
+from repro.core.aggregation import (FedAvg, FedProx, GeometricMedian, Krum,
+                                    Median, TrimmedMean, get_aggregator)
 from repro.core.engine import RoundEngine
 from repro.core.rounds import make_round_fn
 from repro.core.selection import get_selection, select_loss_proportional
@@ -258,7 +258,8 @@ def test_all_aggregators_keep_global_on_empty_round():
     params_k = _stacked([[10.0, 10.0], [20.0, 20.0]])
     g0 = {"w": jnp.array([1.0, -1.0])}
     zeros = jnp.zeros(2)
-    for name in ("fedavg", "fedprox", "trimmed_mean", "median"):
+    for name in ("fedavg", "fedprox", "trimmed_mean", "median", "krum",
+                 "geometric_median"):
         out = get_aggregator(name)(params_k, g0, zeros)
         np.testing.assert_allclose(out["w"], g0["w"])
 
@@ -305,6 +306,85 @@ def test_robust_aggregators_ignore_invalid_clients():
     np.testing.assert_allclose(out["w"], [2.0])
 
 
+def test_krum_rejects_adversarial_client_fedavg_does_not():
+    """The poisoned upload is the farthest point from every honest cluster
+    member, so classic Krum never selects it — while FedAvg is dragged away
+    (the same adversarial scenario as the trimmed-mean test)."""
+    honest = [[1.0, -1.0], [1.1, -0.9], [0.9, -1.1], [1.05, -0.95]]
+    params_k = _stacked(honest + [[1e6, 1e6]])
+    g0 = {"w": jnp.zeros(2)}
+    w = jnp.ones(5)
+
+    avg = FedAvg()(params_k, g0, w)
+    krum = Krum(n_byzantine=1)(params_k, g0, w)
+
+    assert abs(float(avg["w"][0])) > 1e4                       # poisoned
+    # classic Krum returns exactly one of the honest uploads, verbatim
+    krum_w = np.asarray(krum["w"])
+    assert any(np.array_equal(krum_w, np.asarray(h, np.float32))
+               for h in honest)
+
+
+def test_multi_krum_averages_most_central_uploads():
+    params_k = _stacked([[1.0], [2.0], [3.0], [1e9]])
+    g0 = {"w": jnp.zeros(1)}
+    out = Krum(n_byzantine=1, multi=2)(params_k, g0, jnp.ones(4))
+    # 2.0 and either 1.0 or 3.0 are the two most central -> mean in [1.5, 2.5]
+    assert 1.5 <= float(out["w"][0]) <= 2.5
+
+
+def test_geometric_median_rejects_adversarial_client():
+    honest = [[1.0, -1.0], [1.1, -0.9], [0.9, -1.1], [1.05, -0.95]]
+    params_k = _stacked(honest + [[1e6, 1e6]])
+    g0 = {"w": jnp.zeros(2)}
+    out = GeometricMedian()(params_k, g0, jnp.ones(5))
+    np.testing.assert_allclose(np.asarray(out["w"]), [1.0, -1.0], atol=0.2)
+
+
+def test_krum_and_geometric_median_ignore_invalid_clients():
+    """weight == 0 (no upload) excludes a client from distances, scores and
+    the Weiszfeld iteration alike."""
+    params_k = _stacked([[1.0], [3.0], [1e9]])
+    g0 = {"w": jnp.zeros(1)}
+    w = jnp.array([1.0, 1.0, 0.0])   # the adversary never uploaded
+    out = Krum()(params_k, g0, w)
+    assert float(out["w"][0]) in (1.0, 3.0)
+    out = GeometricMedian()(params_k, g0, w)
+    assert 1.0 <= float(out["w"][0]) <= 3.0
+
+
+def test_krum_single_valid_upload_is_returned_verbatim():
+    """m == 1: the sole uploader has no valid peers, so its score must not
+    tie with the invalid clients' sentinel scores (regression: argsort broke
+    the tie by index and could select a never-uploaded client)."""
+    params_k = _stacked([[1e9], [1.0], [-7.0]])
+    g0 = {"w": jnp.zeros(1)}
+    out = Krum()(params_k, g0, jnp.array([0.0, 1.0, 0.0]))
+    np.testing.assert_allclose(out["w"], [1.0])
+
+
+def test_krum_validation():
+    with pytest.raises(ValueError):
+        Krum(n_byzantine=-1)
+    with pytest.raises(ValueError):
+        Krum(multi=0)
+    with pytest.raises(ValueError):
+        GeometricMedian(iters=0)
+
+
+def test_engine_krum_round_is_finite(flat_round_case):
+    ds, model, params, ids, max_n, n_iters, rng = flat_round_case
+    engine = RoundEngine(lr=0.05, aggregator=Krum(n_byzantine=1),
+                         donate=False)
+    fn = engine.make_packed_round(model, 10, 12, max_n)
+    packed = ds.packed(max_n)
+    p, losses, _ = fn(params, packed.x, packed.y, packed.offsets,
+                      packed.lengths, jnp.asarray(ids, jnp.int32),
+                      jnp.asarray(n_iters), rng)
+    for leaf in jax.tree.leaves(p):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
 def test_fedprox_aggregator_carries_prox_mu_into_engine():
     agg = FedProx(prox_mu=0.3)
     eng = RoundEngine(lr=0.1, aggregator=agg)
@@ -315,7 +395,7 @@ def test_fedprox_aggregator_carries_prox_mu_into_engine():
 
 def test_get_aggregator_unknown_name():
     with pytest.raises(ValueError, match="unknown aggregator"):
-        get_aggregator("krum")
+        get_aggregator("bulyan")
 
 
 def test_trim_ratio_validation():
@@ -402,6 +482,40 @@ def test_loss_proportional_prefers_high_value_clients():
     for _ in range(200):
         counts[select_loss_proportional(rng, v, 10)] += 1
     assert counts[:10].mean() > 3 * counts[10:].mean()
+
+
+# ---------------------------------------------------------------------------
+# donation gating
+# ---------------------------------------------------------------------------
+
+
+def test_donation_decided_at_first_call_not_at_construction(flat_round_case,
+                                                            monkeypatch):
+    """The donate/skip decision must read jax.default_backend() when the
+    round function is first CALLED — an engine (or round fn) built before
+    device selection would otherwise bake in the wrong answer."""
+    ds, model, params, ids, max_n, n_iters, rng = flat_round_case
+    x, y, mask, n = ds.stacked(ids, max_n)
+    args = (jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
+            jnp.asarray(n, jnp.int32), jnp.asarray(n_iters), rng)
+
+    # built while the backend looks like an accelerator...
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    fn = RoundEngine(lr=0.05, donate=True).make_padded_round(model, 10, 4)
+    assert fn.donate_argnums is None          # undecided until first call
+    monkeypatch.undo()
+    # ...but first called on the real CPU: donation must be skipped
+    fn(params, *args)
+    assert fn.donate_argnums == ()
+
+    # and the reverse: built early, device "selected" before the first call
+    # must enable donation (on the real CPU, XLA silently skips it)
+    fn2 = RoundEngine(lr=0.05, donate=True).make_padded_round(model, 10, 4)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    p2, _, _ = fn2(jax.tree.map(jnp.copy, params), *args)
+    assert fn2.donate_argnums == (0,)
+    for leaf in jax.tree.leaves(p2):
+        assert np.isfinite(np.asarray(leaf)).all()
 
 
 def test_loss_proportional_is_scale_equivariant():
