@@ -30,7 +30,24 @@ client axis — the recorded pallas rounds/s measure interpreter overhead,
 not the TPU win the kernels target.  The legs exist so the number is
 tracked honestly and flips to a real measurement on TPU hardware.
 
-Same masked iteration count, same cohorts, same rng discipline in all legs.
+Scan-driver legs (ISSUE 3, `RoundEngine.make_segment_fn`) time the fused
+multi-round path: BLOCK_SIZE rounds per jitted lax.scan — selection,
+heterogeneity draws, workload bookkeeping and the round itself all on
+device, one host pull per block (host_syncs_per_round == 1/BLOCK_SIZE):
+
+  engine_scan_path         xla backend, iid sampling; the round body indexes
+                           minibatches straight out of the packed arrays, so
+                           no [K, max_n, feat] cohort shard is materialized
+  engine_scan_pallas_path  the fed_gather + fed_local_sgd kernels composed
+                           under the scan (interpret-mode caveat above)
+
+The scan legs run the fixed-workload baseline (algo="fedprox" with
+fixed_epochs == the bench's --epochs) so every leg executes the same
+masked iteration count per round; cohorts are selected on device
+(uniform Gumbel-top-k) instead of replayed from the host list, which is
+exactly the work the fused driver eliminates.
+
+Same masked iteration count, same rng discipline in all legs.
 
   PYTHONPATH=src python benchmarks/bench_round_engine.py --scale reduced
   PYTHONPATH=src python benchmarks/bench_round_engine.py --scale both
@@ -51,10 +68,14 @@ import numpy as np
 
 from repro.core.aggregation import get_aggregator
 from repro.core.engine import RoundEngine
+from repro.core.heterogeneity import HeterogeneitySim
+from repro.core.server import ServerConfig
 from repro.data.federated import make_mnist_like
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_round_engine.json")
+
+BLOCK_SIZE = 10   # rounds fused per lax.scan segment in the scan legs
 
 # K=30 selected per round as in the paper's MNIST runs.  The reduced scale
 # keeps the paper's max client size (400 samples) so the data path carries a
@@ -168,28 +189,88 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         return round_
 
     def timed(round_fn):
-        p = jax.tree.map(jnp.copy, params)
-        p, losses = round_fn(p, cohorts[0], keys[0])   # compile warmup
-        jax.block_until_ready(losses)
-        t0 = time.perf_counter()
-        for ids, key in zip(cohorts, keys):
-            p, losses = round_fn(p, ids, key)
-        jax.block_until_ready(losses)
-        dt = time.perf_counter() - t0
-        return rounds / dt, p
+        def run():
+            p = jax.tree.map(jnp.copy, params)
+            p, losses = round_fn(p, cohorts[0], keys[0])   # compile warmup
+            jax.block_until_ready(losses)
+            t0 = time.perf_counter()
+            for ids, key in zip(cohorts, keys):
+                p, losses = round_fn(p, ids, key)
+            jax.block_until_ready(losses)
+            dt = time.perf_counter() - t0
+            return rounds / dt, p
+        return run
 
-    legs = {"seed": seed_path_round,
-            "shuffle": engine_round(packed_fns[("shuffle", "xla")]),
-            "iid": engine_round(packed_fns[("iid", "xla")]),
-            "pallas_shuffle": engine_round(packed_fns[("shuffle", "pallas")]),
-            "pallas_iid": engine_round(packed_fns[("iid", "pallas")])}
+    # scan-driver legs: the fixed-workload baseline keeps every leg's masked
+    # iteration count identical (e_eff == epochs for ~every drawn E)
+    het = HeterogeneitySim(spec["n_clients"], seed=seed)
+    mu_dev, sigma_dev = het.device_params()
+    block = min(BLOCK_SIZE, rounds)
+    n_blocks = -(-rounds // block)
+
+    def scan_cfg(backend):
+        # the real ServerConfig (not a hand-built namespace) so the
+        # benchmarked segment sees exactly the fields the server passes
+        return ServerConfig(
+            algo="fedprox", n_selected=K, selection="random",
+            h_cap=max(24.0, epochs), fixed_epochs=epochs,
+            sampling="iid", backend=backend, driver="scan",
+            block_size=block)
+
+    def timed_scan(backend):
+        seg = engine.make_segment_fn(model, batch_size, max_iters,
+                                     packed.max_n, scan_cfg(backend))
+
+        def init_state():
+            return {
+                "params": jax.tree.map(jnp.copy, params),
+                "L": jnp.full(spec["n_clients"], 1.0, jnp.float32),
+                "H": jnp.full(spec["n_clients"], 2.0, jnp.float32),
+                "theta": jnp.full(spec["n_clients"], 1.5, jnp.float32),
+                "values": jnp.asarray(np.sqrt(sizes) * 2.0, jnp.float32),
+                "data_rng": jax.random.PRNGKey(seed + 1),
+                "sel_rng": jax.random.PRNGKey(seed),
+            }
+
+        def run_blocks(state):
+            for b in range(n_blocks):
+                ts = jnp.arange(b * block, (b + 1) * block, dtype=jnp.int32)
+                state, stats = seg(state, ts, packed.x, packed.y,
+                                   packed.offsets, packed.lengths,
+                                   mu_dev, sigma_dev)
+                jax.device_get(stats)   # the driver's one host pull / block
+            return state
+
+        def run():
+            # compile warmup: ONE block — every block shares the [block]
+            # ts shape, so the jit cache is already hot for the timed loop
+            st, _ = seg(init_state(), jnp.arange(block, dtype=jnp.int32),
+                        packed.x, packed.y, packed.offsets, packed.lengths,
+                        mu_dev, sigma_dev)
+            jax.block_until_ready(st["params"])
+            state = init_state()
+            t0 = time.perf_counter()
+            state = run_blocks(state)
+            jax.block_until_ready(state["params"])
+            dt = time.perf_counter() - t0
+            return n_blocks * block / dt, state["params"]
+        return run
+
+    legs = {"seed": timed(seed_path_round),
+            "shuffle": timed(engine_round(packed_fns[("shuffle", "xla")])),
+            "iid": timed(engine_round(packed_fns[("iid", "xla")])),
+            "pallas_shuffle":
+                timed(engine_round(packed_fns[("shuffle", "pallas")])),
+            "pallas_iid": timed(engine_round(packed_fns[("iid", "pallas")])),
+            "scan": timed_scan("xla"),
+            "scan_pallas": timed_scan("pallas")}
     # interleave repetitions so machine drift hits every leg equally; report
     # the median rep per leg (robust to contention spikes either way)
     samples = {name: [] for name in legs}
     final_p = {}
     for _ in range(reps):
         for name, fn in legs.items():
-            r, final_p[name] = timed(fn)
+            r, final_p[name] = fn()
             samples[name].append(r)
     rps = {name: float(np.median(v)) for name, v in samples.items()}
     seed_rps, shuffle_rps, iid_rps = rps["seed"], rps["shuffle"], rps["iid"]
@@ -200,7 +281,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         for a, b in zip(jax.tree.leaves(p_seed),
                         jax.tree.leaves(final_p[other])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    for name in ("iid", "pallas_iid"):
+    for name in ("iid", "pallas_iid", "scan", "scan_pallas"):
         for leaf in jax.tree.leaves(final_p[name]):
             assert np.isfinite(np.asarray(leaf)).all()
 
@@ -231,9 +312,23 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             "sampling": "iid", "backend": "pallas",
             "kernels": "fed_gather + fed_local_sgd",
             "rounds_per_sec": round(rps["pallas_iid"], 3)},
+        "engine_scan_path": {
+            "driver": "scan", "sampling": "iid", "backend": "xla",
+            "block_size": block,
+            "data": "device-resident, direct packed indexing (no cohort "
+                    "shard materialized)",
+            "host_syncs_per_round": round(1.0 / block, 4),
+            "rounds_per_sec": round(rps["scan"], 3)},
+        "engine_scan_pallas_path": {
+            "driver": "scan", "sampling": "iid", "backend": "pallas",
+            "block_size": block,
+            "kernels": "fed_gather + fed_local_sgd under lax.scan",
+            "host_syncs_per_round": round(1.0 / block, 4),
+            "rounds_per_sec": round(rps["scan_pallas"], 3)},
         "pallas_mode": "interpret" if jax.default_backend() == "cpu"
         else "compiled",
         "pallas_speedup_vs_engine": round(rps["pallas_iid"] / iid_rps, 3),
+        "scan_speedup_vs_engine": round(rps["scan"] / iid_rps, 3),
         "seed_path_rounds_per_sec": round(seed_rps, 3),
         "engine_rounds_per_sec": round(iid_rps, 3),
         "speedup": round(iid_rps / seed_rps, 3),
@@ -269,7 +364,9 @@ def main():
         merged[scale] = res
         print(f"[{scale}] seed path: {res['seed_path_rounds_per_sec']:.2f} "
               f"rounds/s   engine: {res['engine_rounds_per_sec']:.2f} "
-              f"rounds/s   speedup: {res['speedup']:.2f}x   pallas "
+              f"rounds/s   speedup: {res['speedup']:.2f}x   scan: "
+              f"{res['engine_scan_path']['rounds_per_sec']:.2f} rounds/s "
+              f"({res['scan_speedup_vs_engine']:.2f}x engine)   pallas "
               f"({res['pallas_mode']}): "
               f"{res['engine_pallas_path']['rounds_per_sec']:.2f} rounds/s")
     with open(args.out, "w") as f:

@@ -24,6 +24,14 @@ Three round flavours share that substrate:
   make_stream_round   cross-silo: a pre-batched stream of ``max_steps`` batch
                       pytrees per silo (repro.core.silo)
 
+On top of the per-round flavours, ``make_segment_fn`` (ISSUE 3) fuses whole
+MULTI-ROUND training segments into one jitted ``lax.scan``: the server-side
+FedSAE logic (heterogeneity draws, Gumbel-top-k cohort selection, Ira/Fassa
+workload prediction, ValueTracker refresh) runs on device via the float32
+twins in repro.core.{prediction,selection,heterogeneity}, carrying
+``(params, L, H, theta, values, data_rng, sel_rng)`` so zero bytes cross
+the host boundary inside a block of rounds.
+
 Every round flavour takes a ``backend`` option (``"xla"`` | ``"pallas"``,
 default ``"xla"``).  ``"pallas"`` swaps the hot stages for the fused kernels
 in ``repro.kernels`` — the cohort gather (``fed_gather``) and, for MCLR
@@ -51,6 +59,18 @@ import jax.numpy as jnp
 from repro.core.aggregation import Aggregator, FedAvg
 
 BACKENDS = ("xla", "pallas")
+
+
+def budget_iters(e_eff, n, batch_size: int, max_iters: int):
+    """Masked local-SGD budget from uploaded epochs (float32, traceable).
+
+    n_iters_k = min(round(e_eff_k * ceil(n_k / B)), max_iters) — the same
+    formula the host server computes in numpy, pinned to float32 so the
+    scan driver and the host driver's device-rng mode agree bit-for-bit.
+    """
+    tau = jnp.ceil(jnp.asarray(n, jnp.float32) / jnp.float32(batch_size))
+    e = jnp.asarray(e_eff, jnp.float32)
+    return jnp.minimum(jnp.round(e * tau), max_iters).astype(jnp.int32)
 
 
 class RoundEngine:
@@ -117,6 +137,54 @@ class RoundEngine:
     # ------------------------------------------------------------------
     # sample-level local SGD: resample batches from a padded client shard
     # ------------------------------------------------------------------
+    def _iid_sgd_core(self, model, batch_size: int, max_iters: int):
+        """The iid minibatch loop, parameterized over the batch fetch.
+
+        One implementation serves both data layouts — the gathered
+        [max_n, ...] client shard (``fetch = lambda idx: (xk[idx],
+        yk[idx])``) and direct packed indexing (``fetch = lambda idx:
+        (flat_x[off_k + idx], ...)``) — so the two paths stay bit-identical
+        by construction: same randint draw, same masks, same update and
+        loss-mean arithmetic (the contract tests/test_scan_driver.py
+        asserts).
+
+        One threefry call for the whole round instead of a
+        fold_in+randint per iteration; idx < nk always lands on a real
+        sample (both stacked() and the packed layout are
+        real-samples-first), so no validity-mask gather is needed.  The
+        reported loss is the mean minibatch loss over executed iterations
+        (silo-round semantics): no extra full-shard pass.  Zero-budget
+        clients report 0.0; the server never consumes losses of
+        non-uploaders.
+        """
+        lr = self.lr
+        B = batch_size
+
+        def train(global_params, fetch, nk, iters, key):
+            nk_safe = jnp.maximum(nk, 1)
+            idx_all = jax.random.randint(key, (max_iters, B), 0, nk_safe)
+            bmask = (jnp.arange(B) < nk_safe).astype(jnp.float32)
+
+            def step(params, xs):
+                i, idx = xs
+                xb, yb = fetch(idx)
+                batch = {"x": xb, "y": yb, "mask": bmask}
+
+                def loss_fn(p):
+                    return self._prox(model.loss(p, batch), p, global_params)
+
+                loss, g = jax.value_and_grad(loss_fn)(params)
+                active = (i < iters).astype(jnp.float32)
+                return jax.tree.map(lambda p, gg: p - lr * active * gg,
+                                    params, g), loss
+
+            params, losses = jax.lax.scan(
+                step, global_params, (jnp.arange(max_iters), idx_all))
+            msk = (jnp.arange(max_iters) < iters).astype(jnp.float32)
+            return params, (losses * msk).sum() / jnp.maximum(msk.sum(), 1)
+
+        return train
+
     def _local_sgd(self, model, batch_size: int, max_iters: int,
                    sampling: str = "shuffle"):
         """``sampling`` picks the minibatch rule:
@@ -128,68 +196,45 @@ class RoundEngine:
                  argsort costs as much as the whole restack it replaced
                  (XLA CPU sort is slow).
         iid      per-iteration uniform minibatches with replacement
-                 (standard SGD).  No sort, and the reported client loss is
-                 the mean minibatch loss over executed iterations (free from
-                 value_and_grad — the same semantic the silo stream round
-                 uses), so the full-shard loss pass is skipped too.  Zero-
-                 budget clients report 0.0; the server never consumes losses
-                 of non-uploaders.
+                 (standard SGD, ``_iid_sgd_core`` on the gathered shard).
         """
         if sampling not in ("shuffle", "iid"):
             raise ValueError(f"unknown sampling {sampling!r}")
         lr = self.lr
         B = batch_size
 
+        if sampling == "iid":
+            core = self._iid_sgd_core(model, batch_size, max_iters)
+
+            def local_train(global_params, xk, yk, maskk, nk, iters, key):
+                return core(global_params, lambda idx: (xk[idx], yk[idx]),
+                            nk, iters, key)
+
+            return local_train
+
         def local_train(global_params, xk, yk, maskk, nk, iters, key):
             M = xk.shape[0]
             nk_safe = jnp.maximum(nk, 1)
+            perm = jnp.argsort(jax.random.uniform(key, (M,))
+                               + (1.0 - maskk) * 1e9)
 
-            def sgd_step(params, i, idx, bmask):
-                batch = {"x": xk[idx], "y": yk[idx], "mask": bmask}
+            def step(params, i):
+                idx = perm[(i * B + jnp.arange(B)) % nk_safe]
+                batch = {"x": xk[idx], "y": yk[idx],
+                         "mask": maskk[idx] * (jnp.arange(B) < nk_safe)}
 
                 def loss_fn(p):
                     return self._prox(model.loss(p, batch), p, global_params)
 
-                loss, g = jax.value_and_grad(loss_fn)(params)
+                _, g = jax.value_and_grad(loss_fn)(params)
                 active = (i < iters).astype(jnp.float32)
                 return jax.tree.map(lambda p, gg: p - lr * active * gg,
-                                    params, g), loss
+                                    params, g), None
 
-            if sampling == "shuffle":
-                perm = jnp.argsort(jax.random.uniform(key, (M,))
-                                   + (1.0 - maskk) * 1e9)
-
-                def step(params, i):
-                    idx = perm[(i * B + jnp.arange(B)) % nk_safe]
-                    bmask = maskk[idx] * (jnp.arange(B) < nk_safe)
-                    params, _ = sgd_step(params, i, idx, bmask)
-                    return params, None
-
-                params, _ = jax.lax.scan(step, global_params,
-                                         jnp.arange(max_iters))
-                # seed semantics: post-training loss over the full shard
-                final_loss = model.loss(params,
-                                        {"x": xk, "y": yk, "mask": maskk})
-            else:
-                # one threefry call for the whole round instead of a
-                # fold_in+randint per iteration; idx < nk always lands on a
-                # real sample (both stacked() and the packed gather lay
-                # clients out real-samples-first), so the maskk gather of the
-                # shuffle path is identically 1 and elided
-                idx_all = jax.random.randint(key, (max_iters, B), 0, nk_safe)
-                bmask = (jnp.arange(B) < nk_safe).astype(jnp.float32)
-
-                def step(params, xs):
-                    i, idx = xs
-                    return sgd_step(params, i, idx, bmask)
-
-                params, losses = jax.lax.scan(
-                    step, global_params, (jnp.arange(max_iters), idx_all))
-                # mean minibatch loss over executed iterations (silo-round
-                # semantics): no extra full-shard pass
-                msk = (jnp.arange(max_iters) < iters).astype(jnp.float32)
-                final_loss = (losses * msk).sum() / jnp.maximum(msk.sum(), 1)
-
+            params, _ = jax.lax.scan(step, global_params,
+                                     jnp.arange(max_iters))
+            # seed semantics: post-training loss over the full shard
+            final_loss = model.loss(params, {"x": xk, "y": yk, "mask": maskk})
             return params, final_loss
 
         return local_train
@@ -255,24 +300,12 @@ class RoundEngine:
         return self._jit_round(round_fn)
 
     # ------------------------------------------------------------------
-    def make_packed_round(self, model, batch_size: int, max_iters: int,
-                          max_n: int, sampling: str = "shuffle",
-                          backend: Optional[str] = None) -> Callable:
-        """Device-resident round: cohort gather from packed client data.
-
-        round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
-                 n_iters, rng) -> (new_global_params, client_losses,
-                 uploaded_any)
-
-        ``flat_x/flat_y/offsets/lengths`` are the once-uploaded packed
-        federation (repro.data.federated.PackedClients); ``ids`` is the [K]
-        cohort.  The [K, max_n, ...] shards are gathered on device.  Padding
-        rows carry neighbouring clients' samples (XLA clamp-gather) or the
-        DMA window tail (pallas fed_gather kernel) rather than zeros — they
-        are masked out of every loss and never enter batch sampling, so with
-        ``sampling="shuffle"`` BOTH backends are bit-identical to the padded
-        path (proved by tests/test_engine.py and tests/test_fed_kernels.py).
-        """
+    def _packed_round_body(self, model, batch_size: int, max_iters: int,
+                           max_n: int, sampling: str = "shuffle",
+                           backend: Optional[str] = None) -> Callable:
+        """Un-jitted packed-round body — shared by :meth:`make_packed_round`
+        (which jits it standalone) and :meth:`make_segment_fn` (which traces
+        it inside the multi-round ``lax.scan``)."""
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         local_train = None if fuse_sgd else \
@@ -309,7 +342,175 @@ class RoundEngine:
                                               n, n_iters)
             return new_global, losses, any_up
 
-        return self._jit_round(round_fn)
+        return round_fn
+
+    def _direct_iid_round_body(self, model, batch_size: int, max_iters: int,
+                               max_n: int) -> Callable:
+        """Gather-free iid round: minibatches are indexed straight out of
+        the packed flat arrays (``flat_x[offset_k + idx]``), so the
+        [K, max_n, feat] cohort shard is never materialized.
+
+        Bit-identical to the gather-based iid path — same randint draws,
+        and ``x_k[idx] == flat_x[offset_k + idx]`` for every idx < n_k
+        (clients are laid out real-samples-first) — but it reads O(iters *
+        B * feat) instead of writing an O(K * max_n * feat) intermediate,
+        which is what lets the scan driver clear 2x at paper scale.
+        """
+        core = self._iid_sgd_core(model, batch_size, max_iters)
+
+        def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
+                     n_iters, rng):
+            offs = offsets[ids]
+            n = jnp.minimum(lengths[ids], max_n)
+            keys = jax.random.split(rng, ids.shape[0])
+
+            def local_train(off_k, nk, iters, key):
+                return core(global_params,
+                            lambda idx: (flat_x[off_k + idx],
+                                         flat_y[off_k + idx]),
+                            nk, iters, key)
+
+            params_k, losses = jax.vmap(local_train)(offs, n, n_iters, keys)
+            new_global, any_up = self._finish(global_params, params_k,
+                                              n, n_iters)
+            return new_global, losses, any_up
+
+        return round_fn
+
+    def make_packed_round(self, model, batch_size: int, max_iters: int,
+                          max_n: int, sampling: str = "shuffle",
+                          backend: Optional[str] = None) -> Callable:
+        """Device-resident round: cohort gather from packed client data.
+
+        round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
+                 n_iters, rng) -> (new_global_params, client_losses,
+                 uploaded_any)
+
+        ``flat_x/flat_y/offsets/lengths`` are the once-uploaded packed
+        federation (repro.data.federated.PackedClients); ``ids`` is the [K]
+        cohort.  The [K, max_n, ...] shards are gathered on device.  Padding
+        rows carry neighbouring clients' samples (XLA clamp-gather) or the
+        DMA window tail (pallas fed_gather kernel) rather than zeros — they
+        are masked out of every loss and never enter batch sampling, so with
+        ``sampling="shuffle"`` BOTH backends are bit-identical to the padded
+        path (proved by tests/test_engine.py and tests/test_fed_kernels.py).
+        """
+        return self._jit_round(self._packed_round_body(
+            model, batch_size, max_iters, max_n, sampling, backend))
+
+    # ------------------------------------------------------------------
+    # fused multi-round segment: whole training blocks in one lax.scan
+    # ------------------------------------------------------------------
+    def make_segment_fn(self, model, batch_size: int, max_iters: int,
+                        max_n: int, cfg, sampling: Optional[str] = None,
+                        backend: Optional[str] = None) -> Callable:
+        """Fuse whole FedSAE training segments into one jitted ``lax.scan``.
+
+        segment_fn(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma)
+            -> (state', stats)
+
+        ``state`` is the scan carry — a dict with keys
+
+            params    model pytree
+            L, H      [N] float32 task-pair history
+            theta     [N] float32 Fassa EMA thresholds
+            values    [N] float32 AL training values
+            data_rng  threefry key for minibatch draws
+            sel_rng   threefry key for selection + heterogeneity draws
+
+        and ``ts`` the [block] int32 round indices to execute.  Each scanned
+        round runs the FULL server step on device: heterogeneity draw
+        (``sample_workloads_device``), cohort selection (Gumbel-top-k,
+        ``select_cohort_device``), workload prediction + history update
+        (``workload_update_device`` — Ira/Fassa/fixed-workload baselines),
+        budgeted local SGD + aggregation, and the ValueTracker scatter.
+        Zero bytes cross the host boundary inside a block; the caller pulls
+        ``stats`` (per-round [block] arrays: dropout, train_loss, assigned,
+        uploaded, true_workload, and the [block, K] cohort ``ids``) once per
+        segment.
+
+        ``cfg`` is duck-typed ``ServerConfig`` (algo / n_selected /
+        al_rounds / beta / selection / U / alpha / gamma1 / gamma2 / h_cap /
+        fixed_epochs).  ``sampling``/``backend`` default to ``cfg``'s
+        values; ``backend="pallas"`` composes the fed_gather/fed_local_sgd
+        kernels under the scan unchanged.  With the default XLA backend and
+        ``sampling="iid"`` the round body indexes minibatches straight out
+        of the packed arrays (``_direct_iid_round_body``) — no [K, max_n,
+        feat] cohort shard is ever materialized.
+
+        All float state is pinned float32 (also under ``jax_enable_x64``);
+        the carried history never leaves device, so a block is one XLA
+        program and one dispatch.
+        """
+        from repro.core import prediction as pred
+        from repro.core.heterogeneity import sample_workloads_device
+        from repro.core.selection import (select_cohort_device,
+                                          value_update_device)
+
+        sampling = cfg.sampling if sampling is None else sampling
+        backend = self._resolve_backend(
+            getattr(cfg, "backend", None) if backend is None else backend)
+        if backend == "xla" and sampling == "iid":
+            round_body = self._direct_iid_round_body(
+                model, batch_size, max_iters, max_n)
+        else:
+            round_body = self._packed_round_body(
+                model, batch_size, max_iters, max_n, sampling, backend)
+
+        algo = cfg.algo
+        K = int(cfg.n_selected)
+        al_rounds = int(getattr(cfg, "al_rounds", 0))
+        beta = float(getattr(cfg, "beta", 0.01))
+        strategy = getattr(cfg, "selection", "random")
+        wl_kwargs = dict(
+            U=float(cfg.U), alpha=float(cfg.alpha),
+            gamma1=float(cfg.gamma1), gamma2=float(cfg.gamma2),
+            h_cap=float(cfg.h_cap), fixed_epochs=float(cfg.fixed_epochs))
+
+        def segment(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma):
+            def one_round(carry, t):
+                params = carry["params"]
+                L, H, theta = carry["L"], carry["H"], carry["theta"]
+                values = carry["values"]
+                sel_rng, k_sel, k_het = jax.random.split(carry["sel_rng"], 3)
+                E_all = sample_workloads_device(k_het, mu, sigma)
+                ids = select_cohort_device(k_sel, values, K, strategy, beta,
+                                           use_al=t < al_rounds)
+                E_true = E_all[ids]
+                e_eff, outcome, assigned, L, H, theta = \
+                    pred.workload_update_device(algo, L, H, theta, ids,
+                                                E_true, **wl_kwargs)
+                n = jnp.minimum(lengths[ids], max_n)
+                n_iters = budget_iters(e_eff, n, batch_size, max_iters)
+                data_rng, sub = jax.random.split(carry["data_rng"])
+                params, losses, _ = round_body(
+                    params, flat_x, flat_y, offsets, lengths, ids,
+                    n_iters, sub)
+                uploaded = n_iters > 0
+                values = value_update_device(values, lengths, ids, losses,
+                                             uploaded)
+                upf = uploaded.astype(jnp.float32)
+                n_up = upf.sum()
+                stats = {
+                    "ids": ids,
+                    "dropout": (outcome == pred.DROPPED)
+                        .astype(jnp.float32).mean(),
+                    "train_loss": jnp.where(
+                        n_up > 0,
+                        (losses * upf).sum() / jnp.maximum(n_up, 1.0),
+                        jnp.float32(jnp.nan)),
+                    "assigned": assigned.mean(),
+                    "uploaded": e_eff.mean(),
+                    "true_workload": E_true.mean(),
+                }
+                new_carry = {"params": params, "L": L, "H": H,
+                             "theta": theta, "values": values,
+                             "data_rng": data_rng, "sel_rng": sel_rng}
+                return new_carry, stats
+
+            return jax.lax.scan(one_round, state, ts)
+
+        return self._jit_round(segment)
 
     # ------------------------------------------------------------------
     def make_stream_round(self, loss_fn: Callable, max_steps: int,

@@ -7,10 +7,33 @@ mu_k ~ U[5, 10)  and  sigma_k ~ U[mu_k/4, mu_k/2).
 The paper fixes the random seed so the same client has the same affordable
 workload sequence across frameworks — we do the same (one generator per
 simulator instance, seeded).
+
+Two draw paths (ISSUE 3): ``sample_round`` is the numpy original (the host
+driver's seed-compatible stream), and ``sample_workloads_device`` is the
+float32 jnp twin the scan driver traces — the crash/outcome behaviour is
+identical (same truncation at 0), only the underlying PRNG stream differs
+(threefry keys instead of a numpy Generator).  ``device_params`` uploads
+the per-client (mu, sigma) once so blocks of rounds draw with no host
+round-trip.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+def sample_workloads_device(key, mu, sigma):
+    """Affordable workloads for every client, drawn on device (float32).
+
+    jnp twin of ``HeterogeneitySim.sample_round``: E ~ N(mu, sigma^2)
+    truncated at 0.  Crash-heavy regimes (tiny mu) degenerate to all-zero
+    workloads exactly like the numpy path.
+    """
+    mu = jnp.asarray(mu, jnp.float32)
+    sigma = jnp.asarray(sigma, jnp.float32)
+    e = mu + sigma * jax.random.normal(key, mu.shape, jnp.float32)
+    return jnp.maximum(e, jnp.float32(0.0))
 
 
 class HeterogeneitySim:
@@ -27,3 +50,9 @@ class HeterogeneitySim:
         """Affordable workload (epochs, float >= 0) for every client."""
         e = self._rng.normal(self.mu, self.sigma)
         return np.maximum(e, 0.0)
+
+    def device_params(self):
+        """(mu, sigma) as float32 device arrays — uploaded once, consumed
+        by ``sample_workloads_device`` inside the scan driver."""
+        return (jnp.asarray(self.mu, jnp.float32),
+                jnp.asarray(self.sigma, jnp.float32))

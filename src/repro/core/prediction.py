@@ -12,12 +12,28 @@ once per round for the selected cohort.  Outcomes per Alg. 2/3:
 Note on Alg. 3 line 23: the paper prints ``min(L+r2, 1/2 L)`` which is
 degenerate (always 1/2 L since r2 > 0); we read it as ``min(L+r2, 1/2 H)``
 for consistency with Ira's partial-case rule (documented deviation).
+
+Two implementations live side by side (ISSUE 3):
+
+  * the numpy originals (float64) — consumed by the per-round host driver,
+    kept bit-stable for seed compatibility;
+  * ``*_device`` jnp twins (pinned float32 regardless of
+    ``jax_enable_x64``) — traceable, so the scan driver can run the whole
+    server-side update inside one jitted ``lax.scan``.  Parity with the
+    originals is proven in tests/test_prediction.py.
+
+``workload_update_device`` bundles the per-algo dispatch the server's
+``_workloads`` performs (ira / fassa / fedavg / fedprox / oracle) into one
+pure function over the full [N] history arrays, shared verbatim by the scan
+driver and the host driver's device-rng mode so their arithmetic is
+bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 COMPLETED_H = 2   # finished the difficult task
@@ -124,3 +140,141 @@ def fassa_predict(L: np.ndarray, H: np.ndarray, E_true: np.ndarray,
         L_new = np.minimum(L_new, h_cap)
         H_new = np.minimum(H_new, h_cap)
     return L_new, H_new, out
+
+
+# ---------------------------------------------------------------------------
+# device twins (jnp, float32-pinned) — the scan driver's server-side math
+# ---------------------------------------------------------------------------
+
+_F32 = jnp.float32
+
+
+def _f32(x):
+    return jnp.asarray(x, _F32)
+
+
+def outcomes_device(L, H, E_true):
+    """jnp twin of :func:`outcomes` (int32 codes)."""
+    L, H, E = _f32(L), _f32(H), _f32(E_true)
+    return jnp.where(E >= H, COMPLETED_H,
+                     jnp.where(E >= L, COMPLETED_L, DROPPED)).astype(jnp.int32)
+
+
+def uploaded_epochs_device(L, H, E_true):
+    """jnp twin of :func:`uploaded_epochs`."""
+    L, H = _f32(L), _f32(H)
+    out = outcomes_device(L, H, E_true)
+    return jnp.where(out == COMPLETED_H, H,
+                     jnp.where(out == COMPLETED_L, L, _F32(0.0)))
+
+
+def _clamp_pair_device(L_new, H_new, h_cap):
+    L_new = jnp.maximum(L_new, _F32(0.25))
+    H_new = jnp.maximum(H_new, L_new + _F32(1e-3))
+    if h_cap:
+        L_new = jnp.minimum(L_new, _F32(h_cap))
+        H_new = jnp.minimum(H_new, _F32(h_cap))
+    return L_new, H_new
+
+
+def ira_predict_device(L, H, E_true, U: float = 10.0, h_cap: float = 0.0):
+    """jnp twin of :func:`ira_predict` (float32)."""
+    L, H, U = _f32(L), _f32(H), _F32(U)
+    out = outcomes_device(L, H, E_true)
+    grow_L = L + U / jnp.maximum(L, _F32(1e-6))
+    grow_H = H + U / jnp.maximum(H, _F32(1e-6))
+    L_p = jnp.minimum(grow_L, _F32(0.5) * H)
+    H_p = jnp.maximum(grow_L, _F32(0.5) * H)
+    L_new = jnp.where(out == COMPLETED_H, grow_L,
+                      jnp.where(out == COMPLETED_L, L_p, _F32(0.5) * L))
+    H_new = jnp.where(out == COMPLETED_H, grow_H,
+                      jnp.where(out == COMPLETED_L, H_p, _F32(0.5) * H))
+    L_new, H_new = _clamp_pair_device(L_new, H_new, h_cap)
+    return L_new, H_new, out
+
+
+def fassa_threshold_device(theta, E_true, alpha: float = 0.95):
+    """jnp twin of :func:`fassa_threshold`."""
+    theta, E, a = _f32(theta), _f32(E_true), _F32(alpha)
+    return a * theta + (_F32(1.0) - a) * E
+
+
+def fassa_predict_device(L, H, E_true, theta, gamma1: float = 3.0,
+                         gamma2: float = 1.0, h_cap: float = 0.0):
+    """jnp twin of :func:`fassa_predict` (float32)."""
+    L, H, theta = _f32(L), _f32(H), _f32(theta)
+    r1, r2 = _F32(gamma1), _F32(gamma2)
+    out = outcomes_device(L, H, E_true)
+
+    L_s = jnp.where(theta <= L, L + r2,
+                    jnp.where(theta <= H, L + r1, L + r2))
+    H_s = jnp.where(theta <= L, H + r2,
+                    jnp.where(theta <= H, H + r2, H + r1))
+
+    inc_p = jnp.where(theta <= L, r2, r1)
+    L_p = jnp.minimum(L + inc_p, _F32(0.5) * H)
+    H_p = jnp.maximum(L + inc_p, _F32(0.5) * H)
+
+    L_new = jnp.where(out == COMPLETED_H, L_s,
+                      jnp.where(out == COMPLETED_L, L_p, _F32(0.5) * L))
+    H_new = jnp.where(out == COMPLETED_H, H_s,
+                      jnp.where(out == COMPLETED_L, H_p, _F32(0.5) * H))
+    L_new, H_new = _clamp_pair_device(L_new, H_new, h_cap)
+    return L_new, H_new, out
+
+
+WORKLOAD_ALGOS = ("ira", "fassa", "fedavg", "fedprox", "oracle")
+
+
+def workload_update_device(algo: str, L, H, theta, ids, E_true, *,
+                           U: float = 10.0, alpha: float = 0.95,
+                           gamma1: float = 3.0, gamma2: float = 1.0,
+                           h_cap: float = 24.0, fixed_epochs: float = 15.0):
+    """One server-side workload step over the FULL [N] history arrays.
+
+    The device twin of ``FedSAEServer._workloads``: given the cohort ``ids``
+    and its true workloads ``E_true`` [K], returns
+
+        (e_eff [K], outcome [K], assigned [K], L' [N], H' [N], theta' [N])
+
+    with the cohort's rows of L/H/theta scatter-updated (float32
+    throughout).  ``algo`` is a static python string, so each algorithm
+    traces to a branch-free program; the scan driver calls this traced, the
+    host driver's device-rng mode calls it eagerly — same function, same
+    bits.
+    """
+    L, H, theta = _f32(L), _f32(H), _f32(theta)
+    E = _f32(E_true)
+    if algo == "oracle":
+        e_eff = jnp.minimum(E, _F32(h_cap))
+        outcome = jnp.where(e_eff > 0, COMPLETED_H,
+                            DROPPED).astype(jnp.int32)
+        return e_eff, outcome, e_eff, L, H, theta
+    if algo == "fedavg":
+        ok = E >= _F32(fixed_epochs)
+        e_eff = jnp.where(ok, _F32(fixed_epochs), _F32(0.0))
+        outcome = jnp.where(ok, COMPLETED_H, DROPPED).astype(jnp.int32)
+        assigned = jnp.full_like(E, _F32(fixed_epochs))
+        return e_eff, outcome, assigned, L, H, theta
+    if algo == "fedprox":
+        e_eff = jnp.minimum(E, _F32(fixed_epochs))
+        outcome = jnp.where(
+            E >= _F32(fixed_epochs), COMPLETED_H,
+            jnp.where(e_eff > 0, COMPLETED_L, DROPPED)).astype(jnp.int32)
+        assigned = jnp.full_like(E, _F32(fixed_epochs))
+        return e_eff, outcome, assigned, L, H, theta
+    if algo not in ("ira", "fassa"):
+        raise ValueError(
+            f"unknown workload algo {algo!r}; choose from {WORKLOAD_ALGOS}")
+    Li, Hi = L[ids], H[ids]
+    assigned = Hi
+    e_eff = uploaded_epochs_device(Li, Hi, E)
+    if algo == "ira":
+        L2, H2, outcome = ira_predict_device(Li, Hi, E, U=U, h_cap=h_cap)
+    else:
+        th_i = theta[ids]
+        L2, H2, outcome = fassa_predict_device(Li, Hi, E, th_i, gamma1,
+                                               gamma2, h_cap=h_cap)
+        theta = theta.at[ids].set(fassa_threshold_device(th_i, E, alpha))
+    return (e_eff, outcome, assigned,
+            L.at[ids].set(L2), H.at[ids].set(H2), theta)

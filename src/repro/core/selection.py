@@ -17,11 +17,21 @@ Every strategy shares the signature
 
 so policies are swappable without touching the server loop; resolve by name
 via ``get_selection``.
+
+Device twins (ISSUE 3): every strategy is ALSO implemented as on-device
+Gumbel-top-k over a strategy-specific logit vector
+(``select_cohort_device``), and the ValueTracker update as a float32
+scatter (``value_update_device``), so the scan driver can select cohorts
+and refresh values inside one jitted ``lax.scan`` without a host sync.
+The host driver's device-rng mode calls the same functions eagerly, which
+is what makes host-vs-scan cohort sequences bit-identical.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -31,9 +41,15 @@ class ValueTracker:
         self.sizes = sizes
 
     def update(self, client_ids, losses):
-        """Eq. 6: refresh value only for this round's participants."""
-        self.v[np.asarray(client_ids)] = (
-            np.sqrt(self.sizes[np.asarray(client_ids)]) * np.asarray(losses))
+        """Eq. 6: refresh value only for this round's participants.
+
+        A round where every selected client crashes has no participants —
+        return unchanged (an empty plain-list ``client_ids`` would
+        otherwise become a float64 index array and raise IndexError)."""
+        ids = np.asarray(client_ids)
+        if ids.size == 0:
+            return
+        self.v[ids] = np.sqrt(self.sizes[ids]) * np.asarray(losses)
 
 
 def selection_probs(v: np.ndarray, beta: float = 0.01) -> np.ndarray:
@@ -91,3 +107,62 @@ def get_selection(name: str) -> SelectionFn:
         raise ValueError(
             f"unknown selection strategy {name!r}; "
             f"choose from {sorted(SELECTIONS)}")
+
+
+# ---------------------------------------------------------------------------
+# device twins — Gumbel-top-k sampling without replacement on device
+# ---------------------------------------------------------------------------
+#
+# Every strategy reduces to "top-k of (strategy logits + Gumbel noise)":
+#
+#   random             logits = 0            (uniform without replacement)
+#   active             logits = beta * v     (softmax PL sampling; the
+#                                             log-softmax constant shift
+#                                             cannot change the top-k)
+#   loss_proportional  logits = log max(v, eps)
+#
+# which is exactly the PL-sampling identity the numpy strategies use — but
+# as one traced top_k, so the scan driver selects cohorts with zero host
+# involvement.
+
+
+def _strategy_logits(strategy: str, v, beta: float):
+    v = jnp.asarray(v, jnp.float32)
+    if strategy == "random":
+        return jnp.zeros_like(v)
+    if strategy == "active":
+        return jnp.float32(beta) * v
+    if strategy == "loss_proportional":
+        return jnp.log(jnp.maximum(v, jnp.float32(1e-12)))
+    raise ValueError(
+        f"unknown selection strategy {strategy!r}; "
+        f"choose from {sorted(SELECTIONS)}")
+
+
+def select_cohort_device(key, values, k: int, strategy: str = "random",
+                         beta: float = 0.01, use_al=False):
+    """Select k distinct clients on device (Gumbel top-k, float32).
+
+    ``use_al`` may be a traced bool: when true the Active-Learning logits
+    (beta * v) override the configured strategy, which lets the scan driver
+    cross the ``al_rounds`` warm-up boundary inside a block without
+    retracing.
+    """
+    v = jnp.asarray(values, jnp.float32)
+    base = _strategy_logits(strategy, v, beta)
+    base = jnp.where(use_al, _strategy_logits("active", v, beta), base)
+    g = jax.random.gumbel(key, v.shape, jnp.float32)
+    _, ids = jax.lax.top_k(base + g, k)
+    return ids.astype(jnp.int32)
+
+
+def value_update_device(values, sizes, ids, losses, uploaded):
+    """jnp twin of ``ValueTracker.update`` (Eq. 6), float32 scatter.
+
+    Rows of ``ids`` where ``uploaded`` is False keep their old value — the
+    all-crashed round degenerates to a no-op, mirroring the host guard.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    new_v = (jnp.sqrt(jnp.asarray(sizes, jnp.float32)[ids])
+             * jnp.asarray(losses, jnp.float32))
+    return values.at[ids].set(jnp.where(uploaded, new_v, values[ids]))

@@ -1,10 +1,41 @@
-"""FedSAE server: the full training loop of Fig. 2.
+"""FedSAE server: the full training loop of Fig. 2, behind two drivers.
 
-Per round: (1) predict task pairs from history (Ira/Fassa), (2) convert
-training values to selection probabilities (AL) or select uniformly,
-(3) broadcast + masked local training (jitted round), (4) aggregate and
-update history.  Baselines: FedAvg (fixed workload, stragglers upload
-nothing) and FedProx (ideal partial work, for reference).
+Per round the server must (1) predict task pairs from history (Ira/Fassa),
+(2) convert training values to selection probabilities (AL) or select
+uniformly, (3) broadcast + masked local training, (4) aggregate and update
+history.  Baselines: FedAvg (fixed workload, stragglers upload nothing),
+FedProx (ideal partial work) and an oracle skyline.
+
+Two drivers execute that loop (``ServerConfig.driver``):
+
+  host  (default) one python iteration per round: numpy Ira/Fassa
+        prediction, numpy selection, one jitted round dispatch, a host
+        sync per round to read losses.  Bitwise seed-compatible with every
+        pre-ISSUE-3 run.  With ``rng_impl="device"`` the host loop instead
+        draws heterogeneity/selection and updates history through the
+        float32 device twins (repro.core.{prediction,selection,
+        heterogeneity}) — still one round per dispatch, but arithmetically
+        bit-identical to the scan driver, which is what the parity tests
+        exercise.
+
+  scan  the fast path: ``RoundEngine.make_segment_fn`` fuses
+        ``block_size`` consecutive rounds into ONE jitted ``lax.scan``
+        carrying (params, L, H, theta, values, data_rng, sel_rng), so the
+        whole server algorithm — heterogeneity draws, Gumbel-top-k
+        selection, workload prediction, budgeted local SGD, aggregation,
+        ValueTracker refresh — runs on device and zero bytes cross the
+        host boundary inside a block.  Metrics are pulled once per block
+        (host_syncs_per_round == 1/block_size) and the test-set eval runs
+        at most once per block, at block ends where ``eval_every`` made a
+        round due; history state is synced back to numpy only when ``run``
+        returns.  The ``backend="pallas"`` kernels compose under the scan
+        unchanged.
+
+The scan driver forces ``rng_impl="device"``; its PRNG streams (threefry)
+necessarily differ from the numpy generators, so a scan run is NOT bitwise
+comparable to a default host run — it IS bitwise comparable (same cohorts,
+same budgets) to a host run with ``rng_impl="device"`` and the same seeds
+(tests/test_scan_driver.py).
 """
 from __future__ import annotations
 
@@ -18,11 +49,15 @@ import numpy as np
 
 from repro.core import prediction as pred
 from repro.core.aggregation import get_aggregator
-from repro.core.engine import RoundEngine
-from repro.core.heterogeneity import HeterogeneitySim
+from repro.core.engine import RoundEngine, budget_iters
+from repro.core.heterogeneity import HeterogeneitySim, sample_workloads_device
 from repro.core.rounds import make_eval_fn
-from repro.core.selection import ValueTracker, get_selection, select_active
+from repro.core.selection import (ValueTracker, get_selection, select_active,
+                                  select_cohort_device, value_update_device)
 from repro.data.federated import FederatedDataset
+
+DRIVERS = ("host", "scan")
+RNG_IMPLS = ("numpy", "device")
 
 
 @dataclasses.dataclass
@@ -51,6 +86,13 @@ class ServerConfig:
     backend: str = "xla"         # round compute backend: xla | pallas (the
                                  # fused repro.kernels path; stages with no
                                  # applicable kernel fall back to XLA)
+    driver: str = "host"         # host (per-round loop, bitwise seed-compat)
+                                 # | scan (block_size rounds fused into one
+                                 # jitted lax.scan — the fast path)
+    block_size: int = 16         # rounds per fused segment (driver="scan")
+    rng_impl: str = ""           # "" auto (numpy for host, device for scan)
+                                 # | numpy | device — which PRNG streams
+                                 # drive heterogeneity/selection
     seed: int = 0
     selection_seed: int = 1234   # fixed across frameworks (paper §IV-A)
     eval_every: int = 1
@@ -59,6 +101,16 @@ class ServerConfig:
 class FedSAEServer:
     def __init__(self, dataset: FederatedDataset, model, cfg: ServerConfig,
                  het: Optional[HeterogeneitySim] = None):
+        if cfg.driver not in DRIVERS:
+            raise ValueError(
+                f"unknown driver {cfg.driver!r}; choose from {DRIVERS}")
+        self.rng_impl = cfg.rng_impl or (
+            "device" if cfg.driver == "scan" else "numpy")
+        if self.rng_impl not in RNG_IMPLS:
+            raise ValueError(
+                f"unknown rng_impl {cfg.rng_impl!r}; choose from {RNG_IMPLS}")
+        if cfg.driver == "scan" and self.rng_impl != "device":
+            raise ValueError("driver='scan' requires the device rng streams")
         self.ds = dataset
         self.model = model
         self.cfg = cfg
@@ -69,6 +121,7 @@ class FedSAEServer:
         self.theta = np.full(N, 0.5 * sum(cfg.init_pair), np.float64)
         self.values = ValueTracker(N, dataset.sizes.astype(np.float64))
         self.sel_rng = np.random.default_rng(cfg.selection_seed)
+        self.sel_key = jax.random.PRNGKey(cfg.selection_seed)
         self.data_rng = jax.random.PRNGKey(cfg.seed)
         self.params = model.init(jax.random.PRNGKey(cfg.seed + 7))
 
@@ -80,6 +133,7 @@ class FedSAEServer:
 
         # one-time device upload: rounds gather their cohort on device
         self.packed = dataset.packed(self.max_n)
+        self._mu_dev, self._sigma_dev = self.het.device_params()
         agg_kwargs = {}
         if cfg.aggregator == "trimmed_mean":
             agg_kwargs["trim_ratio"] = cfg.trim_ratio
@@ -92,17 +146,42 @@ class FedSAEServer:
         self.round_fn = self.engine.make_packed_round(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
             sampling=cfg.sampling, backend=cfg.backend)
+        self.segment_fn = self.engine.make_segment_fn(
+            model, cfg.batch_size, self.max_iters, self.packed.max_n,
+            cfg) if cfg.driver == "scan" else None
+        self.block_size = max(1, int(cfg.block_size))
         self.select_fn = get_selection(cfg.selection)
         self.eval_fn = make_eval_fn(model)
         self.history: Dict[str, List] = {
             "acc": [], "test_loss": [], "train_loss": [], "dropout": [],
             "assigned": [], "uploaded": [], "true_workload": []}
+        self.cohorts: List[np.ndarray] = []   # [K] ids per executed round
+        self.host_syncs = 0                   # device->host pulls
 
     # ------------------------------------------------------------------
+    def _wl_kwargs(self):
+        cfg = self.cfg
+        return dict(U=cfg.U, alpha=cfg.alpha, gamma1=cfg.gamma1,
+                    gamma2=cfg.gamma2, h_cap=cfg.h_cap,
+                    fixed_epochs=cfg.fixed_epochs)
+
     def _workloads(self, ids: np.ndarray, E_true: np.ndarray):
         """Per-participant uploaded epochs + history update. Returns
-        (e_eff, outcome)."""
+        (e_eff, outcome, assigned)."""
         cfg = self.cfg
+        if self.rng_impl == "device":
+            # the scan driver's float32 math, run eagerly — bit-identical
+            # history trajectories between the two drivers
+            e_eff, outcome, assigned, L, H, theta = \
+                pred.workload_update_device(
+                    cfg.algo, self.L, self.H, self.theta,
+                    jnp.asarray(ids, jnp.int32), E_true,
+                    **self._wl_kwargs())
+            self.L = np.asarray(L, np.float64)
+            self.H = np.asarray(H, np.float64)
+            self.theta = np.asarray(theta, np.float64)
+            return (np.asarray(e_eff), np.asarray(outcome),
+                    np.asarray(assigned))
         if cfg.algo == "oracle":
             # skyline: the server magically knows E~ in advance and assigns
             # exactly the affordable workload (upper bound for any predictor;
@@ -140,8 +219,19 @@ class FedSAEServer:
         return e_eff, outcome, assigned
 
     # ------------------------------------------------------------------
-    def run_round(self, t: int) -> Dict:
+    def _draw_round_inputs(self, t: int):
+        """(E_true_all [N], ids [K]) for round t from the configured rng."""
         cfg = self.cfg
+        if self.rng_impl == "device":
+            # identical key discipline to the scan carry: one split for
+            # (selection, heterogeneity) per round
+            self.sel_key, k_sel, k_het = jax.random.split(self.sel_key, 3)
+            E_true_all = np.asarray(sample_workloads_device(
+                k_het, self._mu_dev, self._sigma_dev))
+            ids = np.asarray(select_cohort_device(
+                k_sel, self.values.v, cfg.n_selected, cfg.selection,
+                cfg.beta, use_al=t < cfg.al_rounds))
+            return E_true_all, ids
         E_true_all = self.het.sample_round()
         if t < cfg.al_rounds:
             ids = select_active(self.sel_rng, self.values.v, cfg.n_selected,
@@ -149,23 +239,39 @@ class FedSAEServer:
         else:
             ids = self.select_fn(self.sel_rng, self.values.v,
                                  self.ds.n_clients, cfg.n_selected, cfg.beta)
+        return E_true_all, ids
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int) -> Dict:
+        cfg = self.cfg
+        E_true_all, ids = self._draw_round_inputs(t)
         E_true = E_true_all[ids]
         e_eff, outcome, assigned = self._workloads(ids, E_true)
 
         # no host restack: only the [K] cohort ids / budgets cross to device;
         # the packed federation was uploaded once at construction
         n = np.minimum(self.sizes[ids], self.max_n)
-        tau = np.ceil(n / cfg.batch_size)
-        n_iters = np.minimum(np.round(e_eff * tau), self.max_iters)
+        if self.rng_impl == "device":
+            n_iters = np.asarray(budget_iters(e_eff, n, cfg.batch_size,
+                                              self.max_iters))
+        else:
+            tau = np.ceil(n / cfg.batch_size)
+            n_iters = np.minimum(np.round(e_eff * tau), self.max_iters)
         self.data_rng, sub = jax.random.split(self.data_rng)
         self.params, losses, _ = self.round_fn(
             self.params, self.packed.x, self.packed.y, self.packed.offsets,
             self.packed.lengths, jnp.asarray(ids, jnp.int32),
             jnp.asarray(n_iters, jnp.int32), sub)
-        losses = np.asarray(losses)
-
         uploaders = np.asarray(n_iters) > 0
-        if uploaders.any():
+        if self.rng_impl == "device":
+            self.values.v = np.asarray(value_update_device(
+                self.values.v, self.sizes, jnp.asarray(ids, jnp.int32),
+                losses, jnp.asarray(uploaders)), np.float64)
+        losses = np.asarray(losses)
+        self.host_syncs += 1      # the per-round loss readback
+        self.cohorts.append(np.asarray(ids))
+
+        if self.rng_impl != "device" and uploaders.any():
             self.values.update(ids[uploaders], losses[uploaders])
 
         stats = {
@@ -180,8 +286,85 @@ class FedSAEServer:
         return stats
 
     # ------------------------------------------------------------------
+    # scan driver: device-resident state blocks
+    # ------------------------------------------------------------------
+    def device_state(self) -> Dict:
+        """The scan carry, built from the host-side history (float32)."""
+        return {
+            "params": self.params,
+            "L": jnp.asarray(self.L, jnp.float32),
+            "H": jnp.asarray(self.H, jnp.float32),
+            "theta": jnp.asarray(self.theta, jnp.float32),
+            "values": jnp.asarray(self.values.v, jnp.float32),
+            "data_rng": self.data_rng,
+            "sel_rng": self.sel_key,
+        }
+
+    def _absorb_state(self, state: Dict):
+        """Sync the scan carry back into the host-side mirrors (the float32
+        values are stored exactly; float64 containers keep the host driver
+        interchangeable round-for-round)."""
+        self.params = state["params"]
+        self.L = np.asarray(state["L"], np.float64)
+        self.H = np.asarray(state["H"], np.float64)
+        self.theta = np.asarray(state["theta"], np.float64)
+        self.values.v = np.asarray(state["values"], np.float64)
+        self.data_rng = state["data_rng"]
+        self.sel_key = state["sel_rng"]
+
+    def _run_scan(self, T: int, verbose: bool):
+        cfg = self.cfg
+        tx, ty = jnp.asarray(self.ds.test_x), jnp.asarray(self.ds.test_y)
+        state = self.device_state()
+        pk = self.packed
+        t0 = 0
+        while t0 < T:
+            b = min(self.block_size, T - t0)
+            ts = jnp.arange(t0, t0 + b, dtype=jnp.int32)
+            state, stats = self.segment_fn(
+                state, ts, pk.x, pk.y, pk.offsets, pk.lengths,
+                self._mu_dev, self._sigma_dev)
+            stats = jax.device_get(stats)   # the block's single host pull
+            self.host_syncs += 1
+            self.cohorts.extend(np.asarray(stats["ids"]))
+            # eval at most once per block (with the block-end params), and
+            # only when a round inside the block was due per eval_every
+            due = (t0 + b == T) or any(
+                (t0 + i) % cfg.eval_every == 0 for i in range(b))
+            prev_acc = self.history["acc"][-1] if self.history["acc"] \
+                else float("nan")
+            acc, tl = prev_acc, float("nan")
+            if due:
+                acc, tl = self.eval_fn(state["params"], tx, ty)
+                acc, tl = float(acc), float(tl)
+                self.host_syncs += 1    # ...plus the eval readback
+            for i in range(b):
+                last = i == b - 1
+                row = {
+                    "dropout": float(stats["dropout"][i]),
+                    "train_loss": float(stats["train_loss"][i]),
+                    "assigned": float(stats["assigned"][i]),
+                    "uploaded": float(stats["uploaded"][i]),
+                    "true_workload": float(stats["true_workload"][i]),
+                    "acc": acc if last else prev_acc,
+                    "test_loss": tl if last else float("nan"),
+                }
+                for k in self.history:
+                    self.history[k].append(row.get(k, float("nan")))
+            if verbose:
+                print(f"[{cfg.algo}/scan] rounds {t0:3d}-{t0 + b - 1:3d} "
+                      f"acc={acc:.3f} "
+                      f"dropout={float(stats['dropout'][-1]):.2f} "
+                      f"loss={float(stats['train_loss'][-1]):.3f}")
+            t0 += b
+        self._absorb_state(state)
+        return self.history
+
+    # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, verbose: bool = False):
         T = rounds or self.cfg.rounds
+        if self.cfg.driver == "scan":
+            return self._run_scan(T, verbose)
         tx, ty = jnp.asarray(self.ds.test_x), jnp.asarray(self.ds.test_y)
         for t in range(T):
             stats = self.run_round(t)

@@ -4,6 +4,10 @@
   PYTHONPATH=src python -m repro.launch.fl_train --dataset femnist \
       --algo ira --rounds 50
 
+  # the fused multi-round driver: blocks of 16 rounds in one lax.scan
+  PYTHONPATH=src python -m repro.launch.fl_train --dataset femnist \
+      --algo ira --rounds 64 --driver scan --block-size 16 --sampling iid
+
   # cross-silo FL over a production architecture (smoke scale on CPU):
   PYTHONPATH=src python -m repro.launch.fl_train --silo-arch llama3.2-3b \
       --silos 4 --rounds 5
@@ -44,7 +48,9 @@ def run_flat(args):
                        trim_ratio=args.trim_ratio,
                        selection=args.selection,
                        sampling=args.sampling,
-                       backend=args.backend)
+                       backend=args.backend,
+                       driver=args.driver,
+                       block_size=args.block_size)
     srv = FedSAEServer(ds, model, cfg,
                        het=HeterogeneitySim(ds.n_clients, seed=cfg.seed))
     hist = srv.run(verbose=True)
@@ -105,6 +111,13 @@ def main():
                          "cohort-gather / local-SGD kernels (repro.kernels), "
                          "falling back to XLA for stages with no kernel; "
                          "interpret mode on CPU")
+    ap.add_argument("--driver", default="host", choices=("host", "scan"),
+                    help="round loop driver: host runs one python iteration "
+                         "per round (bitwise seed-compatible); scan fuses "
+                         "--block-size rounds into one jitted lax.scan with "
+                         "a single host sync per block (the fast path)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="rounds per fused segment (driver=scan)")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--silo-arch", default=None)
     ap.add_argument("--silos", type=int, default=4)

@@ -1,6 +1,7 @@
 """Plain (non-hypothesis) prediction tests: the Fassa success-branch stage
 split across all three theta regimes (ISSUE 1 satellite — the seed shipped a
-dead branch whose arms were identical)."""
+dead branch whose arms were identical), plus numpy-vs-device-twin parity
+(ISSUE 3: the scan driver runs the float32 jnp twins)."""
 import numpy as np
 
 from repro.core import prediction as pred
@@ -61,3 +62,108 @@ def test_fassa_partial_and_drop_branches_unaffected():
     assert out[0] == pred.DROPPED
     assert np.isclose(L2[0], 2.0)
     assert np.isclose(H2[0], 4.0)
+
+
+# ---------------------------------------------------------------------------
+# device twins: float32 jnp == float64 numpy to 1e-6 (ISSUE 3)
+# ---------------------------------------------------------------------------
+
+
+def _random_case(n=128, seed=11):
+    rng = np.random.default_rng(seed)
+    L = rng.uniform(0.3, 12.0, n).astype(np.float32)
+    H = (L + rng.uniform(0.05, 12.0, n)).astype(np.float32)
+    E = rng.uniform(0.0, 30.0, n).astype(np.float32)
+    th = rng.uniform(0.0, 25.0, n).astype(np.float32)
+    return L, H, E, th
+
+
+def test_outcomes_and_uploaded_epochs_device_parity():
+    L, H, E, _ = _random_case()
+    np.testing.assert_array_equal(np.asarray(pred.outcomes_device(L, H, E)),
+                                  pred.outcomes(L, H, E))
+    np.testing.assert_allclose(
+        np.asarray(pred.uploaded_epochs_device(L, H, E)),
+        pred.uploaded_epochs(L, H, E), rtol=1e-6, atol=1e-6)
+
+
+def test_ira_predict_device_parity():
+    L, H, E, _ = _random_case(seed=12)
+    for h_cap in (0.0, 24.0):
+        L2, H2, out = pred.ira_predict(L, H, E, U=10.0, h_cap=h_cap)
+        L2d, H2d, outd = pred.ira_predict_device(L, H, E, U=10.0,
+                                                 h_cap=h_cap)
+        np.testing.assert_allclose(np.asarray(L2d), L2, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(H2d), H2, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(outd), out)
+
+
+def test_fassa_predict_device_parity():
+    L, H, E, th = _random_case(seed=13)
+    L2, H2, out = pred.fassa_predict(L, H, E, th, 3.0, 1.0, h_cap=24.0)
+    L2d, H2d, outd = pred.fassa_predict_device(L, H, E, th, 3.0, 1.0,
+                                               h_cap=24.0)
+    np.testing.assert_allclose(np.asarray(L2d), L2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(H2d), H2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(outd), out)
+    thd = pred.fassa_threshold_device(th, E, 0.95)
+    np.testing.assert_allclose(np.asarray(thd),
+                               pred.fassa_threshold(th, E, 0.95),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_workload_update_device_scatters_only_cohort_rows():
+    """The full-array step touches exactly the cohort's rows of L/H/theta
+    and mirrors the per-cohort numpy predictors on those rows."""
+    import jax.numpy as jnp
+    L, H, E, th = _random_case(n=20, seed=14)
+    ids = np.array([2, 5, 11, 17])
+    e_eff, out, assigned, L2, H2, th2 = pred.workload_update_device(
+        "fassa", L, H, th, jnp.asarray(ids, jnp.int32), E[ids],
+        U=10.0, alpha=0.95, gamma1=3.0, gamma2=1.0, h_cap=24.0,
+        fixed_epochs=15.0)
+    L2, H2, th2 = np.asarray(L2), np.asarray(H2), np.asarray(th2)
+    others = np.setdiff1d(np.arange(20), ids)
+    np.testing.assert_array_equal(L2[others], L[others])
+    np.testing.assert_array_equal(H2[others], H[others])
+    np.testing.assert_array_equal(th2[others], th[others])
+    Lr, Hr, outr = pred.fassa_predict(L[ids], H[ids], E[ids], th[ids],
+                                      3.0, 1.0, h_cap=24.0)
+    np.testing.assert_allclose(L2[ids], Lr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(H2[ids], Hr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out), outr)
+    np.testing.assert_allclose(np.asarray(e_eff),
+                               pred.uploaded_epochs(L[ids], H[ids], E[ids]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(assigned), H[ids], rtol=1e-6)
+
+
+def test_workload_update_device_fixed_workload_baselines():
+    import jax.numpy as jnp
+    L, H, E, th = _random_case(n=16, seed=15)
+    ids = jnp.arange(16, dtype=jnp.int32)
+    for algo, fe in (("fedavg", 7.0), ("fedprox", 7.0), ("oracle", 7.0)):
+        e_eff, out, assigned, L2, H2, th2 = pred.workload_update_device(
+            algo, L, H, th, ids, E, U=10.0, alpha=0.95, gamma1=3.0,
+            gamma2=1.0, h_cap=24.0, fixed_epochs=fe)
+        # fixed-workload algos never touch the task-pair history
+        np.testing.assert_array_equal(np.asarray(L2), L)
+        np.testing.assert_array_equal(np.asarray(H2), H)
+        if algo == "fedavg":
+            np.testing.assert_allclose(
+                np.asarray(e_eff), np.where(E >= fe, fe, 0.0), rtol=1e-6)
+        elif algo == "fedprox":
+            np.testing.assert_allclose(
+                np.asarray(e_eff), np.minimum(E, fe), rtol=1e-6)
+        else:
+            np.testing.assert_allclose(
+                np.asarray(e_eff), np.minimum(E, 24.0), rtol=1e-6)
+
+
+def test_workload_update_device_unknown_algo():
+    import jax.numpy as jnp
+    import pytest
+    L, H, E, th = _random_case(n=4, seed=16)
+    with pytest.raises(ValueError, match="unknown workload algo"):
+        pred.workload_update_device("sgd", L, H, th,
+                                    jnp.arange(4, dtype=jnp.int32), E)
