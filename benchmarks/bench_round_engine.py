@@ -60,7 +60,15 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.hostdev import force_from_env  # noqa: E402
+
+# before jax initializes: lets --shards N time the sharded scan leg on a
+# simulated multi-device host
+force_from_env()
 
 import jax
 import jax.numpy as jnp
@@ -134,7 +142,7 @@ def _seed_round_fn(model, lr, batch_size, max_iters):
 
 
 def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
-                reps: int = 3):
+                reps: int = 3, shards: int = 0, gate_only: bool = False):
     from repro.models.fl_models import make_mclr
 
     spec = SCALES[scale]
@@ -217,9 +225,10 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             sampling="iid", backend=backend, driver="scan",
             block_size=block)
 
-    def timed_scan(backend):
+    def timed_scan(backend, mesh=None, pk=None):
+        pk = packed if pk is None else pk
         seg = engine.make_segment_fn(model, batch_size, max_iters,
-                                     packed.max_n, scan_cfg(backend))
+                                     pk.max_n, scan_cfg(backend), mesh=mesh)
 
         def init_state():
             return {
@@ -235,8 +244,8 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         def run_blocks(state):
             for b in range(n_blocks):
                 ts = jnp.arange(b * block, (b + 1) * block, dtype=jnp.int32)
-                state, stats = seg(state, ts, packed.x, packed.y,
-                                   packed.offsets, packed.lengths,
+                state, stats = seg(state, ts, pk.x, pk.y,
+                                   pk.offsets, pk.lengths,
                                    mu_dev, sigma_dev)
                 jax.device_get(stats)   # the driver's one host pull / block
             return state
@@ -245,7 +254,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             # compile warmup: ONE block — every block shares the [block]
             # ts shape, so the jit cache is already hot for the timed loop
             st, _ = seg(init_state(), jnp.arange(block, dtype=jnp.int32),
-                        packed.x, packed.y, packed.offsets, packed.lengths,
+                        pk.x, pk.y, pk.offsets, pk.lengths,
                         mu_dev, sigma_dev)
             jax.block_until_ready(st["params"])
             state = init_state()
@@ -264,6 +273,22 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             "pallas_iid": timed(engine_round(packed_fns[("iid", "pallas")])),
             "scan": timed_scan("xla"),
             "scan_pallas": timed_scan("pallas")}
+    if shards:
+        # opt-in sharded leg (ISSUE 4): the same fused scan driver with the
+        # client axis sharded over an N-way data mesh (needs N devices —
+        # REPRO_FORCE_HOST_DEVICES simulates them on CPU).  Expect NO
+        # rounds/s win anywhere: each shard still computes all K cohort
+        # slots (non-owned budgets masked), so sharding buys data
+        # residency, not round compute (see RoundEngine._shard_round_core);
+        # on fake CPU devices the leg additionally pays SPMD overhead.
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(shards)
+        pk_sharded = ds.packed(max_n, shards=shards).shard_to(mesh)
+        legs["scan_sharded"] = timed_scan("xla", mesh=mesh, pk=pk_sharded)
+    if gate_only:
+        # scripts/check_bench.py consumes only the scan/engine ratio — time
+        # exactly those two legs so the CI gate pays for nothing else
+        legs = {"iid": legs["iid"], "scan": legs["scan"]}
     # interleave repetitions so machine drift hits every leg equally; report
     # the median rep per leg (robust to contention spikes either way)
     samples = {name: [] for name in legs}
@@ -273,6 +298,20 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             r, final_p[name] = fn()
             samples[name].append(r)
     rps = {name: float(np.median(v)) for name, v in samples.items()}
+    for name in set(rps) & {"iid", "pallas_iid", "scan", "scan_pallas",
+                            "scan_sharded"}:
+        for leaf in jax.tree.leaves(final_p[name]):
+            assert np.isfinite(np.asarray(leaf)).all()
+    if gate_only:
+        return {
+            "scale": scale, "rounds_timed": rounds,
+            "epochs_per_round": epochs, "gate_only": True,
+            "engine_path": {"sampling": "iid",
+                            "rounds_per_sec": round(rps["iid"], 3)},
+            "engine_scan_path": {"driver": "scan", "sampling": "iid",
+                                 "block_size": block,
+                                 "rounds_per_sec": round(rps["scan"], 3)},
+        }
     seed_rps, shuffle_rps, iid_rps = rps["seed"], rps["shuffle"], rps["iid"]
     p_seed, p_shuf, p_iid = final_p["seed"], final_p["shuffle"], final_p["iid"]
     # engine+shuffle AND pallas+shuffle are bit-identical to the seed path
@@ -281,13 +320,17 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         for a, b in zip(jax.tree.leaves(p_seed),
                         jax.tree.leaves(final_p[other])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    for name in ("iid", "pallas_iid", "scan", "scan_pallas"):
-        for leaf in jax.tree.leaves(final_p[name]):
-            assert np.isfinite(np.asarray(leaf)).all()
 
     itemsize = np.dtype(np.float32).itemsize
     restack_bytes = K * max_n * (spec["dim"] + 2) * itemsize  # x + y + mask
+    sharded_leg = {} if not shards else {
+        "engine_scan_sharded_path": {
+            "driver": "scan", "sampling": "iid", "backend": "xla",
+            "block_size": block, "mesh_shards": shards,
+            "data": "client axis sharded over the data mesh (shard_map)",
+            "rounds_per_sec": round(rps["scan_sharded"], 3)}}
     return {
+        **sharded_leg,
         "scale": scale,
         "n_clients": spec["n_clients"],
         "k_selected": K,
@@ -351,8 +394,20 @@ def main():
                     help="local epochs per client per round (kept small so "
                          "the round's data path, which this benchmark "
                          "tracks, is not drowned by local-SGD compute)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="also time the sharded scan leg on an N-way data "
+                         "mesh (needs N devices; simulate on CPU via "
+                         "REPRO_FORCE_HOST_DEVICES=N — measures SPMD "
+                         "overhead there, not a speedup)")
+    ap.add_argument("--gate-only", action="store_true",
+                    help="time only the iid-engine and scan legs and write "
+                         "just their entries (the check_bench.py CI gate); "
+                         "never merged into the committed trajectory file")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args()
+    if args.gate_only and os.path.abspath(args.out) == \
+            os.path.abspath(OUT_PATH):
+        ap.error("--gate-only writes a partial record; pass --out elsewhere")
 
     scales = ("reduced", "paper") if args.scale == "both" else (args.scale,)
     merged = {}
@@ -360,8 +415,15 @@ def main():
         with open(args.out) as f:
             merged = json.load(f)
     for scale in scales:
-        res = bench_scale(scale, args.rounds, args.epochs, reps=args.reps)
+        res = bench_scale(scale, args.rounds, args.epochs, reps=args.reps,
+                          shards=args.shards, gate_only=args.gate_only)
         merged[scale] = res
+        if args.gate_only:
+            print(f"[{scale}] gate legs: engine "
+                  f"{res['engine_path']['rounds_per_sec']:.2f} rounds/s   "
+                  f"scan {res['engine_scan_path']['rounds_per_sec']:.2f} "
+                  f"rounds/s")
+            continue
         print(f"[{scale}] seed path: {res['seed_path_rounds_per_sec']:.2f} "
               f"rounds/s   engine: {res['engine_rounds_per_sec']:.2f} "
               f"rounds/s   speedup: {res['speedup']:.2f}x   scan: "

@@ -1,0 +1,109 @@
+"""Bench-regression gate (ISSUE 4): fail CI when the fused scan driver's
+relative performance regresses.
+
+Reruns the reduced-scale round-engine bench smoke and compares the
+``engine_scan_path`` rounds/s — normalized by the same run's
+``engine_path`` (per-round engine, iid) so absolute runner speed cancels —
+against the ratio recorded in ``BENCH_round_engine.json`` at the repo
+root.  A fresh ratio more than ``--tolerance`` (default 30%) below the
+recorded one fails the job; a faster ratio prints a hint to re-record.
+
+This replaces the old fire-and-forget bench smoke in the ``test`` job:
+the bench still runs on every push, but now a perf regression in the scan
+driver actually turns CI red instead of scrolling by.
+
+  PYTHONPATH=src python scripts/check_bench.py
+  PYTHONPATH=src python scripts/check_bench.py --rounds 20 --tolerance 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RECORDED = os.path.join(REPO, "BENCH_round_engine.json")
+BENCH = os.path.join(REPO, "benchmarks", "bench_round_engine.py")
+SCALE = "reduced"
+
+
+def scan_ratio(entry: dict) -> float:
+    """scan rounds/s normalized by the per-round engine path (iid)."""
+    scan = entry["engine_scan_path"]["rounds_per_sec"]
+    engine = entry["engine_path"]["rounds_per_sec"]
+    return scan / engine
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=30,
+                    help="timed rounds per path in the fresh smoke — the "
+                         "same sampling the recorded ratios used, so the "
+                         "comparison is apples-to-apples")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="interleaved repetitions (median kept)")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max allowed relative regression of the scan/"
+                         "engine ratio vs the recorded one")
+    ap.add_argument("--attempts", type=int, default=2,
+                    help="rerun a failing smoke up to this many times and "
+                         "gate on the BEST ratio — a contention spike on a "
+                         "shared runner should not turn CI red")
+    ap.add_argument("--recorded", default=RECORDED)
+    args = ap.parse_args()
+
+    with open(args.recorded) as f:
+        recorded = json.load(f)
+    if SCALE not in recorded:
+        print(f"check_bench: no '{SCALE}' entry in {args.recorded}")
+        return 1
+    want = scan_ratio(recorded[SCALE])
+
+    floor = (1.0 - args.tolerance) * want
+    got = -1.0
+    tmp = tempfile.mkdtemp(prefix="bench_gate_")
+    for attempt in range(1, max(args.attempts, 1) + 1):
+        out = os.path.join(tmp, f"fresh{attempt}.json")
+        cmd = [sys.executable, BENCH, "--scale", SCALE, "--gate-only",
+               "--rounds", str(args.rounds), "--reps", str(args.reps),
+               "--out", out]
+        print(f"check_bench: reduced bench smoke (attempt {attempt}):",
+              " ".join(cmd), flush=True)
+        rc = subprocess.run(cmd).returncode
+        if rc != 0:
+            print(f"check_bench: bench smoke failed (rc={rc})")
+            return rc
+        with open(out) as f:
+            fresh = json.load(f)[SCALE]
+        got = max(got, scan_ratio(fresh))
+        print(f"check_bench: engine_scan_path/engine_path ratio "
+              f"recorded={want:.3f} fresh={scan_ratio(fresh):.3f} "
+              f"floor={floor:.3f} "
+              f"(scan {fresh['engine_scan_path']['rounds_per_sec']:.1f} "
+              f"rps, engine "
+              f"{fresh['engine_path']['rounds_per_sec']:.1f} rps)")
+        if got >= floor:
+            break
+        if attempt < args.attempts:
+            print("check_bench: below floor — retrying once in case a "
+                  "contention spike hit the scan leg")
+    if got < floor:
+        print(f"check_bench: FAIL — scan-driver throughput regressed "
+              f">{args.tolerance:.0%} vs BENCH_round_engine.json on "
+              f"{args.attempts} attempts; if the slowdown is intended, "
+              f"re-record with benchmarks/bench_round_engine.py "
+              f"--scale both")
+        return 1
+    if got > want * 1.3:
+        print("check_bench: fresh ratio is >30% above the recorded one — "
+              "consider re-recording BENCH_round_engine.json to tighten "
+              "the gate")
+    print("check_bench: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,8 +8,12 @@ re-implements them (DESIGN.md §3, ISSUE 1):
     budgets are not SPMD-able, so every client runs ``max_iters`` slots and
     updates are masked past ``n_iters_k`` — bit-identical to "client k trains
     n_iters_k iterations" with uniform control flow);
-  * the vmapped client axis (K selected clients lead every array; on a mesh
-    this axis shards over ``data``);
+  * the vmapped client axis (K selected clients lead every array; with a
+    ``mesh`` argument the client DATA axis really does shard over ``data``
+    via ``shard_map`` — each shard gathers and trains only the cohort slots
+    it owns and the [K] stacks are rebuilt by an ownership-masked ``psum``,
+    bitwise-identical to the replicated round on shuffle sampling and
+    within 2e-5 on iid; ISSUE 4);
   * pluggable aggregation (``repro.core.aggregation``) — who merges, how.
 
 Three round flavours share that substrate:
@@ -59,6 +63,20 @@ import jax.numpy as jnp
 from repro.core.aggregation import Aggregator, FedAvg
 
 BACKENDS = ("xla", "pallas")
+
+
+def _check_shard_count(flat_x, mesh):
+    """Trace-time guard: the packed layout's shard axis must equal the
+    mesh's ``data`` axis — a divisible mismatch (e.g. a 4-shard layout on a
+    2-way mesh) would pass every sharding check yet silently drop whole
+    client blocks (each device keeps only ``x[0]``) and aggregate exact
+    zeros for the dropped clients' cohort slots."""
+    n_mesh = mesh.shape["data"]
+    if flat_x.shape[0] != n_mesh:
+        raise ValueError(
+            f"packed layout has {flat_x.shape[0]} shards but the mesh data "
+            f"axis has {n_mesh} devices; build it with packed(shards="
+            f"{n_mesh})")
 
 
 def budget_iters(e_eff, n, batch_size: int, max_iters: int):
@@ -217,9 +235,17 @@ class RoundEngine:
             nk_safe = jnp.maximum(nk, 1)
             perm = jnp.argsort(jax.random.uniform(key, (M,))
                                + (1.0 - maskk) * 1e9)
+            # The epoch walk perm[(i*B + arange(B)) % nk] for all steps at
+            # once, scanned as xs.  Bit-identical indices to gathering perm
+            # inside the loop body, but hoisted because XLA 0.4.x CPU
+            # MISCOMPILES a loop-variant dynamic gather of perm under
+            # vmap-inside-shard_map (the sharded path, ISSUE 4) — the iid
+            # path's precomputed idx_all never hit this.
+            idx_all = perm[jnp.arange(max_iters * B).reshape(max_iters, B)
+                           % nk_safe]
 
-            def step(params, i):
-                idx = perm[(i * B + jnp.arange(B)) % nk_safe]
+            def step(params, xs):
+                i, idx = xs
                 batch = {"x": xk[idx], "y": yk[idx],
                          "mask": maskk[idx] * (jnp.arange(B) < nk_safe)}
 
@@ -232,7 +258,7 @@ class RoundEngine:
                                     params, g), None
 
             params, _ = jax.lax.scan(step, global_params,
-                                     jnp.arange(max_iters))
+                                     (jnp.arange(max_iters), idx_all))
             # seed semantics: post-training loss over the full shard
             final_loss = model.loss(params, {"x": xk, "y": yk, "mask": maskk})
             return params, final_loss
@@ -300,6 +326,27 @@ class RoundEngine:
         return self._jit_round(round_fn)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _cohort_gather(max_n: int, backend: str) -> Callable:
+        """gather(flat_x, flat_y, offs [K], n [K]) -> (x [K, max_n, ...],
+        y [K, max_n], mask [K, max_n]) — XLA clamp-gather or the pallas
+        fed_gather kernel.  Works on the global flat arrays and on a
+        shard-local slice alike (both honour the max_n tail-slack
+        contract)."""
+        if backend == "pallas":
+            def gather(flat_x, flat_y, offs, n):
+                from repro.kernels import ops as kops
+                return kops.fed_cohort_gather(flat_x, flat_y, offs, n, max_n)
+            return gather
+
+        def gather(flat_x, flat_y, offs, n):
+            total = flat_x.shape[0]
+            pos = jnp.arange(max_n)
+            idx = jnp.minimum(offs[:, None] + pos[None, :], total - 1)
+            mask = (pos[None, :] < n[:, None]).astype(jnp.float32)
+            return flat_x[idx], flat_y[idx], mask
+        return gather
+
     def _packed_round_body(self, model, batch_size: int, max_iters: int,
                            max_n: int, sampling: str = "shuffle",
                            backend: Optional[str] = None) -> Callable:
@@ -310,19 +357,7 @@ class RoundEngine:
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         local_train = None if fuse_sgd else \
             self._local_sgd(model, batch_size, max_iters, sampling)
-
-        def gather_xla(flat_x, flat_y, offs, n):
-            total = flat_x.shape[0]
-            pos = jnp.arange(max_n)
-            idx = jnp.minimum(offs[:, None] + pos[None, :], total - 1)
-            mask = (pos[None, :] < n[:, None]).astype(jnp.float32)
-            return flat_x[idx], flat_y[idx], mask
-
-        def gather_pallas(flat_x, flat_y, offs, n):
-            from repro.kernels import ops as kops
-            return kops.fed_cohort_gather(flat_x, flat_y, offs, n, max_n)
-
-        gather = gather_pallas if backend == "pallas" else gather_xla
+        gather = self._cohort_gather(max_n, backend)
 
         def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
                      n_iters, rng):
@@ -379,7 +414,8 @@ class RoundEngine:
 
     def make_packed_round(self, model, batch_size: int, max_iters: int,
                           max_n: int, sampling: str = "shuffle",
-                          backend: Optional[str] = None) -> Callable:
+                          backend: Optional[str] = None,
+                          mesh=None) -> Callable:
         """Device-resident round: cohort gather from packed client data.
 
         round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
@@ -394,16 +430,154 @@ class RoundEngine:
         are masked out of every loss and never enter batch sampling, so with
         ``sampling="shuffle"`` BOTH backends are bit-identical to the padded
         path (proved by tests/test_engine.py and tests/test_fed_kernels.py).
+
+        ``mesh`` (ISSUE 4): a 1-D ``data`` mesh.  The packed arrays must
+        then carry the sharded [S, ...] layout (``packed(shards=S)``); the
+        gather + budgeted local SGD run under ``shard_map`` with each shard
+        training only the cohort slots it owns (see
+        :meth:`_sharded_round_fn`).  Bitwise-identical to the replicated
+        round on shuffle sampling; within 2e-5 on iid (observed bitwise,
+        only the tolerance is guaranteed — tests/test_sharding.py).
         """
+        if mesh is not None:
+            return self._jit_round(self._sharded_round_fn(
+                model, batch_size, max_iters, max_n, sampling, backend,
+                mesh))
         return self._jit_round(self._packed_round_body(
             model, batch_size, max_iters, max_n, sampling, backend))
+
+    # ------------------------------------------------------------------
+    # sharded rounds (ISSUE 4): the client axis lives on the `data` mesh
+    # ------------------------------------------------------------------
+    def _shard_round_core(self, model, batch_size: int, max_iters: int,
+                          max_n: int, sampling: str = "shuffle",
+                          backend: Optional[str] = None) -> Callable:
+        """Per-shard cohort compute; must run inside ``shard_map`` over the
+        ``data`` axis.
+
+        core(global_params, flat_x, flat_y, offsets, lengths, ids, n_iters,
+             rng) -> (params_k [K, ...], losses [K])   — both replicated
+
+        Arguments are the SHARD-LOCAL packed arrays (leading shard axis
+        already stripped); ``ids``/``n_iters``/``rng`` are replicated.  Each
+        shard resolves which cohort slots it owns (``ids // C ==
+        axis_index``), gathers and trains ONLY from its local flat arrays
+        (non-owned slots run with a zero budget and are masked out), then
+        the [K] stacks are rebuilt with an ownership-masked ``psum``: every
+        slot is owned by exactly one shard and all other shards contribute
+        exact zeros, so the reduction is bitwise the replicated stack — and
+        arbitrary aggregators (median, Krum, ...) stay pluggable because
+        they still see the full per-client stack.
+
+        All three compute paths mirror their replicated twins so parity is
+        by construction: pallas fused SGD, XLA direct-iid packed indexing,
+        and the gather + vmapped local-SGD scan (either gather backend).
+
+        Scaling note: every shard still runs all K cohort slots (non-owned
+        ones with a zero budget — masked, not skipped), so sharding scales
+        DATA residency (each device holds 1/S of the federation, the
+        blocker for paper-scale populations) but not the local-SGD compute
+        of a round.  Compacting each shard to its ~K/S owned slots would
+        add compute scaling, but a cohort can be arbitrarily unbalanced —
+        worst case every selected client lives on one shard — so a static
+        SPMD capacity must either stay K or adopt overflow/drop semantics
+        that break bitwise parity with the replicated round; see ROADMAP.
+        """
+        backend = self._resolve_backend(backend)
+        fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
+        direct_iid = backend == "xla" and sampling == "iid"
+        iid_core = self._iid_sgd_core(model, batch_size, max_iters) \
+            if direct_iid else None
+        local_train = None if (fuse_sgd or direct_iid) else \
+            self._local_sgd(model, batch_size, max_iters, sampling)
+        gather = self._cohort_gather(max_n, backend)
+
+        def core(global_params, flat_x, flat_y, offsets, lengths, ids,
+                 n_iters, rng):
+            s = jax.lax.axis_index("data")
+            C = offsets.shape[0]
+            own = (ids // C) == s
+            local = jnp.where(own, ids % C, 0)
+            offs = offsets[local]
+            n = jnp.where(own, jnp.minimum(lengths[local], max_n), 0)
+            iters = jnp.where(own, n_iters, 0)
+            keys = jax.random.split(rng, ids.shape[0])
+            if fuse_sgd:
+                x, y, _ = gather(flat_x, flat_y, offs, n)
+                params_k, losses = self._fused_sgd(
+                    global_params, x, y, n, iters, keys,
+                    batch_size, max_iters)
+            elif direct_iid:
+                def local_fn(off_k, nk, it, key):
+                    return iid_core(global_params,
+                                    lambda idx: (flat_x[off_k + idx],
+                                                 flat_y[off_k + idx]),
+                                    nk, it, key)
+
+                params_k, losses = jax.vmap(local_fn)(offs, n, iters, keys)
+            else:
+                x, y, mask = gather(flat_x, flat_y, offs, n)
+                params_k, losses = jax.vmap(
+                    local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                    global_params, x, y, mask, n, iters, keys)
+
+            def mask_slots(p):
+                shape = (-1,) + (1,) * (p.ndim - 1)
+                return jnp.where(own.reshape(shape), p,
+                                 jnp.zeros((), p.dtype))
+
+            params_k = jax.tree.map(
+                lambda p: jax.lax.psum(mask_slots(p), "data"), params_k)
+            losses = jax.lax.psum(
+                jnp.where(own, losses, jnp.zeros((), losses.dtype)), "data")
+            return params_k, losses
+
+        return core
+
+    def _sharded_round_fn(self, model, batch_size: int, max_iters: int,
+                          max_n: int, sampling: str, backend: Optional[str],
+                          mesh) -> Callable:
+        """Un-jitted sharded packed round: ``shard_map`` around
+        :meth:`_shard_round_core`, aggregation on the psum-rebuilt stack."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding.rules import shard_map_unchecked
+
+        core = self._shard_round_core(model, batch_size, max_iters, max_n,
+                                      sampling, backend)
+
+        def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
+                     n_iters, rng):
+            _check_shard_count(flat_x, mesh)
+
+            def shard_fn(gp, x, y, offs, lens, ids_, it_, rng_):
+                return core(gp, x[0], y[0], offs[0], lens[0], ids_, it_,
+                            rng_)
+
+            params_k, losses = shard_map_unchecked(
+                shard_fn, mesh,
+                in_specs=(P(), P("data"), P("data"), P("data"), P("data"),
+                          P(), P(), P()),
+                out_specs=(P(), P()))(
+                global_params, flat_x, flat_y, offsets, lengths, ids,
+                n_iters, rng)
+            # [S, C] lengths flatten to global-id order (shard s owns the
+            # contiguous block [s*C, (s+1)*C)), so the aggregation weights
+            # match the replicated round exactly
+            n = jnp.minimum(lengths.reshape(-1)[ids], max_n)
+            new_global, any_up = self._finish(global_params, params_k,
+                                              n, n_iters)
+            return new_global, losses, any_up
+
+        return round_fn
 
     # ------------------------------------------------------------------
     # fused multi-round segment: whole training blocks in one lax.scan
     # ------------------------------------------------------------------
     def make_segment_fn(self, model, batch_size: int, max_iters: int,
                         max_n: int, cfg, sampling: Optional[str] = None,
-                        backend: Optional[str] = None) -> Callable:
+                        backend: Optional[str] = None,
+                        mesh=None) -> Callable:
         """Fuse whole FedSAE training segments into one jitted ``lax.scan``.
 
         segment_fn(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma)
@@ -441,6 +615,15 @@ class RoundEngine:
         All float state is pinned float32 (also under ``jax_enable_x64``);
         the carried history never leaves device, so a block is one XLA
         program and one dispatch.
+
+        ``mesh`` (ISSUE 4): a 1-D ``data`` mesh shards the whole segment —
+        packed arrays arrive in the [S, ...] sharded layout, the cohort is
+        selected by a local-top-k -> all-gather -> global-merge (bitwise
+        the replicated Gumbel-top-k), each shard trains only the cohort
+        slots it owns (:meth:`_shard_round_core`), and the history /
+        ValueTracker math runs replicated on every shard.  One ``shard_map``
+        wraps the whole block, so the scan still dispatches once per
+        segment.
         """
         from repro.core import prediction as pred
         from repro.core.heterogeneity import sample_workloads_device
@@ -450,12 +633,6 @@ class RoundEngine:
         sampling = cfg.sampling if sampling is None else sampling
         backend = self._resolve_backend(
             getattr(cfg, "backend", None) if backend is None else backend)
-        if backend == "xla" and sampling == "iid":
-            round_body = self._direct_iid_round_body(
-                model, batch_size, max_iters, max_n)
-        else:
-            round_body = self._packed_round_body(
-                model, batch_size, max_iters, max_n, sampling, backend)
 
         algo = cfg.algo
         K = int(cfg.n_selected)
@@ -467,27 +644,28 @@ class RoundEngine:
             gamma1=float(cfg.gamma1), gamma2=float(cfg.gamma2),
             h_cap=float(cfg.h_cap), fixed_epochs=float(cfg.fixed_epochs))
 
-        def segment(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma):
+        def make_one_round(select, train, sizes, mu, sigma):
+            """The per-round server step, shared verbatim by the replicated
+            and the sharded segment — only cohort selection, the training
+            dispatch and the client-size lookup differ between them."""
+
             def one_round(carry, t):
                 params = carry["params"]
                 L, H, theta = carry["L"], carry["H"], carry["theta"]
                 values = carry["values"]
                 sel_rng, k_sel, k_het = jax.random.split(carry["sel_rng"], 3)
                 E_all = sample_workloads_device(k_het, mu, sigma)
-                ids = select_cohort_device(k_sel, values, K, strategy, beta,
-                                           use_al=t < al_rounds)
+                ids = select(k_sel, values, t)
                 E_true = E_all[ids]
                 e_eff, outcome, assigned, L, H, theta = \
                     pred.workload_update_device(algo, L, H, theta, ids,
                                                 E_true, **wl_kwargs)
-                n = jnp.minimum(lengths[ids], max_n)
+                n = jnp.minimum(sizes[ids], max_n)
                 n_iters = budget_iters(e_eff, n, batch_size, max_iters)
                 data_rng, sub = jax.random.split(carry["data_rng"])
-                params, losses, _ = round_body(
-                    params, flat_x, flat_y, offsets, lengths, ids,
-                    n_iters, sub)
+                params, losses = train(params, ids, n_iters, sub)
                 uploaded = n_iters > 0
-                values = value_update_device(values, lengths, ids, losses,
+                values = value_update_device(values, sizes, ids, losses,
                                              uploaded)
                 upf = uploaded.astype(jnp.float32)
                 n_up = upf.sum()
@@ -508,9 +686,92 @@ class RoundEngine:
                              "data_rng": data_rng, "sel_rng": sel_rng}
                 return new_carry, stats
 
+            return one_round
+
+        if mesh is not None:
+            return self._jit_round(self._sharded_segment(
+                model, batch_size, max_iters, max_n, sampling, backend,
+                mesh, K, strategy, beta, al_rounds, make_one_round))
+
+        if backend == "xla" and sampling == "iid":
+            round_body = self._direct_iid_round_body(
+                model, batch_size, max_iters, max_n)
+        else:
+            round_body = self._packed_round_body(
+                model, batch_size, max_iters, max_n, sampling, backend)
+
+        def segment(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma):
+            def select(k_sel, values, t):
+                return select_cohort_device(k_sel, values, K, strategy,
+                                            beta, use_al=t < al_rounds)
+
+            def train(params, ids, n_iters, sub):
+                params, losses, _ = round_body(
+                    params, flat_x, flat_y, offsets, lengths, ids,
+                    n_iters, sub)
+                return params, losses
+
+            one_round = make_one_round(select, train, lengths, mu, sigma)
             return jax.lax.scan(one_round, state, ts)
 
         return self._jit_round(segment)
+
+    def _sharded_segment(self, model, batch_size: int, max_iters: int,
+                         max_n: int, sampling: str, backend: str, mesh,
+                         K: int, strategy: str, beta: float, al_rounds: int,
+                         make_one_round) -> Callable:
+        """Un-jitted sharded multi-round segment: one ``shard_map`` around
+        the whole ``lax.scan`` block (see :meth:`make_segment_fn`)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.selection import (_cohort_scores,
+                                          local_topk_candidates,
+                                          merge_topk_candidates, pad_scores)
+        from repro.sharding.rules import shard_map_unchecked
+
+        core = self._shard_round_core(model, batch_size, max_iters, max_n,
+                                      sampling, backend)
+        n_shards = mesh.shape["data"]
+
+        def segment(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma):
+            _check_shard_count(flat_x, mesh)
+
+            def shard_seg(state, ts, x, y, offs, lens, mu, sigma):
+                x, y, offs, lens = x[0], y[0], offs[0], lens[0]
+                s = jax.lax.axis_index("data")
+                C = offs.shape[0]
+                # global client sizes in id order — replicated, tiny
+                sizes = jax.lax.all_gather(lens, "data").reshape(-1)
+
+                def select(k_sel, values, t):
+                    scores = _cohort_scores(k_sel, values, strategy, beta,
+                                            use_al=t < al_rounds)
+                    scores_pad, _ = pad_scores(scores, n_shards)
+                    vals, gids = local_topk_candidates(scores_pad, s, C, K)
+                    cand_v = jax.lax.all_gather(vals, "data")
+                    cand_i = jax.lax.all_gather(gids, "data")
+                    return merge_topk_candidates(cand_v, cand_i,
+                                                 n_shards * C, K)
+
+                def train(params, ids, n_iters, sub):
+                    params_k, losses = core(params, x, y, offs, lens, ids,
+                                            n_iters, sub)
+                    n = jnp.minimum(sizes[ids], max_n)
+                    new_global, _ = self._finish(params, params_k, n,
+                                                 n_iters)
+                    return new_global, losses
+
+                one_round = make_one_round(select, train, sizes, mu, sigma)
+                return jax.lax.scan(one_round, state, ts)
+
+            return shard_map_unchecked(
+                shard_seg, mesh,
+                in_specs=(P(), P(), P("data"), P("data"), P("data"),
+                          P("data"), P(), P()),
+                out_specs=(P(), P()))(
+                state, ts, flat_x, flat_y, offsets, lengths, mu, sigma)
+
+        return segment
 
     # ------------------------------------------------------------------
     def make_stream_round(self, loss_fn: Callable, max_steps: int,

@@ -139,6 +139,20 @@ def _strategy_logits(strategy: str, v, beta: float):
         f"choose from {sorted(SELECTIONS)}")
 
 
+def _cohort_scores(key, values, strategy: str, beta: float, use_al):
+    """The perturbed Gumbel-top-k scores every selection variant ranks by.
+
+    Shared by the replicated ``select_cohort_device``, the mesh-free merge
+    ``select_cohort_sharded`` and the per-shard path inside the engine's
+    ``shard_map`` — same key, same logits, same gumbel field, so all three
+    rank bitwise-identical scores.
+    """
+    v = jnp.asarray(values, jnp.float32)
+    base = _strategy_logits(strategy, v, beta)
+    base = jnp.where(use_al, _strategy_logits("active", v, beta), base)
+    return base + jax.random.gumbel(key, v.shape, jnp.float32)
+
+
 def select_cohort_device(key, values, k: int, strategy: str = "random",
                          beta: float = 0.01, use_al=False):
     """Select k distinct clients on device (Gumbel top-k, float32).
@@ -148,12 +162,77 @@ def select_cohort_device(key, values, k: int, strategy: str = "random",
     cross the ``al_rounds`` warm-up boundary inside a block without
     retracing.
     """
-    v = jnp.asarray(values, jnp.float32)
-    base = _strategy_logits(strategy, v, beta)
-    base = jnp.where(use_al, _strategy_logits("active", v, beta), base)
-    g = jax.random.gumbel(key, v.shape, jnp.float32)
-    _, ids = jax.lax.top_k(base + g, k)
+    _, ids = jax.lax.top_k(_cohort_scores(key, values, strategy, beta,
+                                          use_al), k)
     return ids.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# sharded selection — local top-k per client shard, merged globally
+# ---------------------------------------------------------------------------
+#
+# With the client axis sharded over the ``data`` mesh (ISSUE 4), shard s owns
+# the contiguous score block [s*C, (s+1)*C).  Each shard takes a LOCAL
+# top-min(k, C) of its block; the (score, global id) candidate pairs are
+# all-gathered; the merged winners come from a top-k over an N_pad-long
+# sparse vector holding candidate scores at their global ids and -inf
+# everywhere else.  Because every shard forwards at least min(k, C)
+# candidates, the candidate set provably contains the global top-k, and
+# because the sparse vector preserves global id positions, ties resolve at
+# the same indices as the replicated top-k — the merged cohort is
+# BITWISE-IDENTICAL to ``select_cohort_device`` (the property test in
+# tests/test_sharding.py drives this over strategies x shard counts,
+# including ghost-padded shards that contribute no eligible client).
+
+
+def local_topk_candidates(scores_pad, shard: int, clients_per_shard: int,
+                          k: int):
+    """Shard-local candidates: (scores [kk], global ids [kk]) with
+    kk = min(k, C).  ``scores_pad`` is the [N_pad] score vector (-inf on
+    ghost rows); ``shard`` may be traced (lax.axis_index inside shard_map).
+    """
+    C = clients_per_shard
+    block = jax.lax.dynamic_slice(scores_pad, (shard * C,), (C,))
+    vals, local = jax.lax.top_k(block, min(k, C))
+    return vals, (local + shard * C).astype(jnp.int32)
+
+
+def merge_topk_candidates(cand_scores, cand_ids, n_pad: int, k: int):
+    """Global merge: scatter candidates into a [n_pad] sparse score vector
+    (-inf elsewhere — candidate ids are disjoint across shards) and re-rank.
+    """
+    sparse = jnp.full((n_pad,), -jnp.inf, jnp.float32)
+    sparse = sparse.at[cand_ids.reshape(-1)].set(
+        cand_scores.reshape(-1).astype(jnp.float32))
+    _, ids = jax.lax.top_k(sparse, k)
+    return ids.astype(jnp.int32)
+
+
+def pad_scores(scores, n_shards: int):
+    """Ghost-pad a [N] score vector to [S * ceil(N/S)] with -inf so ghost
+    rows (clients that do not exist) can never win a merge."""
+    N = scores.shape[0]
+    C = -(-N // n_shards)
+    return jnp.concatenate(
+        [scores, jnp.full((n_shards * C - N,), -jnp.inf, jnp.float32)]), C
+
+
+def select_cohort_sharded(key, values, k: int, n_shards: int,
+                          strategy: str = "random", beta: float = 0.01,
+                          use_al=False):
+    """Mesh-free twin of the sharded local-top-k -> global-merge selection.
+
+    Runs every shard's local top-k in one reshape (no mesh required), then
+    the same merge the engine performs after its all-gather — returns the
+    exact ids ``select_cohort_device`` returns, for any shard count.
+    """
+    scores = _cohort_scores(key, values, strategy, beta, use_al)
+    scores_pad, C = pad_scores(scores, n_shards)
+    kk = min(k, C)
+    vals, local = jax.lax.top_k(scores_pad.reshape(n_shards, C), kk)
+    gids = (local + jnp.arange(n_shards, dtype=jnp.int32)[:, None] * C)
+    return merge_topk_candidates(vals, gids.astype(jnp.int32),
+                                 n_shards * C, k)
 
 
 def value_update_device(values, sizes, ids, losses, uploaded):

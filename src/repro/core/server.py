@@ -36,6 +36,28 @@ necessarily differ from the numpy generators, so a scan run is NOT bitwise
 comparable to a default host run — it IS bitwise comparable (same cohorts,
 same budgets) to a host run with ``rng_impl="device"`` and the same seeds
 (tests/test_scan_driver.py).
+
+Mesh sharding (``ServerConfig.mesh_shards``, ISSUE 4): with ``mesh_shards
+= S`` the client axis is sharded over an S-way 1-D ``data`` mesh
+(``launch.mesh.make_data_mesh``) instead of replicated.  The packed
+federation is built in the sharded [S, ...] layout (shard s owns the
+contiguous client block [s*C, (s+1)*C), ghost-padded when S does not
+divide the population) and device_put with the ``clients -> data`` rule
+from ``sharding.rules``; both drivers then run their round inside
+``shard_map``: each shard gathers and trains ONLY the cohort slots it
+owns, cohort selection becomes a local-top-k -> all-gather -> global
+merge (bitwise the replicated Gumbel-top-k), and aggregation consumes the
+per-slot stack rebuilt by an ownership-masked ``psum`` (every slot owned
+by exactly one shard, exact zeros elsewhere) so arbitrary aggregators
+stay pluggable.  Sharded runs are BITWISE identical to replicated runs on
+shuffle sampling and within 2e-5 on iid (observed bitwise there too, but
+only the tolerance is guaranteed — tests/test_sharding.py), on both
+drivers and both backends; history state (L/H/theta/values) stays
+replicated — O(N) floats.  Needs S
+devices: on CPU simulate them with REPRO_FORCE_HOST_DEVICES=S (or
+``launch.hostdev.force_host_devices``) before jax initializes, as the CI
+``multi-device`` job does.  True multi-host (process-spanning mesh,
+per-host data loading) remains future work — see ROADMAP.
 """
 from __future__ import annotations
 
@@ -90,6 +112,10 @@ class ServerConfig:
                                  # | scan (block_size rounds fused into one
                                  # jitted lax.scan — the fast path)
     block_size: int = 16         # rounds per fused segment (driver="scan")
+    mesh_shards: int = 0         # 0 = replicated clients (default); N >= 1
+                                 # shards the client axis over an N-way
+                                 # `data` mesh (needs N devices; on CPU
+                                 # simulate via hostdev.force_host_devices)
     rng_impl: str = ""           # "" auto (numpy for host, device for scan)
                                  # | numpy | device — which PRNG streams
                                  # drive heterogeneity/selection
@@ -131,8 +157,18 @@ class FedSAEServer:
         budget = max(cfg.h_cap, cfg.fixed_epochs)
         self.max_iters = int(math.ceil(budget * tau_max))
 
-        # one-time device upload: rounds gather their cohort on device
-        self.packed = dataset.packed(self.max_n)
+        # one-time device upload: rounds gather their cohort on device.
+        # With mesh_shards set the client axis is sharded over the `data`
+        # mesh (ISSUE 4): each device holds only its block of clients and
+        # the round runs under shard_map.
+        if cfg.mesh_shards:
+            from repro.launch.mesh import make_data_mesh
+            self.mesh = make_data_mesh(cfg.mesh_shards)
+            self.packed = dataset.packed(
+                self.max_n, shards=cfg.mesh_shards).shard_to(self.mesh)
+        else:
+            self.mesh = None
+            self.packed = dataset.packed(self.max_n)
         self._mu_dev, self._sigma_dev = self.het.device_params()
         agg_kwargs = {}
         if cfg.aggregator == "trimmed_mean":
@@ -145,10 +181,10 @@ class FedSAEServer:
             prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else None)
         self.round_fn = self.engine.make_packed_round(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
-            sampling=cfg.sampling, backend=cfg.backend)
+            sampling=cfg.sampling, backend=cfg.backend, mesh=self.mesh)
         self.segment_fn = self.engine.make_segment_fn(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
-            cfg) if cfg.driver == "scan" else None
+            cfg, mesh=self.mesh) if cfg.driver == "scan" else None
         self.block_size = max(1, int(cfg.block_size))
         self.select_fn = get_selection(cfg.selection)
         self.eval_fn = make_eval_fn(model)

@@ -35,12 +35,55 @@ class PackedClients:
     is in bounds — the contract the Pallas ``fed_gather`` kernel DMAs
     against (kernels/fed_gather.py).  The slack rows are masked out of every
     statistic like any other padding.
+
+    Sharded layout (ISSUE 4, ``packed(shards=S)``): every array gains a
+    leading shard axis that maps onto the ``data`` mesh axis.  Shard ``s``
+    owns the contiguous client block ``[s * C, (s + 1) * C)`` where
+    ``C = clients_per_shard``, so global client ``g`` lives on shard
+    ``g // C`` at local row ``g % C``.  Each shard's flat arrays hold only
+    its own clients' samples (plus the same ``max_n`` tail-slack contract,
+    per shard, then zero-padding up to a common length so the shards
+    stack); ``offsets`` are shard-local.  The last shard may own ghost
+    clients (``lengths == 0``) when S does not divide the population —
+    ghosts are never selected and gather nothing.
     """
-    x: object         # jnp [total + max_n, ...feat]
-    y: object         # jnp [total + max_n] int32
-    offsets: object   # jnp [n_clients] int32
-    lengths: object   # jnp [n_clients] int32
+    x: object         # jnp [total + max_n, ...feat]  (sharded: [S, L, ...])
+    y: object         # jnp [total + max_n] int32     (sharded: [S, L])
+    offsets: object   # jnp [n_clients] int32         (sharded: [S, C], local)
+    lengths: object   # jnp [n_clients] int32         (sharded: [S, C])
     max_n: int        # cohort shard width; consumed by make_packed_round
+    n_shards: int = 0          # 0 = unsharded flat layout
+    clients_per_shard: int = 0  # C (sharded layouts only)
+
+    def shard_to(self, mesh):
+        """Place the shard axis on the mesh's ``data`` axis (one-time
+        device_put; the logical->physical mapping goes through the shared
+        ``sharding.rules`` table, same as the transformer stack)."""
+        import jax
+        from jax.sharding import NamedSharding
+
+        from repro.sharding.rules import logical_spec
+
+        if not self.n_shards:
+            raise ValueError("shard_to() requires a sharded layout "
+                             "(FederatedDataset.packed(shards=S))")
+        mesh_shards = mesh.shape["data"]
+        if self.n_shards != mesh_shards:
+            # a divisible mismatch would otherwise pass every sharding
+            # check and silently drop whole client blocks in the engine
+            raise ValueError(
+                f"layout has {self.n_shards} shards but the mesh data axis "
+                f"has {mesh_shards} devices; repack with shards="
+                f"{mesh_shards}")
+
+        def put(a):
+            spec = logical_spec(a.shape, ("clients",) + (None,) * (a.ndim - 1),
+                                mesh=mesh)
+            return jax.device_put(a, NamedSharding(mesh, spec))
+
+        return dataclasses.replace(
+            self, x=put(self.x), y=put(self.y), offsets=put(self.offsets),
+            lengths=put(self.lengths))
 
 
 @dataclasses.dataclass
@@ -80,16 +123,26 @@ class FederatedDataset:
             mask[j, :n] = 1.0
         return x, y, mask, np.minimum(ns, m)
 
-    def packed(self, max_n: Optional[int] = None) -> PackedClients:
+    def packed(self, max_n: Optional[int] = None,
+               shards: Optional[int] = None) -> PackedClients:
         """One-time device upload of the whole federation (see PackedClients).
 
         ``max_n`` bounds the per-round cohort shard width (defaults to the
         largest client), mirroring ``stacked``'s padding width.
+
+        ``shards`` (ISSUE 4) selects the sharded layout: clients are split
+        into ``shards`` contiguous blocks of ``C = ceil(N / shards)``
+        (ghost-padded with empty clients when the population does not
+        divide), each block's samples concatenated into its own flat array
+        with the same ``max_n`` tail-slack contract, all blocks zero-padded
+        to a common flat length so the arrays stack [S, L, ...].
         """
         import jax.numpy as jnp  # lazy: generators stay importable sans jax
 
         ns = self.sizes
         m = int(max_n or ns.max())
+        if shards:
+            return self._packed_sharded(int(shards), m)
         offsets = np.zeros(len(ns), np.int64)
         np.cumsum(ns[:-1], out=offsets[1:])
         # max_n rows of tail slack: every per-client [offset, offset+max_n)
@@ -104,6 +157,38 @@ class FederatedDataset:
             offsets=jnp.asarray(offsets, jnp.int32),
             lengths=jnp.asarray(ns, jnp.int32),
             max_n=m)
+
+    def _packed_sharded(self, shards: int, max_n: int) -> PackedClients:
+        import jax.numpy as jnp
+
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        N = self.n_clients
+        C = -(-N // shards)                       # ceil: ghost-pad the tail
+        ns = self.sizes
+        feat = self.clients_x[0].shape[1:]
+        dtype = self.clients_x[0].dtype
+        # common flat length: widest shard's samples + max_n tail slack
+        blocks = [list(range(s * C, min((s + 1) * C, N)))
+                  for s in range(shards)]
+        L = max((int(ns[b].sum()) if b else 0) for b in blocks) + max_n
+        x = np.zeros((shards, L) + feat, dtype)
+        y = np.zeros((shards, L), np.int32)
+        offsets = np.zeros((shards, C), np.int32)
+        lengths = np.zeros((shards, C), np.int32)
+        for s, block in enumerate(blocks):
+            pos = 0
+            for j, g in enumerate(block):
+                n = len(self.clients_y[g])
+                offsets[s, j] = pos
+                lengths[s, j] = n
+                x[s, pos:pos + n] = self.clients_x[g]
+                y[s, pos:pos + n] = self.clients_y[g]
+                pos += n
+        return PackedClients(
+            x=jnp.asarray(x), y=jnp.asarray(y),
+            offsets=jnp.asarray(offsets), lengths=jnp.asarray(lengths),
+            max_n=max_n, n_shards=shards, clients_per_shard=C)
 
 
 def power_law_sizes(rng: np.random.Generator, n_clients: int, total: int,

@@ -1,5 +1,6 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.hostdev import force_host_devices
+force_host_devices(512)   # before any jax import — see module docstring
 
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production mesh, prove it partitions, and extract the roofline terms.
@@ -10,8 +11,9 @@ the production mesh, prove it partitions, and extract the roofline terms.
 
 Each run writes experiments/dryrun/<arch>__<shape>__<mesh>.json with
 memory_analysis, cost_analysis, collective breakdown and roofline terms.
-NOTE: the XLA_FLAGS line above must execute before any other jax import —
-do not move it (and never set it globally; smoke tests want 1 device).
+NOTE: the force_host_devices call above must execute before any other jax
+import — do not move it (and never set it globally; smoke tests want 1
+device).  It APPENDS to a pre-existing XLA_FLAGS rather than clobbering it.
 """
 import argparse
 import json

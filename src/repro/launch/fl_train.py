@@ -16,6 +16,12 @@ from __future__ import annotations
 
 import argparse
 
+from repro.launch.hostdev import force_from_env
+
+# before the jax backend initializes: lets --shards N run on a simulated
+# multi-device host (the CI multi-device smoke)
+force_from_env()
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -50,7 +56,8 @@ def run_flat(args):
                        sampling=args.sampling,
                        backend=args.backend,
                        driver=args.driver,
-                       block_size=args.block_size)
+                       block_size=args.block_size,
+                       mesh_shards=args.shards)
     srv = FedSAEServer(ds, model, cfg,
                        het=HeterogeneitySim(ds.n_clients, seed=cfg.seed))
     hist = srv.run(verbose=True)
@@ -118,6 +125,11 @@ def main():
                          "a single host sync per block (the fast path)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="rounds per fused segment (driver=scan)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard the client axis over an N-way data mesh "
+                         "(0 = replicated; needs N devices — set "
+                         "REPRO_FORCE_HOST_DEVICES/XLA_FLAGS to simulate "
+                         "them on CPU before jax initializes)")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--silo-arch", default=None)
     ap.add_argument("--silos", type=int, default=4)

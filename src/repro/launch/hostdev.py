@@ -1,0 +1,43 @@
+"""Simulated host devices: force N CPU devices via XLA_FLAGS.
+
+Deliberately jax-import-free so callers (dryrun, conftest, CI) can set the
+flag BEFORE the jax backend initializes — once a backend exists the flag is
+ignored.  Appends to any pre-existing XLA_FLAGS instead of overwriting them
+(the dryrun regression ISSUE 4 fixes), replacing only a previous
+``--xla_force_host_platform_device_count`` so repeated calls are idempotent.
+"""
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int) -> str:
+    """Set ``--xla_force_host_platform_device_count=n`` in XLA_FLAGS,
+    preserving every other flag already there.  Returns the new value.
+
+    Must run before the jax backend initializes (i.e. before the first
+    ``jax.devices()`` / array op — importing jax alone is fine).
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"device count must be >= 1, got {n}")
+    parts = [p for p in os.environ.get("XLA_FLAGS", "").split()
+             if not p.startswith(_FLAG + "=")]
+    parts.append(f"{_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(parts)
+    return os.environ["XLA_FLAGS"]
+
+
+def force_from_env(var: str = "REPRO_FORCE_HOST_DEVICES") -> bool:
+    """Apply :func:`force_host_devices` from the ``var`` env knob if set.
+
+    The single entry-point preamble shared by tests/conftest.py, fl_train
+    and the round-engine bench (each must call it before their first jax
+    device use); returns whether a count was applied."""
+    n = os.environ.get(var, "")
+    if not n:
+        return False
+    force_host_devices(int(n))
+    return True

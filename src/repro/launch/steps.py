@@ -33,8 +33,10 @@ def _flat_by_path(tree, is_leaf=None):
 def shardings_from_specs(mesh, shapes_tree, specs_tree):
     """NamedSharding tree matching shapes_tree, using logical-axis specs.
 
-    Must run under ``jax.sharding.use_mesh(mesh)`` (logical_spec reads the
-    ambient abstract mesh for divisibility filtering).
+    The concrete ``mesh`` is passed straight to ``logical_spec`` for
+    divisibility filtering, so this works on JAX versions with no abstract
+    ambient mesh too (where in-model ``shard()`` annotations degrade to
+    no-ops but the explicit in/out shardings still partition).
     """
     shapes_flat, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
     specs_by_path = _flat_by_path(specs_tree, is_leaf=_is_spec_leaf)
@@ -47,7 +49,8 @@ def shardings_from_specs(mesh, shapes_tree, specs_tree):
             spec = P()
         else:
             spec = logical_spec(leaf.shape, list(axes) +
-                                [None] * (len(leaf.shape) - len(axes)))
+                                [None] * (len(leaf.shape) - len(axes)),
+                                mesh=mesh)
         leaves.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(shapes_tree), leaves)

@@ -19,6 +19,7 @@ from jax.sharding import PartitionSpec as P
 DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "batch": ("pod", "data"),        # data parallel over pod+data
     "cache_batch": ("pod", "data"),  # decode KV/state cache batch dim
+    "clients": ("data",),            # federated client shards (PackedClients)
     "seq": (),                       # unsharded by default
     "kv_seq": ("model",),            # decode KV cache: sequence over model axis
     "embed": (),                     # activations replicated over model (TP)
@@ -83,11 +84,16 @@ def _abstract_mesh():
 
 
 def logical_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
-                 rules: Optional[Rules] = None) -> P:
+                 rules: Optional[Rules] = None, mesh=None) -> P:
     """Build a PartitionSpec from logical axis names, dropping non-divisible
-    or absent mesh axes."""
+    or absent mesh axes.
+
+    ``mesh`` may be a concrete ``jax.sharding.Mesh`` (same ``axis_names`` /
+    ``shape`` interface as the abstract mesh) — required on JAX versions
+    without ``get_abstract_mesh``, where the ambient lookup returns None and
+    the annotations would otherwise silently degrade to replicated."""
     rules = rules or current_rules()
-    mesh = _abstract_mesh()
+    mesh = mesh if mesh is not None else _abstract_mesh()
     if mesh is None:
         return P()
     entries = []
@@ -125,3 +131,25 @@ def shard(x: jax.Array, *axes: Optional[str]):
         raise ValueError(f"shard(): {len(axes)} axes for rank-{x.ndim} tensor")
     spec = logical_spec(x.shape, axes)
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across JAX versions.
+
+    The federated engine's sharded rounds (ISSUE 4) return psum-reduced
+    (hence replicated) values through ``out_specs=P()``; the static
+    replication checker predates some of the collectives' rules on older
+    JAX, so it is disabled uniformly.  Newer JAX renamed the toggle
+    (check_rep -> check_vma) and promoted shard_map out of experimental —
+    try the modern spelling first, fall back per-version.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)

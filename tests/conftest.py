@@ -1,6 +1,13 @@
 import os
 import sys
 
-# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
-# and benches must see the single real CPU device (dryrun.py sets it itself).
+# NOTE: do NOT set --xla_force_host_platform_device_count unconditionally —
+# smoke tests and benches must see the single real CPU device (dryrun.py
+# forces its own 512).  The multi-device CI leg (and local sharded-parity
+# runs) opt in via REPRO_FORCE_HOST_DEVICES=N, which must take effect before
+# the jax backend initializes — hence here, through the same shared helper
+# dryrun uses (repro.launch.hostdev.force_host_devices).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.hostdev import force_from_env
+force_from_env()

@@ -1,0 +1,308 @@
+"""Client-axis mesh sharding (ISSUE 4).
+
+Three layers of proof:
+
+  * mesh-free: the sharded packed layout holds exactly the same samples as
+    the flat layout, and the local-top-k -> global-merge selection returns
+    the exact cohort of the replicated Gumbel-top-k (hypothesis property
+    over strategies x shard counts, including ghost-padded shards and
+    shards with fewer eligible clients than K);
+  * single-device: a 1-shard mesh run of both drivers is BITWISE identical
+    to the replicated path — the shard_map program itself is exercised in
+    every tier-1 run;
+  * simulated multi-device (skipped unless >= 8 host devices, forced in the
+    CI `multi-device` job via REPRO_FORCE_HOST_DEVICES): 2-shard and
+    8-shard scan-driver runs reproduce the replicated run bitwise on
+    shuffle sampling and within 2e-5 on iid, on both the xla and pallas
+    backends; the host driver composes with the sharded round too.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro.core.selection import select_cohort_device, select_cohort_sharded
+from repro.data.federated import make_femnist_like
+from repro.launch.hostdev import force_host_devices
+from repro.launch.mesh import make_data_mesh
+from repro.models.fl_models import make_mclr
+
+N_CLIENTS = 24
+DIM = 16
+N_DEVICES = len(jax.devices())
+
+needs_devices = lambda n: pytest.mark.skipif(  # noqa: E731
+    N_DEVICES < n, reason=f"needs {n} (simulated) devices, have {N_DEVICES};"
+    " set REPRO_FORCE_HOST_DEVICES / XLA_FLAGS before jax initializes")
+
+
+@pytest.fixture(scope="module")
+def fed():
+    ds = make_femnist_like(n_clients=N_CLIENTS, total=1400, dim=DIM,
+                           max_size=60)
+    return ds, make_mclr(DIM, ds.n_classes)
+
+
+_RUNS = {}
+
+
+def _run(fed, driver, shards, sampling, backend="xla", rounds=8):
+    """Run a small server to completion, memoized per configuration."""
+    key = (driver, shards, sampling, backend, rounds)
+    if key in _RUNS:
+        return _RUNS[key]
+    ds, model = fed
+    cfg = ServerConfig(algo="ira", n_selected=8, rounds=rounds, h_cap=4.0,
+                       fixed_epochs=4.0, sampling=sampling, driver=driver,
+                       block_size=4, backend=backend, mesh_shards=shards,
+                       rng_impl="device" if driver == "host" else "")
+    srv = FedSAEServer(ds, model, cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=0))
+    srv.run()
+    _RUNS[key] = srv
+    return srv
+
+
+def _assert_same_run(a, b, exact=True, atol=2e-5):
+    """cohorts + params + history parity between two finished servers."""
+    assert len(a.cohorts) == len(b.cohorts)
+    for x, y in zip(a.cohorts, b.cohorts):
+        np.testing.assert_array_equal(x, y)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=atol)
+    for k in a.history:
+        ha, hb = np.asarray(a.history[k]), np.asarray(b.history[k])
+        if exact:
+            np.testing.assert_array_equal(ha, hb)
+        else:
+            np.testing.assert_allclose(ha, hb, atol=atol, equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# sharded packed layout (mesh-free)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [1, 2, 3, 5, 8])
+def test_packed_sharded_layout_holds_every_sample(fed, shards):
+    ds, _ = fed
+    max_n = int(ds.sizes.max())
+    pk = ds.packed(max_n, shards=shards)
+    C = pk.clients_per_shard
+    assert pk.n_shards == shards and C == -(-ds.n_clients // shards)
+    lens = np.asarray(pk.lengths)
+    offs = np.asarray(pk.offsets)
+    x = np.asarray(pk.x)
+    y = np.asarray(pk.y)
+    assert x.shape[0] == shards
+    for g in range(ds.n_clients):
+        s, j = g // C, g % C
+        n = len(ds.clients_y[g])
+        assert lens[s, j] == n
+        np.testing.assert_array_equal(x[s, offs[s, j]:offs[s, j] + n],
+                                      ds.clients_x[g])
+        np.testing.assert_array_equal(y[s, offs[s, j]:offs[s, j] + n],
+                                      ds.clients_y[g])
+    # ghost rows (population padding) gather nothing
+    for s in range(shards):
+        for j in range(C):
+            if s * C + j >= ds.n_clients:
+                assert lens[s, j] == 0
+        # every client's DMA window [offset, offset + max_n) stays in bounds
+        assert offs[s].max() + max_n <= x.shape[1]
+    # flattened lengths are the global sizes in id order (ghost-padded)
+    np.testing.assert_array_equal(
+        lens.reshape(-1)[:ds.n_clients], ds.sizes)
+
+
+def test_packed_sharded_rejects_bad_shard_count(fed):
+    ds, _ = fed
+    with pytest.raises(ValueError, match="shards"):
+        ds.packed(shards=-2)
+
+
+# ---------------------------------------------------------------------------
+# local-top-k -> global-merge selection (mesh-free property test)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_selection_matches_global_topk():
+    """Property (hypothesis): the merge returns EXACTLY the replicated
+    cohort for every shard count that divides the population (and any that
+    does not — ghost padding), every strategy, with or without the AL
+    warm-up override."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=60)
+    @given(data=st.data())
+    def check(data):
+        n = data.draw(st.integers(2, 64), label="n_clients")
+        k = data.draw(st.integers(1, min(n, 12)), label="k")
+        divisors = [d for d in range(1, n + 1) if n % d == 0]
+        shards = data.draw(st.sampled_from(divisors), label="shards")
+        strategy = data.draw(st.sampled_from(
+            ["random", "active", "loss_proportional"]), label="strategy")
+        use_al = data.draw(st.booleans(), label="use_al")
+        seed = data.draw(st.integers(0, 2**16), label="seed")
+        values = np.asarray(data.draw(st.lists(
+            st.floats(0.0, 1e6, allow_nan=False, width=32),
+            min_size=n, max_size=n), label="values"), np.float32)
+        key = jax.random.PRNGKey(seed)
+        want = np.asarray(select_cohort_device(key, values, k, strategy,
+                                               beta=0.05, use_al=use_al))
+        got = np.asarray(select_cohort_sharded(key, values, k, shards,
+                                               strategy, beta=0.05,
+                                               use_al=use_al))
+        np.testing.assert_array_equal(got, want)
+
+    check()
+
+
+@pytest.mark.parametrize("n,shards,k", [
+    (5, 8, 3),    # more shards than clients: 3 shards own zero clients
+    (6, 4, 2),    # non-dividing: last shard is half ghosts
+    (7, 3, 5),    # K exceeds every shard's population (C=3 < K)
+    (10, 7, 10),  # K == N through heavy ghost padding
+])
+def test_sharded_selection_ghost_and_starved_shards(n, shards, k):
+    """Ghost clients can never be selected and shards with fewer than K
+    eligible clients still forward enough candidates for an exact merge."""
+    rng = np.random.default_rng(n * 100 + shards)
+    values = rng.uniform(0.0, 50.0, n).astype(np.float32)
+    for seed in range(5):
+        key = jax.random.PRNGKey(seed)
+        for strategy in ("random", "active", "loss_proportional"):
+            want = np.asarray(select_cohort_device(key, values, k, strategy))
+            got = np.asarray(select_cohort_sharded(key, values, k, shards,
+                                                   strategy))
+            np.testing.assert_array_equal(got, want)
+            assert (got < n).all()
+
+
+# ---------------------------------------------------------------------------
+# 1-shard mesh == replicated, bitwise (runs on a single device: tier-1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("driver", ["host", "scan"])
+@pytest.mark.parametrize("sampling", ["shuffle", "iid"])
+def test_one_shard_mesh_bitwise_equals_replicated(fed, driver, sampling):
+    rep = _run(fed, driver, 0, sampling)
+    one = _run(fed, driver, 1, sampling)
+    _assert_same_run(rep, one, exact=True)
+
+
+def test_shard_to_places_client_axis_on_data(fed):
+    ds, _ = fed
+    mesh = make_data_mesh(1)
+    pk = ds.packed(shards=1).shard_to(mesh)
+    spec = pk.x.sharding.spec
+    assert spec and spec[0] == "data"
+    with pytest.raises(ValueError, match="sharded layout"):
+        ds.packed().shard_to(mesh)
+
+
+def test_shard_count_mesh_mismatch_rejected(fed):
+    """A layout whose shard count divides the mesh (or vice versa) would
+    silently drop client blocks — both the upload and the engine refuse."""
+    ds, model = fed
+    mesh = make_data_mesh(1)
+    with pytest.raises(ValueError, match="repack with shards=1"):
+        ds.packed(shards=2).shard_to(mesh)
+    from repro.core.engine import RoundEngine
+    eng = RoundEngine(lr=0.03)
+    pk = ds.packed(shards=2)   # not shard_to'd: hits the engine guard
+    fn = eng.make_packed_round(model, 10, 6, pk.max_n, mesh=mesh)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="packed(.*)2 shards"):
+        fn(params, pk.x, pk.y, pk.offsets, pk.lengths,
+           jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32),
+           jax.random.PRNGKey(1))
+
+
+def test_data_mesh_needs_enough_devices():
+    with pytest.raises(ValueError, match="force_host_devices"):
+        make_data_mesh(N_DEVICES + 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        make_data_mesh(0)
+
+
+# ---------------------------------------------------------------------------
+# simulated multi-device parity (the CI `multi-device` leg)
+# ---------------------------------------------------------------------------
+
+
+@needs_devices(8)
+@pytest.mark.parametrize("shards", [2, 8])
+def test_scan_driver_sharded_shuffle_bitwise(fed, shards):
+    """Acceptance: 2- and 8-shard scan runs == the 1-shard run, bitwise,
+    on shuffle sampling (cohorts, params, history)."""
+    _assert_same_run(_run(fed, "scan", 1, "shuffle"),
+                     _run(fed, "scan", shards, "shuffle"), exact=True)
+
+
+@needs_devices(8)
+@pytest.mark.parametrize("shards", [2, 8])
+def test_scan_driver_sharded_iid_tolerance(fed, shards):
+    """Acceptance: iid sampling within 2e-5 (observed: bitwise)."""
+    _assert_same_run(_run(fed, "scan", 1, "iid"),
+                     _run(fed, "scan", shards, "iid"),
+                     exact=False, atol=2e-5)
+
+
+@needs_devices(8)
+@pytest.mark.parametrize("sampling", ["shuffle", "iid"])
+def test_scan_driver_sharded_pallas_backend(fed, sampling):
+    """The pallas kernels (fed_gather; fed_local_sgd on iid) compose under
+    the sharded segment: 2-shard pallas == replicated pallas."""
+    rep = _run(fed, "scan", 0, sampling, backend="pallas", rounds=4)
+    two = _run(fed, "scan", 2, sampling, backend="pallas", rounds=4)
+    _assert_same_run(rep, two, exact=sampling == "shuffle", atol=2e-5)
+
+
+@needs_devices(8)
+def test_host_driver_sharded_round(fed):
+    """make_packed_round under shard_map: the per-round host driver loop
+    composes with the sharded data layout bitwise."""
+    _assert_same_run(_run(fed, "host", 0, "shuffle"),
+                     _run(fed, "host", 2, "shuffle"), exact=True)
+
+
+@needs_devices(8)
+def test_sharded_replicated_cross_check(fed):
+    """Transitivity anchor: replicated (no mesh) == 1-shard == 8-shard."""
+    _assert_same_run(_run(fed, "scan", 0, "shuffle"),
+                     _run(fed, "scan", 8, "shuffle"), exact=True)
+
+
+# ---------------------------------------------------------------------------
+# force_host_devices (the shared helper the CI leg and dryrun use)
+# ---------------------------------------------------------------------------
+
+
+def test_force_host_devices_appends_and_replaces(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_cpu_foo=1")
+    got = force_host_devices(4)
+    assert got == ("--xla_cpu_foo=1 "
+                   "--xla_force_host_platform_device_count=4")
+    # idempotent replace, other flags preserved
+    got = force_host_devices(8)
+    assert got == ("--xla_cpu_foo=1 "
+                   "--xla_force_host_platform_device_count=8")
+    assert os.environ["XLA_FLAGS"] == got
+
+
+def test_force_host_devices_from_empty(monkeypatch):
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    assert force_host_devices(2) == \
+        "--xla_force_host_platform_device_count=2"
+    with pytest.raises(ValueError):
+        force_host_devices(0)
