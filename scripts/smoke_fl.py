@@ -16,5 +16,7 @@ for algo in ("fedavg", "ira", "fassa"):
     h = srv.run(verbose=False)
     print(f"{algo:8s} acc={h['acc'][-1]:.3f} "
           f"dropout={np.nanmean(h['dropout']):.2f} "
+          f"dropped={np.sum(h['dropped']):.0f} "
+          f"overflowed={np.sum(h['overflowed']):.0f} "
           f"uploaded={np.nanmean(h['uploaded']):.1f} "
           f"({time.time()-t0:.1f}s)")

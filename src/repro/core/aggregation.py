@@ -25,15 +25,32 @@ Included:
                 Weiszfeld-iterated geometric median of the uploads — the
                 l2 analogue of the coordinate-wise median (RFA, Pillutla
                 et al., 2019)
+  bulyan        Bulyan-style composition (El Mhamdi et al., 2018): Krum-
+                select the m - 2b most central valid uploads, then
+                coordinate-wise trimmed-mean (b trimmed per end) over the
+                selected set — combines Krum's full-vector outlier
+                rejection with trimmed-mean's per-coordinate robustness
 
-The robust aggregators are *unweighted* over valid uploads by construction:
-sample-count weighting would let a single large adversarial client dominate,
-which is exactly what trimming is meant to prevent.  Validity (weight > 0)
-is still respected — dropped clients never enter the statistic.
+Client weighting (ISSUE 5 satellite): the ``weights`` vector carries the
+per-client sample counts ``n_k`` (0 = no upload), but the robust
+aggregators default to treating it as a VALIDITY mask only — an uploads-
+are-equal statistic, because raw sample-count weighting would let a single
+large adversarial client dominate exactly what trimming is meant to
+prevent.  Passing ``weighted=True`` opts into n_k-aware versions that
+weight only the SURVIVING uploads (post-trim band, Krum/Bulyan selection,
+Weiszfeld reweighting), so honest heterogeneity in client sizes is
+respected.  Caveat the caller must own: weighted breakdown points are in
+terms of WEIGHT SHARES, not client counts — rank-based selection
+(trim band, Krum, Bulyan) still excludes a large-n_k adversary from the
+statistic, but the weighted geometric median follows the RFA guarantee
+and tolerates adversaries only while they hold < 1/2 of the total n_k.
+``weighted=False`` is bitwise the previous behaviour.  Validity is always respected — dropped clients (weight 0,
+including capacity-overflowed cohort slots whose stack rows are exact
+zeros) never enter any statistic.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -82,18 +99,34 @@ class TrimmedMean:
     from each end (m = number of valid uploads) and average the rest.  Invalid
     clients are pushed to +inf so they always land past rank m and are never
     selected.  With no valid uploads the old global is kept.
+
+    ``trim_count`` overrides the ratio with a fixed per-end trim count
+    (clamped so at least one rank survives) — the band Bulyan needs.
+    ``weighted=True`` averages the surviving band weighted by the clients'
+    ``n_k`` (the weights vector) instead of uniformly; the band itself is
+    still chosen by value rank, so an adversary cannot buy its way into the
+    statistic with a large sample count.
     """
 
     name = "trimmed_mean"
     prox_mu = 0.0
 
-    def __init__(self, trim_ratio: float = 0.1):
+    def __init__(self, trim_ratio: float = 0.1, weighted: bool = False,
+                 trim_count: Optional[int] = None):
         if not 0.0 <= trim_ratio < 0.5:
             raise ValueError(f"trim_ratio must be in [0, 0.5), got {trim_ratio}")
+        if trim_count is not None and trim_count < 0:
+            raise ValueError(f"trim_count must be >= 0, got {trim_count}")
         self.trim_ratio = trim_ratio
+        self.trim_count = trim_count
+        self.weighted = bool(weighted)
 
     def _band(self, m):
-        t = jnp.floor(self.trim_ratio * m).astype(jnp.int32)
+        if self.trim_count is not None:
+            t = jnp.minimum(jnp.int32(self.trim_count),
+                            jnp.maximum(m - 1, 0) // 2)
+        else:
+            t = jnp.floor(self.trim_ratio * m).astype(jnp.int32)
         return t, jnp.maximum(m - 2 * t, 1)
 
     def __call__(self, params_k, global_params, weights):
@@ -108,10 +141,22 @@ class TrimmedMean:
             shape = (-1,) + (1,) * (stacked.ndim - 1)
             v = jnp.where(valid.reshape(shape),
                           stacked.astype(jnp.float32), jnp.inf)
-            s = jnp.sort(v, axis=0)
-            # zero the trimmed/invalid ranks *before* summing (0 * inf = nan)
-            s = jnp.where(sel.reshape(shape), s, 0.0)
-            mixed = s.sum(axis=0) / keep.astype(jnp.float32)
+            if self.weighted:
+                # carry each client's n_k through the per-coordinate sort
+                order = jnp.argsort(v, axis=0)
+                s = jnp.take_along_axis(v, order, axis=0)
+                wfull = jnp.broadcast_to(
+                    weights.astype(jnp.float32).reshape(shape), v.shape)
+                ws = jnp.take_along_axis(wfull, order, axis=0)
+                ws = jnp.where(sel.reshape(shape), ws, 0.0)
+                s = jnp.where(sel.reshape(shape), s, 0.0)
+                mixed = (s * ws).sum(axis=0) / jnp.maximum(
+                    ws.sum(axis=0), 1e-9)
+            else:
+                s = jnp.sort(v, axis=0)
+                # zero trimmed/invalid ranks *before* summing (0*inf = nan)
+                s = jnp.where(sel.reshape(shape), s, 0.0)
+                mixed = s.sum(axis=0) / keep.astype(jnp.float32)
             return jnp.where(m > 0, mixed,
                              g0.astype(jnp.float32)).astype(g0.dtype)
 
@@ -120,12 +165,14 @@ class TrimmedMean:
 
 class Median(TrimmedMean):
     """Coordinate-wise median: the trim band collapsed onto the middle
-    element (odd m) or middle pair (even m)."""
+    element (odd m) or middle pair (even m).  ``weighted=True`` averages
+    the middle pair by n_k (the full weighted-quantile median is NOT
+    implemented — only the band mean is weighted)."""
 
     name = "median"
 
-    def __init__(self):
-        super().__init__(0.0)
+    def __init__(self, weighted: bool = False):
+        super().__init__(0.0, weighted=weighted)
 
     def _band(self, m):
         t = jnp.maximum(m - 1, 0) // 2
@@ -160,50 +207,70 @@ def _unflatten_like(vec, global_params):
 _FAR = 1e30   # sentinel distance for invalid clients (inf would 0*inf=nan)
 
 
+def _krum_scores(flat, valid, n_byzantine: int):
+    """Krum scores over the [K, P] upload matrix (Blanchard et al., 2017).
+
+    Per valid client: sum of squared distances to its ``m - n_byzantine -
+    2`` closest valid peers (band clamped to [1, K-1] and capped at m-1 so
+    small cohorts degrade gracefully — a _FAR sentinel must never leak
+    into a valid client's score).  Invalid clients score ``_FAR`` so they
+    rank last.  Shared by :class:`Krum` (argmin selection) and
+    :class:`Bulyan` (select-then-trim composition).  Returns (scores [K],
+    m) with m the valid-upload count."""
+    K = flat.shape[0]
+    m = valid.sum().astype(jnp.int32)
+    sq = jnp.sum(flat * flat, axis=1)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * flat @ flat.T, 0.0)
+    excluded = ~(valid[:, None] & valid[None, :]) | jnp.eye(K, dtype=bool)
+    d2 = jnp.where(excluded, _FAR, d2)
+    c = jnp.minimum(jnp.clip(m - n_byzantine - 2, 1, K - 1),
+                    jnp.maximum(m - 1, 0))
+    nearest = jnp.sort(d2, axis=1)
+    scores = jnp.where(jnp.arange(K)[None, :] < c, nearest, 0.0).sum(1)
+    return jnp.where(valid, scores, _FAR), m
+
+
 class Krum:
     """(multi-)Krum (Blanchard et al., 2017).
 
     Per valid client: score = sum of squared distances to its
     ``m - n_byzantine - 2`` closest valid peers (m = number of valid
     uploads; the band is clamped to [1, K-1] so small cohorts degrade
-    gracefully).  The ``multi`` lowest-scoring clients are averaged
-    (``multi=1`` is classic Krum: the single most central upload wins).
-    Invalid clients (weight 0) never enter distances or selection.
+    gracefully — see :func:`_krum_scores`).  The ``multi`` lowest-scoring
+    clients are averaged (``multi=1`` is classic Krum: the single most
+    central upload wins).  ``weighted=True`` averages the multi-Krum
+    winners by their n_k instead of uniformly (selection is still purely
+    distance-based).  Invalid clients (weight 0) never enter distances or
+    selection.
     """
 
     name = "krum"
     prox_mu = 0.0
 
-    def __init__(self, n_byzantine: int = 0, multi: int = 1):
+    def __init__(self, n_byzantine: int = 0, multi: int = 1,
+                 weighted: bool = False):
         if n_byzantine < 0:
             raise ValueError(f"n_byzantine must be >= 0, got {n_byzantine}")
         if multi < 1:
             raise ValueError(f"multi must be >= 1, got {multi}")
         self.n_byzantine = int(n_byzantine)
         self.multi = int(multi)
+        self.weighted = bool(weighted)
 
     def __call__(self, params_k, global_params, weights):
         valid = weights > 0
-        m = valid.sum().astype(jnp.int32)
         K = weights.shape[0]
         flat = _flatten_clients(params_k)                       # [K, P]
-        sq = jnp.sum(flat * flat, axis=1)
-        d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * flat @ flat.T, 0.0)
-        excluded = ~(valid[:, None] & valid[None, :]) | jnp.eye(K, dtype=bool)
-        d2 = jnp.where(excluded, _FAR, d2)
-        # band capped at m-1: a valid client has only m-1 valid peers, and
-        # letting a _FAR sentinel into its score would tie it with the
-        # invalid clients' masked scores (m == 1 would then select by index)
-        c = jnp.minimum(jnp.clip(m - self.n_byzantine - 2, 1, K - 1),
-                        jnp.maximum(m - 1, 0))
-        nearest = jnp.sort(d2, axis=1)
-        scores = jnp.where(jnp.arange(K)[None, :] < c, nearest, 0.0).sum(1)
-        scores = jnp.where(valid, scores, _FAR)
+        scores, m = _krum_scores(flat, valid, self.n_byzantine)
         order = jnp.argsort(scores)                  # invalid ranks last
         q = jnp.minimum(self.multi, jnp.maximum(m, 1))
         chosen = jnp.zeros(K).at[order].set(
             (jnp.arange(K) < q).astype(jnp.float32))
-        mixed = (chosen @ flat) / q.astype(jnp.float32)
+        if self.weighted:
+            cw = chosen * weights.astype(jnp.float32)
+            mixed = (cw @ flat) / jnp.maximum(cw.sum(), 1e-9)
+        else:
+            mixed = (chosen @ flat) / q.astype(jnp.float32)
         g0 = _flatten_clients(
             jax.tree.map(lambda g: g[None], global_params))[0]
         return _unflatten_like(jnp.where(m > 0, mixed, g0), global_params)
@@ -212,27 +279,34 @@ class Krum:
 class GeometricMedian:
     """Geometric median via Weiszfeld iteration (RFA, Pillutla et al., 2019).
 
-    Minimises sum_i ||x_i - y|| over valid uploads with ``iters`` fixed-point
-    steps; ``eps`` guards the reciprocal when the iterate lands on an upload.
-    Iteration starts from the coordinate-wise median (not the mean — a single
-    unbounded adversary would park the mean arbitrarily far away and
-    Weiszfeld's linear convergence would need many steps to walk back), so a
-    handful of refinement steps suffices.  A fixed iteration count keeps the
-    aggregator pure jnp (jit/scan-safe).
+    Minimises sum_i w_i ||x_i - y|| over valid uploads with ``iters``
+    fixed-point steps; ``eps`` guards the reciprocal when the iterate lands
+    on an upload.  Iteration starts from the coordinate-wise median (not
+    the mean — a single unbounded adversary would park the mean arbitrarily
+    far away and Weiszfeld's linear convergence would need many steps to
+    walk back), so a handful of refinement steps suffices.  A fixed
+    iteration count keeps the aggregator pure jnp (jit/scan-safe).
+    ``weighted=True`` uses w_i = n_k (the RFA weighted formulation);
+    the default solves the unweighted w_i = 1 problem.  The weighted
+    median's breakdown point is a WEIGHT fraction: it resists adversaries
+    holding < 1/2 of the total n_k, not < 1/2 of the clients.
     """
 
     name = "geometric_median"
     prox_mu = 0.0
 
-    def __init__(self, iters: int = 8, eps: float = 1e-8):
+    def __init__(self, iters: int = 8, eps: float = 1e-8,
+                 weighted: bool = False):
         if iters < 1:
             raise ValueError(f"iters must be >= 1, got {iters}")
         self.iters = int(iters)
         self.eps = float(eps)
+        self.weighted = bool(weighted)
 
     def __call__(self, params_k, global_params, weights):
         valid = (weights > 0).astype(jnp.float32)
         m = valid.sum()
+        wk = valid * weights.astype(jnp.float32) if self.weighted else valid
         flat = _flatten_clients(params_k)                       # [K, P]
         m_int = m.astype(jnp.int32)
         s = jnp.sort(jnp.where(valid[:, None] > 0, flat, _FAR), axis=0)
@@ -243,13 +317,59 @@ class GeometricMedian:
         def step(_, y):
             d = jnp.sqrt(jnp.maximum(
                 jnp.sum((flat - y[None, :]) ** 2, axis=1), self.eps ** 2))
-            w = valid / d
+            w = wk / d
             return (w @ flat) / jnp.maximum(w.sum(), 1e-12)
 
         y = jax.lax.fori_loop(0, self.iters, step, y0)
         g0 = _flatten_clients(
             jax.tree.map(lambda g: g[None], global_params))[0]
         return _unflatten_like(jnp.where(m > 0, y, g0), global_params)
+
+
+class Bulyan:
+    """Bulyan-style composition: Krum-select, then trimmed-mean.
+
+    (El Mhamdi et al., 2018.)  Step 1 keeps the ``q = clip(m - 2b, 1, m)``
+    valid uploads with the LOWEST Krum scores (b = ``n_byzantine``) — the
+    full-vector outlier rejection that coordinate-wise trimming alone
+    lacks.  Step 2 runs a coordinate-wise trimmed mean over the selected
+    set with a fixed per-end trim count of b — the per-coordinate
+    robustness that Krum's winner-takes-most lacks.  The composition is
+    expressed by restricting validity: the inner :class:`TrimmedMean` sees
+    ``weights * selected``, so de-selected clients are indistinguishable
+    from clients that never uploaded.  (The classical formulation re-scores
+    after every removal; this one-shot selection keeps the aggregator a
+    fixed-depth pure-jnp program — jit/scan-safe — and preserves both
+    defence layers.)
+
+    ``weighted=True`` threads n_k into the final band mean (the selection
+    steps stay size-blind).  With no valid uploads the old global is kept.
+    """
+
+    name = "bulyan"
+    prox_mu = 0.0
+
+    def __init__(self, n_byzantine: int = 0, weighted: bool = False):
+        if n_byzantine < 0:
+            raise ValueError(f"n_byzantine must be >= 0, got {n_byzantine}")
+        self.n_byzantine = int(n_byzantine)
+        self.weighted = bool(weighted)
+        self._inner = TrimmedMean(trim_count=self.n_byzantine,
+                                  weighted=weighted)
+
+    def __call__(self, params_k, global_params, weights):
+        valid = weights > 0
+        K = weights.shape[0]
+        flat = _flatten_clients(params_k)
+        scores, m = _krum_scores(flat, valid, self.n_byzantine)
+        q = jnp.clip(m - 2 * self.n_byzantine, 1, jnp.maximum(m, 1))
+        order = jnp.argsort(scores)                  # invalid ranks last
+        selected = jnp.zeros(K).at[order].set(
+            (jnp.arange(K) < q).astype(jnp.float32))
+        # m == 0 => q = 1 picks an invalid client, but its weight is 0, so
+        # the inner trimmed mean sees no valid uploads and keeps the global
+        return self._inner(params_k, global_params,
+                           weights.astype(jnp.float32) * selected)
 
 
 AGGREGATORS: Dict[str, type] = {
@@ -259,6 +379,7 @@ AGGREGATORS: Dict[str, type] = {
     "median": Median,
     "krum": Krum,
     "geometric_median": GeometricMedian,
+    "bulyan": Bulyan,
 }
 
 

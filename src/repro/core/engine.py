@@ -13,7 +13,13 @@ re-implements them (DESIGN.md §3, ISSUE 1):
     via ``shard_map`` — each shard gathers and trains only the cohort slots
     it owns and the [K] stacks are rebuilt by an ownership-masked ``psum``,
     bitwise-identical to the replicated round on shuffle sampling and
-    within 2e-5 on iid; ISSUE 4);
+    within 2e-5 on iid; ISSUE 4.  With a ``capacity`` (ISSUE 5) each shard
+    additionally COMPACTS its owned slots into a dense [capacity] lane
+    block and runs only that — per-shard round compute drops from K to
+    ~K/S lanes, turning the mesh into round-time speedup rather than data
+    residency alone; owned slots past capacity overflow deterministically
+    and are dropped like paper-style stragglers, while ``capacity=None``
+    ("full") keeps the bitwise PR-4 masked mode);
   * pluggable aggregation (``repro.core.aggregation``) — who merges, how.
 
 Three round flavours share that substrate:
@@ -415,7 +421,8 @@ class RoundEngine:
     def make_packed_round(self, model, batch_size: int, max_iters: int,
                           max_n: int, sampling: str = "shuffle",
                           backend: Optional[str] = None,
-                          mesh=None) -> Callable:
+                          mesh=None, capacity: Optional[int] = None
+                          ) -> Callable:
         """Device-resident round: cohort gather from packed client data.
 
         round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
@@ -438,11 +445,24 @@ class RoundEngine:
         :meth:`_sharded_round_fn`).  Bitwise-identical to the replicated
         round on shuffle sampling; within 2e-5 on iid (observed bitwise,
         only the tolerance is guaranteed — tests/test_sharding.py).
+
+        ``capacity`` (ISSUE 5, sharded only — a resolved per-shard lane
+        count from ``repro.core.selection.resolve_capacity``, or None for
+        the masked full-K mode): each shard compacts its owned cohort
+        slots into a dense [capacity] block and runs only that; owned
+        slots past capacity overflow deterministically (slot-index order)
+        and are dropped with zero budget/weight.  Any ``capacity >= max
+        owned slots per shard`` is bitwise the masked mode
+        (tests/test_capacity.py).
         """
         if mesh is not None:
             return self._jit_round(self._sharded_round_fn(
                 model, batch_size, max_iters, max_n, sampling, backend,
-                mesh))
+                mesh, capacity))
+        if capacity is not None:
+            raise ValueError(
+                "capacity compaction requires a sharded mesh; pass mesh= "
+                "or leave capacity=None for the replicated round")
         return self._jit_round(self._packed_round_body(
             model, batch_size, max_iters, max_n, sampling, backend))
 
@@ -451,7 +471,8 @@ class RoundEngine:
     # ------------------------------------------------------------------
     def _shard_round_core(self, model, batch_size: int, max_iters: int,
                           max_n: int, sampling: str = "shuffle",
-                          backend: Optional[str] = None) -> Callable:
+                          backend: Optional[str] = None,
+                          capacity: Optional[int] = None) -> Callable:
         """Per-shard cohort compute; must run inside ``shard_map`` over the
         ``data`` axis.
 
@@ -461,28 +482,43 @@ class RoundEngine:
         Arguments are the SHARD-LOCAL packed arrays (leading shard axis
         already stripped); ``ids``/``n_iters``/``rng`` are replicated.  Each
         shard resolves which cohort slots it owns (``ids // C ==
-        axis_index``), gathers and trains ONLY from its local flat arrays
-        (non-owned slots run with a zero budget and are masked out), then
-        the [K] stacks are rebuilt with an ownership-masked ``psum``: every
-        slot is owned by exactly one shard and all other shards contribute
-        exact zeros, so the reduction is bitwise the replicated stack — and
-        arbitrary aggregators (median, Krum, ...) stay pluggable because
-        they still see the full per-client stack.
+        axis_index``), gathers and trains ONLY from its local flat arrays,
+        then the [K] stacks are rebuilt with an ownership-masked ``psum``:
+        every slot is computed by at most one shard and all other shards
+        contribute exact zeros, so the reduction is bitwise the replicated
+        stack — and arbitrary aggregators (median, Krum, ...) stay
+        pluggable because they still see the full per-client stack.
+
+        ``capacity`` (ISSUE 5) picks how the owned slots execute:
+
+          None       masked full-K mode — every shard runs all K lanes with
+                     non-owned budgets zeroed.  Bitwise the PR-4 round;
+                     data residency only, no compute scaling.
+          int        capacity-compacted mode — the shard packs its owned
+                     slots into a dense ``[capacity]`` lane block
+                     (``compact_lane_map``) and runs ONLY that block, so
+                     per-shard round compute drops from K lanes to
+                     ``capacity`` (~K/S) lanes; lane results scatter back
+                     to their global [K] slots before the psum.  Each lane
+                     reuses the key/budget/data of the slot it serves, so
+                     any ``capacity >= max owned slots per shard`` is
+                     bitwise the masked mode.  Owned slots past capacity
+                     OVERFLOW (slot-index order, ``cohort_overflow``): no
+                     lane executes them, their stack rows stay exact zeros
+                     and their budgets were already zeroed by the caller,
+                     so aggregation treats them like paper-style dropped
+                     stragglers (weight 0 — validity masking keeps every
+                     aggregator correct).
 
         All three compute paths mirror their replicated twins so parity is
         by construction: pallas fused SGD, XLA direct-iid packed indexing,
         and the gather + vmapped local-SGD scan (either gather backend).
-
-        Scaling note: every shard still runs all K cohort slots (non-owned
-        ones with a zero budget — masked, not skipped), so sharding scales
-        DATA residency (each device holds 1/S of the federation, the
-        blocker for paper-scale populations) but not the local-SGD compute
-        of a round.  Compacting each shard to its ~K/S owned slots would
-        add compute scaling, but a cohort can be arbitrarily unbalanced —
-        worst case every selected client lives on one shard — so a static
-        SPMD capacity must either stay K or adopt overflow/drop semantics
-        that break bitwise parity with the replicated round; see ROADMAP.
+        The pallas kernels need no capacity variant: their grid is the
+        leading cohort-block axis, so compacted [capacity]-sized inputs
+        give capacity-sized grids for free.
         """
+        from repro.core.selection import compact_lane_map
+
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         direct_iid = backend == "xla" and sampling == "iid"
@@ -496,12 +532,28 @@ class RoundEngine:
                  n_iters, rng):
             s = jax.lax.axis_index("data")
             C = offsets.shape[0]
-            own = (ids // C) == s
-            local = jnp.where(own, ids % C, 0)
-            offs = offsets[local]
-            n = jnp.where(own, jnp.minimum(lengths[local], max_n), 0)
-            iters = jnp.where(own, n_iters, 0)
-            keys = jax.random.split(rng, ids.shape[0])
+            K = ids.shape[0]
+            keys = jax.random.split(rng, K)
+            if capacity is None:
+                own = (ids // C) == s
+                local = jnp.where(own, ids % C, 0)
+                offs = offsets[local]
+                n = jnp.where(own, jnp.minimum(lengths[local], max_n), 0)
+                iters = jnp.where(own, n_iters, 0)
+            else:
+                # dense lane block: lane l serves cohort slot lane_map[l]
+                # (sentinel K = unused lane) with that slot's own key,
+                # budget and data — per-slot arithmetic is unchanged, only
+                # the lane count shrinks from K to capacity
+                lane_map = compact_lane_map(ids, C, s, capacity)
+                lane_valid = lane_map < K
+                slot = jnp.where(lane_valid, lane_map, 0)
+                local = jnp.where(lane_valid, ids[slot] % C, 0)
+                offs = offsets[local]
+                n = jnp.where(lane_valid,
+                              jnp.minimum(lengths[local], max_n), 0)
+                iters = jnp.where(lane_valid, n_iters[slot], 0)
+                keys = keys[slot]
             if fuse_sgd:
                 x, y, _ = gather(flat_x, flat_y, offs, n)
                 params_k, losses = self._fused_sgd(
@@ -521,34 +573,59 @@ class RoundEngine:
                     local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
                     global_params, x, y, mask, n, iters, keys)
 
-            def mask_slots(p):
-                shape = (-1,) + (1,) * (p.ndim - 1)
-                return jnp.where(own.reshape(shape), p,
-                                 jnp.zeros((), p.dtype))
+            if capacity is None:
+                def mask_slots(p):
+                    shape = (-1,) + (1,) * (p.ndim - 1)
+                    return jnp.where(own.reshape(shape), p,
+                                     jnp.zeros((), p.dtype))
+
+                params_k = jax.tree.map(
+                    lambda p: jax.lax.psum(mask_slots(p), "data"), params_k)
+                losses = jax.lax.psum(
+                    jnp.where(own, losses, jnp.zeros((), losses.dtype)),
+                    "data")
+                return params_k, losses
+
+            def scatter_slots(p):
+                # lane results back to global [K] rows; sentinel lanes and
+                # overflowed slots stay exact zeros, so the psum is still
+                # the ownership-masked rebuild
+                z = jnp.zeros((K,) + p.shape[1:], p.dtype)
+                return z.at[lane_map].set(p, mode="drop")
 
             params_k = jax.tree.map(
-                lambda p: jax.lax.psum(mask_slots(p), "data"), params_k)
-            losses = jax.lax.psum(
-                jnp.where(own, losses, jnp.zeros((), losses.dtype)), "data")
+                lambda p: jax.lax.psum(scatter_slots(p), "data"), params_k)
+            losses = jax.lax.psum(scatter_slots(losses), "data")
             return params_k, losses
 
         return core
 
     def _sharded_round_fn(self, model, batch_size: int, max_iters: int,
                           max_n: int, sampling: str, backend: Optional[str],
-                          mesh) -> Callable:
+                          mesh, capacity: Optional[int] = None) -> Callable:
         """Un-jitted sharded packed round: ``shard_map`` around
-        :meth:`_shard_round_core`, aggregation on the psum-rebuilt stack."""
+        :meth:`_shard_round_core`, aggregation on the psum-rebuilt stack.
+
+        With ``capacity`` set, the budgets of overflowed cohort slots
+        (``cohort_overflow`` — owned-slot rank >= capacity) are zeroed
+        BEFORE the shard_map and the aggregation weights, so an overflowed
+        slot can never contribute a nonzero weight to a zero stack row even
+        if the caller forgot to drop it server-side."""
         from jax.sharding import PartitionSpec as P
 
+        from repro.core.selection import cohort_overflow
         from repro.sharding.rules import shard_map_unchecked
 
         core = self._shard_round_core(model, batch_size, max_iters, max_n,
-                                      sampling, backend)
+                                      sampling, backend, capacity)
 
         def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
                      n_iters, rng):
             _check_shard_count(flat_x, mesh)
+            if capacity is not None:
+                n_iters = jnp.where(
+                    cohort_overflow(ids, lengths.shape[1], capacity),
+                    0, n_iters)
 
             def shard_fn(gp, x, y, offs, lens, ids_, it_, rng_):
                 return core(gp, x[0], y[0], offs[0], lens[0], ids_, it_,
@@ -624,10 +701,18 @@ class RoundEngine:
         ValueTracker math runs replicated on every shard.  One ``shard_map``
         wraps the whole block, so the scan still dispatches once per
         segment.
+
+        ``cfg.cohort_capacity`` (ISSUE 5, sharded only): "full" keeps the
+        masked full-K round; "auto" or an int compacts each shard to a
+        dense capacity-sized lane block inside the scanned round body,
+        with overflowed slots dropped through the Ira/Fassa crash branch
+        and counted in the per-round ``overflowed`` stat (the resolution
+        lives in ``repro.core.selection.resolve_capacity``).
         """
         from repro.core import prediction as pred
         from repro.core.heterogeneity import sample_workloads_device
-        from repro.core.selection import (select_cohort_device,
+        from repro.core.selection import (resolve_capacity,
+                                          select_cohort_device,
                                           value_update_device)
 
         sampling = cfg.sampling if sampling is None else sampling
@@ -636,6 +721,9 @@ class RoundEngine:
 
         algo = cfg.algo
         K = int(cfg.n_selected)
+        capacity = resolve_capacity(
+            getattr(cfg, "cohort_capacity", "full"), K,
+            mesh.shape["data"] if mesh is not None else 0)
         al_rounds = int(getattr(cfg, "al_rounds", 0))
         beta = float(getattr(cfg, "beta", 0.01))
         strategy = getattr(cfg, "selection", "random")
@@ -644,10 +732,20 @@ class RoundEngine:
             gamma1=float(cfg.gamma1), gamma2=float(cfg.gamma2),
             h_cap=float(cfg.h_cap), fixed_epochs=float(cfg.fixed_epochs))
 
-        def make_one_round(select, train, sizes, mu, sigma):
+        def make_one_round(select, train, sizes, mu, sigma, overflow=None):
             """The per-round server step, shared verbatim by the replicated
             and the sharded segment — only cohort selection, the training
-            dispatch and the client-size lookup differ between them."""
+            dispatch, the client-size lookup and the capacity-overflow mask
+            differ between them.
+
+            ``overflow(ids) -> [K] bool`` marks cohort slots dropped by the
+            capacity policy (None = nothing overflows).  An overflowed
+            client's E~ is forced to 0 BEFORE the workload update, so its
+            Ira/Fassa history takes the existing crash branch (outcome
+            DROPPED, L/H halved, zero uploaded epochs -> zero budget) and
+            the self-adaptive estimator absorbs the drop exactly like a
+            paper-style straggler; the drawn E~ still feeds the
+            ``true_workload`` stat."""
 
             def one_round(carry, t):
                 params = carry["params"]
@@ -657,9 +755,12 @@ class RoundEngine:
                 E_all = sample_workloads_device(k_het, mu, sigma)
                 ids = select(k_sel, values, t)
                 E_true = E_all[ids]
+                ovf = (jnp.zeros(ids.shape, bool) if overflow is None
+                       else overflow(ids))
+                E_run = jnp.where(ovf, jnp.float32(0.0), E_true)
                 e_eff, outcome, assigned, L, H, theta = \
                     pred.workload_update_device(algo, L, H, theta, ids,
-                                                E_true, **wl_kwargs)
+                                                E_run, **wl_kwargs)
                 n = jnp.minimum(sizes[ids], max_n)
                 n_iters = budget_iters(e_eff, n, batch_size, max_iters)
                 data_rng, sub = jax.random.split(carry["data_rng"])
@@ -673,6 +774,9 @@ class RoundEngine:
                     "ids": ids,
                     "dropout": (outcome == pred.DROPPED)
                         .astype(jnp.float32).mean(),
+                    "dropped": (outcome == pred.DROPPED)
+                        .astype(jnp.float32).sum(),
+                    "overflowed": ovf.astype(jnp.float32).sum(),
                     "train_loss": jnp.where(
                         n_up > 0,
                         (losses * upf).sum() / jnp.maximum(n_up, 1.0),
@@ -691,7 +795,8 @@ class RoundEngine:
         if mesh is not None:
             return self._jit_round(self._sharded_segment(
                 model, batch_size, max_iters, max_n, sampling, backend,
-                mesh, K, strategy, beta, al_rounds, make_one_round))
+                mesh, K, strategy, beta, al_rounds, make_one_round,
+                capacity))
 
         if backend == "xla" and sampling == "iid":
             round_body = self._direct_iid_round_body(
@@ -719,18 +824,25 @@ class RoundEngine:
     def _sharded_segment(self, model, batch_size: int, max_iters: int,
                          max_n: int, sampling: str, backend: str, mesh,
                          K: int, strategy: str, beta: float, al_rounds: int,
-                         make_one_round) -> Callable:
+                         make_one_round,
+                         capacity: Optional[int] = None) -> Callable:
         """Un-jitted sharded multi-round segment: one ``shard_map`` around
-        the whole ``lax.scan`` block (see :meth:`make_segment_fn`)."""
+        the whole ``lax.scan`` block (see :meth:`make_segment_fn`).
+
+        ``capacity`` selects compacted execution inside the scanned round
+        body (:meth:`_shard_round_core`); the overflow mask is computed per
+        round from the freshly selected cohort and applied both to the
+        Ira/Fassa update (crash branch, via ``make_one_round``'s overflow
+        hook) and, defensively, to the budgets entering the round."""
         from jax.sharding import PartitionSpec as P
 
-        from repro.core.selection import (_cohort_scores,
+        from repro.core.selection import (_cohort_scores, cohort_overflow,
                                           local_topk_candidates,
                                           merge_topk_candidates, pad_scores)
         from repro.sharding.rules import shard_map_unchecked
 
         core = self._shard_round_core(model, batch_size, max_iters, max_n,
-                                      sampling, backend)
+                                      sampling, backend, capacity)
         n_shards = mesh.shape["data"]
 
         def segment(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma):
@@ -753,7 +865,14 @@ class RoundEngine:
                     return merge_topk_candidates(cand_v, cand_i,
                                                  n_shards * C, K)
 
+                overflow = None if capacity is None else \
+                    (lambda ids_: cohort_overflow(ids_, C, capacity))
+
                 def train(params, ids, n_iters, sub):
+                    if capacity is not None:
+                        n_iters = jnp.where(cohort_overflow(ids, C,
+                                                            capacity),
+                                            0, n_iters)
                     params_k, losses = core(params, x, y, offs, lens, ids,
                                             n_iters, sub)
                     n = jnp.minimum(sizes[ids], max_n)
@@ -761,7 +880,8 @@ class RoundEngine:
                                                  n_iters)
                     return new_global, losses
 
-                one_round = make_one_round(select, train, sizes, mu, sigma)
+                one_round = make_one_round(select, train, sizes, mu, sigma,
+                                           overflow)
                 return jax.lax.scan(one_round, state, ts)
 
             return shard_map_unchecked(

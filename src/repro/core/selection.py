@@ -25,6 +25,11 @@ scatter (``value_update_device``), so the scan driver can select cohorts
 and refresh values inside one jitted ``lax.scan`` without a host sync.
 The host driver's device-rng mode calls the same functions eagerly, which
 is what makes host-vs-scan cohort sequences bit-identical.
+
+Capacity compaction (ISSUE 5): once a cohort is selected on a sharded
+mesh, ``resolve_capacity`` / ``cohort_overflow`` / ``compact_lane_map``
+decide which of its slots each shard actually executes — see the
+capacity-compacted section below for the deterministic overflow policy.
 """
 from __future__ import annotations
 
@@ -233,6 +238,104 @@ def select_cohort_sharded(key, values, k: int, n_shards: int,
     gids = (local + jnp.arange(n_shards, dtype=jnp.int32)[:, None] * C)
     return merge_topk_candidates(vals, gids.astype(jnp.int32),
                                  n_shards * C, k)
+
+
+# ---------------------------------------------------------------------------
+# capacity-compacted cohort execution (ISSUE 5)
+# ---------------------------------------------------------------------------
+#
+# With the client axis sharded over S devices, the masked sharded round
+# (ISSUE 4) runs all K cohort slots on EVERY shard — non-owned budgets are
+# zeroed, so sharding scales data residency but not round compute.  The
+# compaction map below turns the mesh into real compute scaling: each shard
+# packs its owned cohort slots into a dense ``[capacity]`` lane block
+# (``capacity ~ K/S``), runs only that block, and scatters results back to
+# the global ``[K]`` slots.
+#
+# Overflow policy (documented, deterministic): a shard that owns more than
+# ``capacity`` cohort slots keeps the FIRST ``capacity`` of them in slot-
+# index order; the remaining slots OVERFLOW.  An overflowed client runs
+# nothing this round — the server treats it exactly like a paper-style
+# dropped straggler (E~ forced below L, so the Ira/Fassa history update
+# takes the existing crash branch and the self-adaptive estimator absorbs
+# the drop) and reports it in the per-round ``overflowed`` counter.  Slot-
+# index ordering makes the drop independent of scores, rng state and shard
+# count given the cohort — the same cohort always overflows the same slots.
+
+AUTO_CAPACITY_SLACK = 2   # "auto": ceil(K / S) * slack, capped at K
+
+
+def resolve_capacity(spec, k: int, n_shards: int):
+    """``ServerConfig.cohort_capacity`` -> per-shard lane count or None.
+
+    ``None``/"full" -> None (the masked full-K path, bitwise PR-4 parity);
+    "auto" -> ``min(K, AUTO_CAPACITY_SLACK * ceil(K / n_shards))``; an int
+    is clamped to ``[1, K]``.  Any non-"full" spec requires a sharded mesh:
+    compaction is per shard, a replicated run has nothing to compact.
+    """
+    if spec is None or spec == "full":
+        return None
+    if not n_shards:
+        raise ValueError(
+            f"cohort_capacity={spec!r} requires mesh sharding "
+            "(ServerConfig.mesh_shards >= 1); only 'full' runs replicated")
+    if spec == "auto":
+        return min(k, AUTO_CAPACITY_SLACK * (-(-k // n_shards)))
+    cap = int(spec)
+    if cap < 1:
+        raise ValueError(f"cohort_capacity must be >= 1, got {cap}")
+    return min(cap, k)
+
+
+def cohort_shard_ranks(ids, clients_per_shard: int):
+    """Per-slot rank of each cohort slot within its owning shard.
+
+    ``ids`` is the [K] cohort (global client ids); the owning shard of slot
+    ``k`` is ``ids[k] // clients_per_shard``.  Returns int32 [K]:
+    ``rank[k]`` = how many earlier slots (j < k) the same shard owns.  Works
+    traced (jnp) and eagerly on numpy inputs; K is small so the [K, K]
+    intermediate is negligible.
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    K = ids.shape[0]
+    shard = ids // jnp.int32(clients_per_shard)
+    same = shard[:, None] == shard[None, :]
+    earlier = jnp.arange(K)[None, :] < jnp.arange(K)[:, None]
+    return (same & earlier).sum(axis=1).astype(jnp.int32)
+
+
+def cohort_overflow(ids, clients_per_shard: int, capacity: int):
+    """[K] bool mask of cohort slots dropped by the capacity policy.
+
+    Slot ``k`` overflows iff its owning shard already keeps ``capacity``
+    earlier slots — i.e. ``rank >= capacity`` with ranks in slot-index
+    order (the deterministic policy above).  Shared by the engine (zeroing
+    budgets inside the round), the server (routing the Ira/Fassa update
+    through the crash branch) and the stats counters, so all three always
+    agree on which clients were dropped.
+    """
+    return cohort_shard_ranks(ids, clients_per_shard) >= capacity
+
+
+def compact_lane_map(ids, clients_per_shard: int, shard, capacity: int):
+    """Dense lane -> cohort-slot map for one shard.
+
+    Returns int32 [capacity]: ``lane_map[l]`` is the cohort slot index the
+    shard executes in lane ``l``, or ``K`` (one past the last slot — the
+    unused-lane sentinel) when the shard owns fewer than ``capacity``
+    non-overflowed slots.  Lane order is owned-slot rank, so lanes are
+    filled front-to-back in slot-index order; scattering lane results with
+    ``mode="drop"`` at these indices rebuilds the global [K] stack.
+    ``shard`` may be traced (``lax.axis_index`` inside ``shard_map``).
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    K = ids.shape[0]
+    own = (ids // jnp.int32(clients_per_shard)) == shard
+    rank = jnp.cumsum(own) - 1              # rank among owned, slot order
+    keep = own & (rank < capacity)
+    lane = jnp.where(keep, rank, capacity)  # capacity = dropped scatter row
+    return jnp.full((capacity,), K, jnp.int32).at[lane].set(
+        jnp.arange(K, dtype=jnp.int32), mode="drop")
 
 
 def value_update_device(values, sizes, ids, losses, uploaded):

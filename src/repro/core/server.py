@@ -58,6 +58,23 @@ devices: on CPU simulate them with REPRO_FORCE_HOST_DEVICES=S (or
 ``launch.hostdev.force_host_devices``) before jax initializes, as the CI
 ``multi-device`` job does.  True multi-host (process-spanning mesh,
 per-host data loading) remains future work — see ROADMAP.
+
+Capacity compaction (``ServerConfig.cohort_capacity``, ISSUE 5): how much
+of the cohort each shard actually EXECUTES.  The default "full" runs all
+K slots on every shard with non-owned budgets masked — bitwise the PR-4
+round, but zero compute scaling.  "auto" (ceil(K/S) * slack, capped at K)
+or an explicit int compacts each shard's owned slots into a dense
+capacity-sized lane block, so per-shard round compute drops to ~K/S lanes
+— the mesh now scales round time, not just data residency.  Owned slots
+past capacity OVERFLOW deterministically (slot-index order,
+``core.selection.cohort_overflow``): the overflowed client runs nothing,
+its E~ is forced to 0 so the Ira/Fassa update takes the existing crash
+branch (the self-adaptive estimator absorbs the drop exactly like a
+paper-style straggler), and both drivers surface the per-round
+``overflowed``/``dropped`` counters through ``run_round`` stats and the
+``history`` dict so capacity drops are never silent.  Any ``capacity >=
+max owned slots per shard`` remains bitwise-identical to "full"
+(tests/test_capacity.py).
 """
 from __future__ import annotations
 
@@ -74,8 +91,10 @@ from repro.core.aggregation import get_aggregator
 from repro.core.engine import RoundEngine, budget_iters
 from repro.core.heterogeneity import HeterogeneitySim, sample_workloads_device
 from repro.core.rounds import make_eval_fn
-from repro.core.selection import (ValueTracker, get_selection, select_active,
-                                  select_cohort_device, value_update_device)
+from repro.core.selection import (ValueTracker, cohort_overflow,
+                                  get_selection, resolve_capacity,
+                                  select_active, select_cohort_device,
+                                  value_update_device)
 from repro.data.federated import FederatedDataset
 
 DRIVERS = ("host", "scan")
@@ -116,6 +135,19 @@ class ServerConfig:
                                  # shards the client axis over an N-way
                                  # `data` mesh (needs N devices; on CPU
                                  # simulate via hostdev.force_host_devices)
+    cohort_capacity: object = "full"
+                                 # per-shard executed cohort lanes (sharded
+                                 # runs only): "full" = masked K-lane mode
+                                 # (bitwise PR-4 parity), "auto" =
+                                 # ceil(K/S)*slack capped at K, or an int;
+                                 # owned slots past capacity overflow ->
+                                 # dropped via the Ira/Fassa crash branch
+                                 # (core.selection.resolve_capacity)
+    agg_weighted: bool = False   # robust aggregators weight surviving
+                                 # uploads by n_k instead of uniformly
+                                 # (trimmed_mean/median/krum/
+                                 # geometric_median/bulyan)
+    n_byzantine: int = 0         # assumed byzantine uploads (krum/bulyan)
     rng_impl: str = ""           # "" auto (numpy for host, device for scan)
                                  # | numpy | device — which PRNG streams
                                  # drive heterogeneity/selection
@@ -169,19 +201,30 @@ class FedSAEServer:
         else:
             self.mesh = None
             self.packed = dataset.packed(self.max_n)
+        # ISSUE 5: per-shard executed lane count (None = masked "full"
+        # mode); validates the config (non-"full" requires mesh_shards)
+        self.capacity = resolve_capacity(
+            cfg.cohort_capacity, cfg.n_selected, cfg.mesh_shards)
         self._mu_dev, self._sigma_dev = self.het.device_params()
         agg_kwargs = {}
         if cfg.aggregator == "trimmed_mean":
-            agg_kwargs["trim_ratio"] = cfg.trim_ratio
+            agg_kwargs.update(trim_ratio=cfg.trim_ratio,
+                              weighted=cfg.agg_weighted)
         elif cfg.aggregator == "fedprox":
             agg_kwargs["prox_mu"] = cfg.prox_mu
+        elif cfg.aggregator in ("median", "geometric_median"):
+            agg_kwargs["weighted"] = cfg.agg_weighted
+        elif cfg.aggregator in ("krum", "bulyan"):
+            agg_kwargs.update(n_byzantine=cfg.n_byzantine,
+                              weighted=cfg.agg_weighted)
         aggregator = get_aggregator(cfg.aggregator, **agg_kwargs)
         self.engine = RoundEngine(
             lr=cfg.lr, aggregator=aggregator,
             prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else None)
         self.round_fn = self.engine.make_packed_round(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
-            sampling=cfg.sampling, backend=cfg.backend, mesh=self.mesh)
+            sampling=cfg.sampling, backend=cfg.backend, mesh=self.mesh,
+            capacity=self.capacity)
         self.segment_fn = self.engine.make_segment_fn(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
             cfg, mesh=self.mesh) if cfg.driver == "scan" else None
@@ -190,7 +233,8 @@ class FedSAEServer:
         self.eval_fn = make_eval_fn(model)
         self.history: Dict[str, List] = {
             "acc": [], "test_loss": [], "train_loss": [], "dropout": [],
-            "assigned": [], "uploaded": [], "true_workload": []}
+            "assigned": [], "uploaded": [], "true_workload": [],
+            "overflowed": [], "dropped": []}
         self.cohorts: List[np.ndarray] = []   # [K] ids per executed round
         self.host_syncs = 0                   # device->host pulls
 
@@ -282,7 +326,16 @@ class FedSAEServer:
         cfg = self.cfg
         E_true_all, ids = self._draw_round_inputs(t)
         E_true = E_true_all[ids]
-        e_eff, outcome, assigned = self._workloads(ids, E_true)
+        # capacity overflow (ISSUE 5): slots dropped by the per-shard lane
+        # budget never run — force E~ = 0 so the workload update takes the
+        # existing crash branch (same masking the scan driver applies)
+        if self.capacity is not None:
+            ovf = np.asarray(cohort_overflow(
+                ids, self.packed.clients_per_shard, self.capacity))
+        else:
+            ovf = np.zeros(len(ids), bool)
+        e_eff, outcome, assigned = self._workloads(
+            ids, np.where(ovf, 0.0, E_true))
 
         # no host restack: only the [K] cohort ids / budgets cross to device;
         # the packed federation was uploaded once at construction
@@ -313,6 +366,8 @@ class FedSAEServer:
         stats = {
             "round": t,
             "dropout": float((outcome == pred.DROPPED).mean()),
+            "dropped": float((outcome == pred.DROPPED).sum()),
+            "overflowed": float(ovf.sum()),
             "train_loss": float(losses[uploaders].mean()) if uploaders.any()
             else float("nan"),
             "assigned": float(np.mean(assigned)),
@@ -378,6 +433,8 @@ class FedSAEServer:
                 last = i == b - 1
                 row = {
                     "dropout": float(stats["dropout"][i]),
+                    "dropped": float(stats["dropped"][i]),
+                    "overflowed": float(stats["overflowed"][i]),
                     "train_loss": float(stats["train_loss"][i]),
                     "assigned": float(stats["assigned"][i]),
                     "uploaded": float(stats["uploaded"][i]),
@@ -388,10 +445,12 @@ class FedSAEServer:
                 for k in self.history:
                     self.history[k].append(row.get(k, float("nan")))
             if verbose:
+                ovf = "" if self.capacity is None else (
+                    f" overflowed={float(np.sum(stats['overflowed'])):.0f}")
                 print(f"[{cfg.algo}/scan] rounds {t0:3d}-{t0 + b - 1:3d} "
                       f"acc={acc:.3f} "
                       f"dropout={float(stats['dropout'][-1]):.2f} "
-                      f"loss={float(stats['train_loss'][-1]):.3f}")
+                      f"loss={float(stats['train_loss'][-1]):.3f}{ovf}")
             t0 += b
         self._absorb_state(state)
         return self.history
@@ -414,7 +473,9 @@ class FedSAEServer:
             for k in self.history:
                 self.history[k].append(stats.get(k, float("nan")))
             if verbose and (t % 10 == 0 or t == T - 1):
+                ovf = "" if self.capacity is None else (
+                    f" overflowed={stats['overflowed']:.0f}")
                 print(f"[{self.cfg.algo}] round {t:3d} acc={stats['acc']:.3f} "
                       f"dropout={stats['dropout']:.2f} "
-                      f"loss={stats['train_loss']:.3f}")
+                      f"loss={stats['train_loss']:.3f}{ovf}")
         return self.history

@@ -4,7 +4,10 @@ The XLA packed-round gather (``flat_x[min(offsets[ids,None]+arange(max_n),
 total-1)]``) materialises a ``[K, max_n]`` index intermediate and pads the
 cohort with clamp-gathered neighbour rows that the mask then has to cancel.
 This kernel fuses the three stages — offset lookup, contiguous window copy,
-padding mask — into one ``pallas_call``: the grid is the cohort axis ``K``,
+padding mask — into one ``pallas_call``: the grid is the cohort BLOCK axis
+(the full cohort ``K``, or the shard's capacity-compacted lane block of
+ISSUE 5 — the grid size is simply ``starts.shape[0]``, so compacted
+[capacity]-sized inputs get capacity-sized grids with no kernel variant),
 per-client start/length arrive via scalar prefetch (available before the
 body runs, so they can address the DMA), and each grid step issues one
 HBM->VMEM DMA of the client's ``[max_n, feat]`` window while the VPU writes
@@ -54,7 +57,10 @@ def fed_cohort_gather_fwd(flat_x, flat_y, starts, ns, *, max_n: int,
                           interpret: bool = True):
     """flat_x: [total(+pad), ...feat]; flat_y: [total(+pad)] int32;
     starts/ns: [K] int32 (cohort offsets / clipped lengths) ->
-    (x [K, max_n, ...feat], y [K, max_n], mask [K, max_n] f32)."""
+    (x [K, max_n, ...feat], y [K, max_n], mask [K, max_n] f32).
+
+    K here is the cohort block being executed — the full cohort or a
+    capacity-compacted shard block; the grid is sized from the input."""
     K = starts.shape[0]
     feat_shape = flat_x.shape[1:]
     feat = math.prod(feat_shape) if feat_shape else 1

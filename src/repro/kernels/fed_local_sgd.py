@@ -10,6 +10,11 @@ round-trip), and FedSAE's heterogeneous budgets stay uniform control flow —
 every client executes ``max_iters`` slots, updates masked by
 ``i < n_iters_k`` exactly like the scan path.
 
+The grid is the leading cohort-block axis of the inputs: the full cohort
+``K``, or — under capacity-compacted sharded execution (ISSUE 5) — the
+shard's dense ``[capacity]`` lane block, so the kernel sweeps only the
+lanes the shard actually owns with no capacity-specific variant.
+
 Specialised to the paper's convex model (multinomial logistic regression,
 params ``{"w": [d, C], "b": [C]}``) and the ``sampling="iid"`` minibatch
 rule: batch indices are drawn OUTSIDE the kernel with the same

@@ -106,6 +106,11 @@ fused_softmax_xent.defvjp(_fx_fwd, _fx_bwd)
 # through — the gather is a data movement, and the local-SGD kernel computes
 # its softmax-xent gradients in closed form inside the kernel — so neither op
 # carries a custom_vjp.
+#
+# Both ops size their grid from the leading cohort-block axis of the inputs:
+# K lanes for a full cohort, or the shard's [capacity] compacted lane block
+# under capacity-compacted sharded execution (ISSUE 5) — no capacity-
+# specific kernel variants exist or are needed.
 # ---------------------------------------------------------------------------
 
 

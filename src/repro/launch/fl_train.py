@@ -52,17 +52,27 @@ def run_flat(args):
                        al_rounds=args.al_rounds, h_cap=24.0,
                        aggregator=args.aggregator,
                        trim_ratio=args.trim_ratio,
+                       agg_weighted=args.agg_weighted,
+                       n_byzantine=args.n_byzantine,
                        selection=args.selection,
                        sampling=args.sampling,
                        backend=args.backend,
                        driver=args.driver,
                        block_size=args.block_size,
-                       mesh_shards=args.shards)
+                       mesh_shards=args.shards,
+                       cohort_capacity=args.cohort_capacity)
     srv = FedSAEServer(ds, model, cfg,
                        het=HeterogeneitySim(ds.n_clients, seed=cfg.seed))
     hist = srv.run(verbose=True)
+    # overflow drops would otherwise be invisible outside the engine: a
+    # compacted run always reports how many cohort slots it sacrificed
+    ovf = "" if srv.capacity is None else (
+        f" overflowed={np.sum(hist['overflowed']):.0f}"
+        f"/{len(hist['overflowed']) * cfg.n_selected:.0f} slots"
+        f" (capacity={srv.capacity})")
     print(f"final: acc={hist['acc'][-1]:.3f} "
-          f"mean_dropout={np.nanmean(hist['dropout']):.3f}")
+          f"mean_dropout={np.nanmean(hist['dropout']):.3f}"
+          f" dropped={np.sum(hist['dropped']):.0f}{ovf}")
 
 
 def run_silo(args):
@@ -92,6 +102,12 @@ def run_silo(args):
     print("silo FL done")
 
 
+def parse_capacity(spec: str):
+    """--cohort-capacity accepts "full", "auto" or an int lane count.
+    Used as the argparse ``type`` so a typo dies as a clean usage error."""
+    return spec if spec in ("full", "auto") else int(spec)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="femnist", choices=list(DATASETS))
@@ -101,9 +117,14 @@ def main():
     ap.add_argument("--al-rounds", type=int, default=0)
     ap.add_argument("--aggregator", default="fedavg",
                     choices=("fedavg", "fedprox", "trimmed_mean", "median",
-                             "krum", "geometric_median"))
+                             "krum", "geometric_median", "bulyan"))
     ap.add_argument("--trim-ratio", type=float, default=0.1,
                     help="fraction trimmed per end (trimmed_mean only)")
+    ap.add_argument("--agg-weighted", action="store_true",
+                    help="robust aggregators weight the surviving uploads "
+                         "by client sample counts n_k instead of uniformly")
+    ap.add_argument("--n-byzantine", type=int, default=0,
+                    help="assumed byzantine uploads (krum / bulyan)")
     ap.add_argument("--selection", default="random",
                     choices=("random", "active", "loss_proportional"),
                     help="cohort selection after the AL warm-up rounds")
@@ -130,6 +151,14 @@ def main():
                          "(0 = replicated; needs N devices — set "
                          "REPRO_FORCE_HOST_DEVICES/XLA_FLAGS to simulate "
                          "them on CPU before jax initializes)")
+    ap.add_argument("--cohort-capacity", default="full",
+                    type=parse_capacity,
+                    help="per-shard executed cohort lanes (with --shards): "
+                         "'full' = masked K-lane parity mode, 'auto' = "
+                         "ceil(K/S)*slack capped at K, or an explicit int; "
+                         "owned slots past capacity are dropped "
+                         "deterministically through the Ira/Fassa crash "
+                         "branch and reported per round as overflowed")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--silo-arch", default=None)
     ap.add_argument("--silos", type=int, default=4)

@@ -1,0 +1,349 @@
+"""Capacity-compacted sharded cohort execution (ISSUE 5).
+
+Three layers of proof, mirroring tests/test_sharding.py:
+
+  * mesh-free: the compaction map is a PARTITION — across shards, every
+    owned non-overflowed cohort slot appears in exactly one lane exactly
+    once, overflow is deterministic slot-index order (hypothesis property
+    over populations x shard counts x capacities, including ghost-padded
+    shards, starved shards and the worst-case all-clients-on-one-shard
+    cohort);
+  * single-device (tier-1): the COMPACTED code path with ``capacity >= max
+    owned slots`` is bitwise the replicated run on a 1-shard mesh for both
+    drivers and both sampling rules, and an overflowing capacity drives
+    the documented drop policy: per-round ``overflowed`` counters surface
+    in stats/history, the Ira/Fassa history of an overflowed client takes
+    the crash branch (L/H halved), its training value stays untouched, and
+    host-vs-scan parity holds bitwise WITH overflow active;
+  * simulated multi-device (skipped unless >= 8 host devices, forced in
+    the CI ``multi-device`` job): capacity="full" and ``capacity >= max
+    owned`` reproduce the replicated run bitwise on 2- and 8-shard meshes
+    across backends (xla/pallas) and drivers (host/scan); an "auto"
+    capacity run on 8 shards completes finite with its drops counted.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro.core.selection import (AUTO_CAPACITY_SLACK, cohort_overflow,
+                                  cohort_shard_ranks, compact_lane_map,
+                                  resolve_capacity)
+from repro.data.federated import make_femnist_like
+from repro.models.fl_models import make_mclr
+
+N_CLIENTS = 24
+DIM = 16
+N_DEVICES = len(jax.devices())
+
+needs_devices = lambda n: pytest.mark.skipif(  # noqa: E731
+    N_DEVICES < n, reason=f"needs {n} (simulated) devices, have {N_DEVICES};"
+    " set REPRO_FORCE_HOST_DEVICES / XLA_FLAGS before jax initializes")
+
+
+@pytest.fixture(scope="module")
+def fed():
+    ds = make_femnist_like(n_clients=N_CLIENTS, total=1400, dim=DIM,
+                           max_size=60)
+    return ds, make_mclr(DIM, ds.n_classes)
+
+
+_RUNS = {}
+
+
+def _run(fed, driver, shards, capacity, sampling="shuffle", backend="xla",
+         rounds=6):
+    """Run a small server to completion, memoized per configuration."""
+    key = (driver, shards, capacity, sampling, backend, rounds)
+    if key in _RUNS:
+        return _RUNS[key]
+    ds, model = fed
+    cfg = ServerConfig(algo="ira", n_selected=8, rounds=rounds, h_cap=4.0,
+                       fixed_epochs=4.0, sampling=sampling, driver=driver,
+                       block_size=3, backend=backend, mesh_shards=shards,
+                       cohort_capacity=capacity,
+                       rng_impl="device" if driver == "host" else "")
+    srv = FedSAEServer(ds, model, cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=0))
+    srv.run()
+    _RUNS[key] = srv
+    return srv
+
+
+def _assert_same_run(a, b, exact=True, atol=2e-5, cross_driver=False):
+    """cohorts + params + history parity.  ``cross_driver`` relaxes the
+    columns whose AGGREGATION differs legitimately between drivers: the
+    scan driver evaluates at most once per block (acc/test_loss cadence),
+    and its stats reductions are masked sums where the host driver
+    fancy-indexes then means (same f32 values, different summation tree ->
+    ulp-level drift on train_loss & co).  Params, cohorts and the
+    dropout/dropped/overflowed counters must still match bitwise."""
+    assert len(a.cohorts) == len(b.cohorts)
+    for x, y in zip(a.cohorts, b.cohorts):
+        np.testing.assert_array_equal(x, y)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=atol)
+    for k in a.history:
+        if cross_driver and k in ("acc", "test_loss"):
+            continue
+        ha, hb = np.asarray(a.history[k]), np.asarray(b.history[k])
+        if exact and not (cross_driver and k in (
+                "train_loss", "assigned", "uploaded", "true_workload")):
+            np.testing.assert_array_equal(ha, hb)
+        else:
+            np.testing.assert_allclose(ha, hb, rtol=1e-5, atol=max(atol, 1e-6),
+                                       equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# capacity resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_capacity_modes():
+    assert resolve_capacity("full", 10, 4) is None
+    assert resolve_capacity(None, 10, 0) is None
+    # auto = slack * ceil(K/S), capped at K
+    assert resolve_capacity("auto", 30, 8) == AUTO_CAPACITY_SLACK * 4
+    assert resolve_capacity("auto", 8, 1) == 8
+    assert resolve_capacity(3, 8, 2) == 3
+    assert resolve_capacity(99, 8, 2) == 8      # ints clamp to K
+    with pytest.raises(ValueError, match="mesh"):
+        resolve_capacity("auto", 10, 0)
+    with pytest.raises(ValueError, match=">= 1"):
+        resolve_capacity(0, 10, 2)
+
+
+def test_capacity_requires_mesh_at_server_and_engine(fed):
+    ds, model = fed
+    with pytest.raises(ValueError, match="mesh"):
+        FedSAEServer(ds, model,
+                     ServerConfig(n_selected=8, cohort_capacity=2),
+                     het=HeterogeneitySim(ds.n_clients, seed=0))
+    from repro.core.engine import RoundEngine
+    with pytest.raises(ValueError, match="mesh"):
+        RoundEngine(lr=0.03).make_packed_round(model, 10, 6, 60, capacity=4)
+
+
+# ---------------------------------------------------------------------------
+# compaction map: partition property (mesh-free)
+# ---------------------------------------------------------------------------
+
+
+def _reference_overflow(ids, C, capacity):
+    """Slot-index-order overflow, the documented policy, in plain python."""
+    seen = {}
+    ovf = np.zeros(len(ids), bool)
+    for k, g in enumerate(ids):
+        s = g // C
+        seen[s] = seen.get(s, 0) + 1
+        ovf[k] = seen[s] > capacity
+    return ovf
+
+
+def _check_partition(ids, n_shards, C, capacity):
+    K = len(ids)
+    ovf = np.asarray(cohort_overflow(ids, C, capacity))
+    np.testing.assert_array_equal(ovf, _reference_overflow(ids, C, capacity))
+    executed = []
+    for s in range(n_shards):
+        lane = np.asarray(compact_lane_map(ids, C, s, capacity))
+        assert lane.shape == (capacity,)
+        valid = lane[lane < K]
+        # a lane only serves slots its shard owns, in slot-index order
+        assert all(ids[k] // C == s for k in valid)
+        assert list(valid) == sorted(valid)
+        executed.extend(valid.tolist())
+    # PARTITION: every non-overflowed slot executes exactly once, nowhere
+    # else; overflowed slots execute nowhere
+    assert sorted(executed) == sorted(np.flatnonzero(~ovf).tolist())
+    assert len(executed) == len(set(executed))
+
+
+def test_compaction_partition_property():
+    """Property (hypothesis): partition + deterministic overflow for every
+    population / shard count / capacity, ghost-padded or not."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=60)
+    @given(data=st.data())
+    def check(data):
+        n = data.draw(st.integers(2, 64), label="n_clients")
+        shards = data.draw(st.integers(1, 12), label="shards")
+        C = -(-n // shards)                    # ghost-padded when S !| N
+        k = data.draw(st.integers(1, min(n, 12)), label="k")
+        capacity = data.draw(st.integers(1, k), label="capacity")
+        ids = np.asarray(data.draw(
+            st.permutations(list(range(n))), label="ids")[:k])
+        _check_partition(ids, shards, C, capacity)
+
+    check()
+
+
+@pytest.mark.parametrize("n,shards,k,capacity", [
+    (5, 8, 3, 1),     # more shards than clients: most shards starve
+    (6, 4, 4, 2),     # non-dividing population: last shard is half ghosts
+    (10, 7, 10, 1),   # K == N through heavy ghost padding
+])
+def test_compaction_ghost_and_starved_shards(n, shards, k, capacity):
+    rng = np.random.default_rng(n * 100 + shards)
+    C = -(-n // shards)
+    for _ in range(5):
+        ids = rng.choice(n, k, replace=False)
+        _check_partition(ids, shards, C, capacity)
+
+
+def test_compaction_worst_case_all_clients_on_one_shard():
+    """The adversarial cohort for a static capacity: every selected client
+    lives on shard 0.  capacity lanes execute, the rest overflow — in slot
+    order — and every other shard runs only sentinel lanes."""
+    C, shards, K = 10, 4, 8
+    ids = np.arange(K)                         # all owned by shard 0
+    for capacity in (1, 3, 8):
+        ovf = np.asarray(cohort_overflow(ids, C, capacity))
+        np.testing.assert_array_equal(ovf, np.arange(K) >= capacity)
+        lane0 = np.asarray(compact_lane_map(ids, C, 0, capacity))
+        np.testing.assert_array_equal(
+            lane0[:min(capacity, K)], np.arange(min(capacity, K)))
+        for s in range(1, shards):
+            assert (np.asarray(compact_lane_map(ids, C, s, capacity))
+                    == K).all()
+        _check_partition(ids, shards, C, capacity)
+
+
+def test_shard_ranks_count_duplicate_owners():
+    ids = np.array([0, 5, 1, 9, 2, 8])         # C=5: shards 0,1,0,1,0,1
+    np.testing.assert_array_equal(
+        np.asarray(cohort_shard_ranks(ids, 5)), [0, 0, 1, 1, 2, 2])
+
+
+# ---------------------------------------------------------------------------
+# single-device parity + overflow policy (tier-1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("driver", ["host", "scan"])
+@pytest.mark.parametrize("sampling", ["shuffle", "iid"])
+def test_compacted_capacity_k_bitwise_one_shard(fed, driver, sampling):
+    """capacity == K >= max owned: the COMPACTED path (lane gather +
+    scatter-psum) must be bitwise the replicated run — the acceptance
+    criterion's single-device leg, exercised in every tier-1 run."""
+    rep = _run(fed, driver, 0, "full", sampling)
+    cap = _run(fed, driver, 1, 8, sampling)
+    _assert_same_run(rep, cap, exact=True)
+
+
+def test_auto_capacity_one_shard_is_full_cohort(fed):
+    """S=1: auto resolves to K, so the compacted run is still bitwise."""
+    _assert_same_run(_run(fed, "scan", 0, "full"),
+                     _run(fed, "scan", 1, "auto"), exact=True)
+
+
+def test_overflow_counters_and_crash_branch(fed):
+    """K=8 cohort on a 1-shard mesh with capacity=2: 6 slots overflow every
+    round.  The counters surface in history, the drop goes through the
+    Ira crash branch (L/H halved, value untouched), and the budgets of
+    overflowed slots are zero so they never contribute to aggregation."""
+    ds, model = fed
+    cfg = ServerConfig(algo="ira", n_selected=8, rounds=1, h_cap=4.0,
+                       fixed_epochs=4.0, driver="host", rng_impl="device",
+                       mesh_shards=1, cohort_capacity=2)
+    srv = FedSAEServer(ds, model, cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=0))
+    v0 = srv.values.v.copy()
+    stats = srv.run_round(0)
+    assert stats["overflowed"] == 6.0
+    assert stats["dropped"] >= 6.0             # overflow counts as dropped
+    ids = srv.cohorts[0]
+    ovf = np.asarray(cohort_overflow(ids, srv.packed.clients_per_shard, 2))
+    np.testing.assert_array_equal(ovf, np.arange(8) >= 2)
+    for k, g in enumerate(ids):
+        if ovf[k]:
+            # crash branch from the (1.0, 2.0) init pair: L/2, H/2
+            assert srv.L[g] == pytest.approx(0.5)
+            assert srv.H[g] == pytest.approx(1.0)
+            # no upload -> value untouched (modulo the device path's
+            # float32 round-trip of the whole vector)
+            assert srv.values.v[g] == np.float32(v0[g])
+
+
+def test_overflow_host_equals_scan_bitwise(fed):
+    """Driver parity must survive overflow: both drivers apply the same
+    deterministic mask to E~ before the history update."""
+    ov_s = _run(fed, "scan", 1, 2)
+    ov_h = _run(fed, "host", 1, 2)
+    _assert_same_run(ov_s, ov_h, exact=True, cross_driver=True)
+    assert np.asarray(ov_s.history["overflowed"]).sum() > 0
+
+
+def test_overflow_is_visible_in_history(fed):
+    full = _run(fed, "scan", 1, "full")
+    assert np.asarray(full.history["overflowed"]).sum() == 0
+    over = _run(fed, "scan", 1, 2)
+    assert all(o == 6.0 for o in over.history["overflowed"])
+    assert np.asarray(over.history["dropped"]).min() >= 6.0
+
+
+# ---------------------------------------------------------------------------
+# simulated multi-device parity (the CI `multi-device` leg)
+# ---------------------------------------------------------------------------
+
+
+@needs_devices(8)
+@pytest.mark.parametrize("shards", [2, 8])
+@pytest.mark.parametrize("capacity", ["full", 8])
+def test_sharded_capacity_bitwise_shuffle(fed, shards, capacity):
+    """Acceptance: capacity="full" AND capacity=K (>= max owned per shard)
+    reproduce the replicated run bitwise on real shard counts."""
+    _assert_same_run(_run(fed, "scan", 0, "full"),
+                     _run(fed, "scan", shards, capacity), exact=True)
+
+
+@needs_devices(8)
+@pytest.mark.parametrize("shards", [2, 8])
+def test_sharded_capacity_k_iid_tolerance(fed, shards):
+    _assert_same_run(_run(fed, "scan", 0, "full", "iid"),
+                     _run(fed, "scan", shards, 8, "iid"),
+                     exact=False, atol=2e-5)
+
+
+@needs_devices(8)
+@pytest.mark.parametrize("sampling", ["shuffle", "iid"])
+def test_sharded_capacity_pallas_backend(fed, sampling):
+    """The fed_gather / fed_local_sgd kernels compose with compacted
+    (capacity-sized) grids: 2-shard capacity=K pallas == replicated
+    pallas."""
+    rep = _run(fed, "scan", 0, "full", sampling, backend="pallas", rounds=4)
+    cap = _run(fed, "scan", 2, 8, sampling, backend="pallas", rounds=4)
+    _assert_same_run(rep, cap, exact=sampling == "shuffle", atol=2e-5)
+
+
+@needs_devices(8)
+def test_sharded_capacity_host_driver(fed):
+    """make_packed_round with capacity under shard_map: the per-round host
+    driver composes with compacted execution bitwise."""
+    _assert_same_run(_run(fed, "host", 0, "full"),
+                     _run(fed, "host", 2, 8), exact=True)
+
+
+@needs_devices(8)
+def test_sharded_auto_capacity_completes_and_counts(fed):
+    """8 shards, auto capacity (= 2 lanes/shard for K=8): unbalanced
+    cohorts overflow, the run stays finite, the counters record exactly
+    the slots the deterministic policy drops, and host == scan bitwise."""
+    auto_s = _run(fed, "scan", 8, "auto")
+    auto_h = _run(fed, "host", 8, "auto")
+    _assert_same_run(auto_s, auto_h, exact=True, cross_driver=True)
+    for leaf in jax.tree.leaves(auto_s.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    C = auto_s.packed.clients_per_shard
+    cap = auto_s.capacity
+    want = [float(np.asarray(cohort_overflow(ids, C, cap)).sum())
+            for ids in auto_s.cohorts]
+    np.testing.assert_array_equal(auto_s.history["overflowed"], want)

@@ -6,8 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregation import (FedAvg, FedProx, GeometricMedian, Krum,
-                                    Median, TrimmedMean, get_aggregator)
+from repro.core.aggregation import (Bulyan, FedAvg, FedProx, GeometricMedian,
+                                    Krum, Median, TrimmedMean,
+                                    get_aggregator)
 from repro.core.engine import RoundEngine
 from repro.core.rounds import make_round_fn
 from repro.core.selection import get_selection, select_loss_proportional
@@ -395,7 +396,132 @@ def test_fedprox_aggregator_carries_prox_mu_into_engine():
 
 def test_get_aggregator_unknown_name():
     with pytest.raises(ValueError, match="unknown aggregator"):
-        get_aggregator("bulyan")
+        get_aggregator("mean_of_medians")
+
+
+# ---------------------------------------------------------------------------
+# aggregator-aware client weighting + Bulyan (ISSUE 5 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_all_aggregators_keep_global_on_empty_round_incl_bulyan():
+    params_k = _stacked([[10.0, 10.0], [20.0, 20.0]])
+    g0 = {"w": jnp.array([1.0, -1.0])}
+    out = Bulyan(n_byzantine=1)(params_k, g0, jnp.zeros(2))
+    np.testing.assert_allclose(out["w"], g0["w"])
+
+
+def test_bulyan_rejects_adversarial_client_with_dominant_weight():
+    """The poisoned upload carries the LARGEST n_k — size-weighted FedAvg is
+    dragged away, but Bulyan's Krum-select step excludes it before the
+    trimmed mean ever sees it, weighted or not."""
+    honest = [[1.0, -1.0], [1.1, -0.9], [0.9, -1.1], [1.05, -0.95]]
+    params_k = _stacked(honest + [[1e6, 1e6]])
+    g0 = {"w": jnp.zeros(2)}
+    w = jnp.array([10.0, 20.0, 30.0, 40.0, 1000.0])
+
+    avg = FedAvg()(params_k, g0, w)
+    assert abs(float(avg["w"][0])) > 1e4                       # poisoned
+    for weighted in (False, True):
+        out = Bulyan(n_byzantine=1, weighted=weighted)(params_k, g0, w)
+        np.testing.assert_allclose(np.asarray(out["w"]), [1.0, -1.0],
+                                   atol=0.2)
+
+
+def test_bulyan_selects_then_trims():
+    """Both defence layers fire: the far vectors die in Krum selection,
+    and a coordinate spike on an upload CENTRAL enough to survive
+    selection ([1, 10] is l2-closer to the honest pair than the far
+    vectors are) is then suppressed by the per-coordinate trim band —
+    the failure mode Krum alone cannot catch."""
+    params_k = _stacked([[0.0, 0.0], [1.0, 10.0], [2.0, 0.0],
+                         [60.0, 60.0], [1e6, 1e6]])
+    g0 = {"w": jnp.zeros(2)}
+    out = Bulyan(n_byzantine=1)(params_k, g0, jnp.ones(5))
+    # q = 5 - 2 = 3 most central = the first three; trim 1 per end per
+    # coordinate -> [median(0,1,2), median(0,10,0)] = [1, 0]
+    np.testing.assert_allclose(np.asarray(out["w"]), [1.0, 0.0])
+
+
+def test_weighted_trimmed_mean_weights_surviving_band_only():
+    """n_k weighting applies AFTER the rank-based trim: the adversary's
+    huge weight buys nothing because its rank is trimmed, while the
+    surviving band is averaged by n_k instead of uniformly."""
+    params_k = _stacked([[1.0], [2.0], [1e9]])
+    g0 = {"w": jnp.zeros(1)}
+    w = jnp.array([1.0, 3.0, 1e6])
+    out = TrimmedMean(trim_ratio=1 / 3, weighted=True)(params_k, g0, w)
+    # trim 1 per end of the 3 valid -> only 2.0 survives
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0])
+    out = TrimmedMean(trim_ratio=0.0, weighted=True)(
+        _stacked([[1.0], [2.0]]), g0, jnp.array([1.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [1.75])  # (1+3*2)/4
+
+
+def test_weighted_median_averages_middle_pair_by_size():
+    params_k = _stacked([[1.0], [2.0], [4.0], [100.0]])
+    g0 = {"w": jnp.zeros(1)}
+    out = Median(weighted=True)(params_k, g0, jnp.array([1.0, 1.0, 3.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [(2.0 + 3 * 4.0) / 4])
+
+
+def test_weighted_false_is_bitwise_the_unweighted_aggregators():
+    """weighted=False (the default) must not perturb a single bit — the
+    weighted code path is opt-in."""
+    rng = np.random.default_rng(0)
+    params_k = _stacked(rng.normal(size=(6, 3)).tolist())
+    g0 = {"w": jnp.asarray(rng.normal(size=3).astype(np.float32))}
+    w = jnp.asarray(rng.integers(1, 50, 6).astype(np.float32))
+    for make in (lambda wt: TrimmedMean(0.2, weighted=wt),
+                 lambda wt: Median(weighted=wt),
+                 lambda wt: Krum(n_byzantine=1, multi=2, weighted=wt),
+                 lambda wt: GeometricMedian(weighted=wt)):
+        base = make(False)(params_k, g0, w)
+        again = make(False)(params_k, g0, w)
+        np.testing.assert_array_equal(np.asarray(base["w"]),
+                                      np.asarray(again["w"]))
+
+
+def test_weighted_krum_averages_winners_by_size():
+    params_k = _stacked([[1.0], [2.0], [1e9]])
+    g0 = {"w": jnp.zeros(1)}
+    out = Krum(n_byzantine=1, multi=2, weighted=True)(
+        params_k, g0, jnp.array([1.0, 3.0, 5.0]))
+    # winners {1.0, 2.0} averaged by n_k: (1*1 + 2*3) / 4
+    np.testing.assert_allclose(np.asarray(out["w"]), [1.75])
+
+
+def test_weighted_geometric_median_minority_adversary():
+    """RFA guarantee: the weighted geometric median resists an adversary
+    holding < 1/2 of the total n_k (weight-share breakdown point)."""
+    honest = [[1.0, -1.0], [1.1, -0.9], [0.9, -1.1], [1.05, -0.95]]
+    params_k = _stacked(honest + [[1e6, 1e6]])
+    g0 = {"w": jnp.zeros(2)}
+    out = GeometricMedian(weighted=True)(
+        params_k, g0, jnp.array([10.0, 20.0, 30.0, 40.0, 60.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [1.0, -1.0], atol=0.3)
+
+
+def test_bulyan_validation_and_registry():
+    with pytest.raises(ValueError):
+        Bulyan(n_byzantine=-1)
+    with pytest.raises(ValueError):
+        TrimmedMean(trim_count=-1)
+    assert isinstance(get_aggregator("bulyan", n_byzantine=1,
+                                     weighted=True), Bulyan)
+
+
+def test_engine_bulyan_round_is_finite(flat_round_case):
+    ds, model, params, ids, max_n, n_iters, rng = flat_round_case
+    engine = RoundEngine(lr=0.05, aggregator=Bulyan(n_byzantine=1),
+                         donate=False)
+    fn = engine.make_packed_round(model, 10, 12, max_n)
+    packed = ds.packed(max_n)
+    p, losses, _ = fn(params, packed.x, packed.y, packed.offsets,
+                      packed.lengths, jnp.asarray(ids, jnp.int32),
+                      jnp.asarray(n_iters), rng)
+    for leaf in jax.tree.leaves(p):
+        assert np.isfinite(np.asarray(leaf)).all()
 
 
 def test_trim_ratio_validation():
