@@ -67,6 +67,21 @@ Sharded legs (ISSUES 4+5, opt-in via --shards N on an N-device host):
                                      flake CI while a genuine loss of the
                                      compaction win still turns it red)
 
+Compressed-upload leg (ISSUE 6, ``upload_compress="topk_q8"``):
+
+  engine_scan_compress_path  the scan leg with the upload-transform stage
+                             enabled: every surviving client's delta is
+                             top-k-sparsified + int8-quantized (k = ceil(
+                             0.1 * n_params)) with the error-feedback
+                             residual riding the lax.scan carry.  Every
+                             engine/scan/sharded leg records its simulated
+                             ``upload_bytes_per_round`` (benchmarks/common
+                             .upload_bytes_per_round); the compressed
+                             leg's ratio vs the dense legs is the ISSUE-6
+                             acceptance number (<= 0.15x at the default
+                             topk_frac) and scripts/check_bench.py gates
+                             it statically from the recorded file.
+
 --sharded-only records just those two legs and merges them into the
 existing scale entry, so the standard legs keep their 1-device numbers:
 
@@ -90,6 +105,7 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from repro.launch.hostdev import force_from_env  # noqa: E402
 
 # before jax initializes: lets --shards N time the sharded scan leg on a
@@ -100,7 +116,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import (host_bytes_per_round,  # noqa: E402
+                               upload_bytes_per_round)
 from repro.core.aggregation import get_aggregator
+from repro.core.compression import n_params_of
 from repro.core.engine import RoundEngine
 from repro.core.heterogeneity import HeterogeneitySim
 from repro.core.server import ServerConfig
@@ -110,6 +129,7 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_round_engine.json")
 
 BLOCK_SIZE = 10   # rounds fused per lax.scan segment in the scan legs
+TOPK_FRAC = 0.1   # kept-coordinate fraction in the compressed-upload leg
 
 # K=30 selected per round as in the paper's MNIST runs.  The reduced scale
 # keeps the paper's max client size (400 samples) so the data path carries a
@@ -187,6 +207,9 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
 
     seed_fn = _seed_round_fn(model, 0.03, batch_size, max_iters)
     engine = RoundEngine(lr=0.03, aggregator=get_aggregator("fedavg"))
+    engine_c = RoundEngine(lr=0.03, aggregator=get_aggregator("fedavg"),
+                           compress="topk_q8", topk_frac=TOPK_FRAC)
+    n_params = n_params_of(params)
     packed = ds.packed(max_n)
     packed_fns = {
         (sampling, backend): engine.make_packed_round(
@@ -255,22 +278,22 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             sampling="iid", backend=backend, driver="scan",
             block_size=block, cohort_capacity=capacity)
 
+    def init_state():
+        return {
+            "params": jax.tree.map(jnp.copy, params),
+            "L": jnp.full(spec["n_clients"], 1.0, jnp.float32),
+            "H": jnp.full(spec["n_clients"], 2.0, jnp.float32),
+            "theta": jnp.full(spec["n_clients"], 1.5, jnp.float32),
+            "values": jnp.asarray(np.sqrt(sizes) * 2.0, jnp.float32),
+            "data_rng": jax.random.PRNGKey(seed + 1),
+            "sel_rng": jax.random.PRNGKey(seed),
+        }
+
     def timed_scan(backend, mesh=None, pk=None, capacity="full"):
         pk = packed if pk is None else pk
         seg = engine.make_segment_fn(model, batch_size, max_iters,
                                      pk.max_n,
                                      scan_cfg(backend, capacity), mesh=mesh)
-
-        def init_state():
-            return {
-                "params": jax.tree.map(jnp.copy, params),
-                "L": jnp.full(spec["n_clients"], 1.0, jnp.float32),
-                "H": jnp.full(spec["n_clients"], 2.0, jnp.float32),
-                "theta": jnp.full(spec["n_clients"], 1.5, jnp.float32),
-                "values": jnp.asarray(np.sqrt(sizes) * 2.0, jnp.float32),
-                "data_rng": jax.random.PRNGKey(seed + 1),
-                "sel_rng": jax.random.PRNGKey(seed),
-            }
 
         def run_blocks(state):
             for b in range(n_blocks):
@@ -296,6 +319,35 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             return n_blocks * block / dt, state["params"]
         return run
 
+    def timed_scan_compress(backend="xla"):
+        # the upload-transform stage under the fused driver: the [N, P]
+        # error-feedback residual joins the segment signature and the
+        # lax.scan carry
+        seg = engine_c.make_segment_fn(model, batch_size, max_iters,
+                                       packed.max_n, scan_cfg(backend))
+
+        def init_residual():
+            return jnp.zeros((spec["n_clients"], n_params), jnp.float32)
+
+        def run():
+            st, _, _ = seg(init_state(), jnp.arange(block, dtype=jnp.int32),
+                           packed.x, packed.y, packed.offsets,
+                           packed.lengths, mu_dev, sigma_dev,
+                           init_residual())
+            jax.block_until_ready(st["params"])
+            state, res = init_state(), init_residual()
+            t0 = time.perf_counter()
+            for b in range(n_blocks):
+                ts = jnp.arange(b * block, (b + 1) * block, dtype=jnp.int32)
+                state, res, stats = seg(state, ts, packed.x, packed.y,
+                                        packed.offsets, packed.lengths,
+                                        mu_dev, sigma_dev, res)
+                jax.device_get(stats)
+            jax.block_until_ready(state["params"])
+            dt = time.perf_counter() - t0
+            return n_blocks * block / dt, state["params"]
+        return run
+
     legs = {"seed": timed(seed_path_round),
             "shuffle": timed(engine_round(packed_fns[("shuffle", "xla")])),
             "iid": timed(engine_round(packed_fns[("iid", "xla")])),
@@ -303,7 +355,8 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 timed(engine_round(packed_fns[("shuffle", "pallas")])),
             "pallas_iid": timed(engine_round(packed_fns[("iid", "pallas")])),
             "scan": timed_scan("xla"),
-            "scan_pallas": timed_scan("pallas")}
+            "scan_pallas": timed_scan("pallas"),
+            "scan_compress": timed_scan_compress("xla")}
     if shards:
         # opt-in sharded legs (ISSUES 4+5): the same fused scan driver with
         # the client axis sharded over an N-way data mesh (needs N devices
@@ -348,9 +401,12 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             samples[name].append(r)
     rps = {name: float(np.median(v)) for name, v in samples.items()}
     for name in set(rps) & {"iid", "pallas_iid", "scan", "scan_pallas",
+                            "scan_compress",
                             "scan_sharded", "scan_sharded_capacity"}:
         for leaf in jax.tree.leaves(final_p[name]):
             assert np.isfinite(np.asarray(leaf)).all()
+
+    dense_upload = upload_bytes_per_round(K, n_params)
 
     def sharded_entries():
         cap = resolve_capacity("auto", K, shards)
@@ -362,6 +418,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 "cohort_capacity": "full",
                 "data": "client axis sharded over the data mesh "
                         "(shard_map); masked full-K execution",
+                "upload_bytes_per_round": dense_upload,
                 "rounds_per_sec": round(masked, 3)},
             "engine_scan_sharded_capacity_path": {
                 "driver": "scan", "sampling": "iid", "backend": "xla",
@@ -370,6 +427,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 "data": "capacity-compacted shards: each shard executes "
                         "only its owned cohort lanes (overflow -> "
                         "deterministic drop)",
+                "upload_bytes_per_round": dense_upload,
                 "rounds_per_sec": round(compact, 3),
                 "speedup_vs_masked_sharded": round(compact / masked, 3)},
         }
@@ -415,18 +473,23 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         "epochs_per_round": epochs,
         "seed_path": {"sampling": "shuffle", "data": "host restack/upload",
                       "rounds_per_sec": round(seed_rps, 3)},
+        "n_params": int(n_params),
         "engine_shuffle_path": {"sampling": "shuffle",
                                 "data": "device-resident gather",
+                                "upload_bytes_per_round": dense_upload,
                                 "rounds_per_sec": round(shuffle_rps, 3)},
         "engine_path": {"sampling": "iid", "data": "device-resident gather",
+                        "upload_bytes_per_round": dense_upload,
                         "rounds_per_sec": round(iid_rps, 3)},
         "engine_pallas_shuffle_path": {
             "sampling": "shuffle", "backend": "pallas",
             "kernels": "fed_gather",
+            "upload_bytes_per_round": dense_upload,
             "rounds_per_sec": round(rps["pallas_shuffle"], 3)},
         "engine_pallas_path": {
             "sampling": "iid", "backend": "pallas",
             "kernels": "fed_gather + fed_local_sgd",
+            "upload_bytes_per_round": dense_upload,
             "rounds_per_sec": round(rps["pallas_iid"], 3)},
         "engine_scan_path": {
             "driver": "scan", "sampling": "iid", "backend": "xla",
@@ -434,13 +497,27 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             "data": "device-resident, direct packed indexing (no cohort "
                     "shard materialized)",
             "host_syncs_per_round": round(1.0 / block, 4),
+            "upload_bytes_per_round": dense_upload,
             "rounds_per_sec": round(rps["scan"], 3)},
         "engine_scan_pallas_path": {
             "driver": "scan", "sampling": "iid", "backend": "pallas",
             "block_size": block,
             "kernels": "fed_gather + fed_local_sgd under lax.scan",
             "host_syncs_per_round": round(1.0 / block, 4),
+            "upload_bytes_per_round": dense_upload,
             "rounds_per_sec": round(rps["scan_pallas"], 3)},
+        "engine_scan_compress_path": {
+            "driver": "scan", "sampling": "iid", "backend": "xla",
+            "block_size": block,
+            "upload_compress": "topk_q8", "topk_frac": TOPK_FRAC,
+            "data": "top-k + int8 upload transform with error-feedback "
+                    "residual in the lax.scan carry",
+            "upload_bytes_per_round": upload_bytes_per_round(
+                K, n_params, "topk_q8", TOPK_FRAC),
+            "upload_compression_ratio": round(
+                upload_bytes_per_round(K, n_params, "topk_q8", TOPK_FRAC)
+                / dense_upload, 4),
+            "rounds_per_sec": round(rps["scan_compress"], 3)},
         "pallas_mode": "interpret" if jax.default_backend() == "cpu"
         else "compiled",
         "pallas_speedup_vs_engine": round(rps["pallas_iid"] / iid_rps, 3),
@@ -450,7 +527,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         "speedup": round(iid_rps / seed_rps, 3),
         "speedup_data_path_only": round(shuffle_rps / seed_rps, 3),
         "seed_path_host_bytes_per_round": int(restack_bytes),
-        "engine_host_bytes_per_round": int(2 * K * 4),  # ids + n_iters
+        "engine_host_bytes_per_round": host_bytes_per_round(K),
         "backend": jax.default_backend(),
     }
 
@@ -539,6 +616,11 @@ def main():
               f"({res['scan_speedup_vs_engine']:.2f}x engine)   pallas "
               f"({res['pallas_mode']}): "
               f"{res['engine_pallas_path']['rounds_per_sec']:.2f} rounds/s")
+        comp = res["engine_scan_compress_path"]
+        print(f"[{scale}] scan+topk_q8: {comp['rounds_per_sec']:.2f} "
+              f"rounds/s   upload {comp['upload_bytes_per_round']} B/round "
+              f"vs dense {res['engine_scan_path']['upload_bytes_per_round']}"
+              f" B/round ({comp['upload_compression_ratio']:.3f}x)")
     with open(args.out, "w") as f:
         json.dump(merged, f, indent=2)
     print(f"wrote {os.path.abspath(args.out)}")

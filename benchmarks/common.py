@@ -92,6 +92,26 @@ def save_result(name: str, payload) -> str:
     return path
 
 
+def host_bytes_per_round(k_selected: int) -> int:
+    """Host->device bytes one packed-engine round moves: the int32 cohort
+    ids and budgets are the ONLY per-round traffic across the host edge
+    (the federation itself was uploaded once at server construction)."""
+    return 2 * k_selected * 4
+
+
+def upload_bytes_per_round(k_selected: int, n_params: int,
+                           compress: str = "none",
+                           topk_frac: float = 0.1) -> int:
+    """Simulated client->server upload traffic per round — the cross-host
+    interconnect proxy recorded in BENCH_round_engine.json.  Dense uploads
+    ship n_params float32 coordinates per client; ``compress="topk_q8"``
+    ships k (int32 index + int8 value) pairs plus one float32 scale (see
+    repro.core.compression for the wire format)."""
+    from repro.core.compression import upload_bytes_per_client
+    return k_selected * upload_bytes_per_client(n_params, compress,
+                                                topk_frac)
+
+
 def std_argparser(desc: str) -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=desc)
     ap.add_argument("--scale", choices=("reduced", "paper"), default="reduced")

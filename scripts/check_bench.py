@@ -16,6 +16,13 @@ runner speed cancels:
                      REPRO_FORCE_HOST_DEVICES, so the gate runs on
                      1-device CI runners too.
 
+A third gate is STATIC (no smoke run): the recorded compressed-upload leg
+(``engine_scan_compress_path``, ISSUE 6) must ship <= 0.15x the dense
+upload bytes at the default topk_frac — the wire format is deterministic
+arithmetic, so recording it once and checking the recorded numbers is
+exact; a topk_frac or byte-accounting change that breaks the acceptance
+ratio turns CI red without timing anything.
+
 A fresh ratio more than ``--tolerance`` (default 30%) below the recorded
 one fails the job; a faster ratio prints a hint to re-record.
 
@@ -39,6 +46,28 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RECORDED = os.path.join(REPO, "BENCH_round_engine.json")
 BENCH = os.path.join(REPO, "benchmarks", "bench_round_engine.py")
 SCALE = "reduced"
+
+# ISSUE-6 acceptance: compressed upload bytes <= this fraction of dense
+# at the bench's default topk_frac
+COMPRESS_RATIO_CEILING = 0.15
+
+
+def check_upload_bytes(entry: dict) -> bool:
+    """Static ISSUE-6 gate on the RECORDED byte accounting."""
+    comp = entry.get("engine_scan_compress_path")
+    if comp is None:
+        print("check_bench[upload-bytes]: no engine_scan_compress_path "
+              "recorded — re-record BENCH_round_engine.json with the "
+              "compressed leg")
+        return False
+    dense = entry["engine_scan_path"]["upload_bytes_per_round"]
+    got = comp["upload_bytes_per_round"] / dense
+    ok = got <= COMPRESS_RATIO_CEILING
+    print(f"check_bench[upload-bytes]: compressed "
+          f"{comp['upload_bytes_per_round']} B/round vs dense {dense} "
+          f"B/round = {got:.4f}x (ceiling {COMPRESS_RATIO_CEILING}x) "
+          f"{'OK' if ok else 'FAIL'}")
+    return ok
 
 
 def scan_ratio(entry: dict) -> float:
@@ -142,7 +171,7 @@ def main() -> int:
             # relative tolerance against the recorded ratio
             1.2))
 
-    ok = True
+    ok = check_upload_bytes(entry)
     for name, fn, want, extra_args, extra_env, abs_floor in gates:
         ok = run_gate(name, fn, want, extra_args, extra_env, args,
                       abs_floor) and ok

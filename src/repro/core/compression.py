@@ -1,0 +1,145 @@
+"""Upload-transform stage: top-k delta sparsification + int8 quantization
+with per-client error feedback (ISSUE 6).
+
+Production FL is upload-bandwidth-bound: every surviving client ships a
+dense full-width float32 delta to the server each round.  This stage sits
+between local SGD and aggregation in the round pipeline (gather -> local
+SGD -> UPLOAD TRANSFORM -> aggregate):
+
+  1. delta_k = params_k - global                (what the client would ship)
+  2. ef_k    = delta_k + residual_k             (error feedback: last round's
+                                                 discarded mass re-enters
+                                                 BEFORE selection)
+  3. (q_k, scale_k) = topk_q8(ef_k)             (k = ceil(topk_frac * P)
+                                                 coords, int8 + one f32
+                                                 scale — the wire format)
+  4. transmitted_k = q_k * scale_k              (dense reconstruction on the
+                                                 server, so EVERY aggregator
+                                                 in the registry stays
+                                                 pluggable: they see a dense
+                                                 [K, ...] stack as before)
+  5. residual_k'  = ef_k - transmitted_k        (carried to the next round)
+
+The error-feedback identity ``transmitted + residual' == delta + residual``
+holds EXACTLY in float32 — not merely to rounding.  For each selected
+coordinate with q >= 1, ef and q * scale lie within a factor of two of each
+other (q = round(ef / scale) and scale = max|ef| / 127), so by Sterbenz's
+lemma the subtraction in (5) is exact and the telescoped sum of transmitted
+values reconstructs the true delta stream with zero leakage; unselected or
+q == 0 coordinates transmit exactly 0.0.  tests/test_compression.py proves
+the identity property-based, ties and zero rows included.
+
+Residuals are per-CLIENT state: crashed, zero-budget and capacity-overflowed
+clients transmit nothing and their residuals carry over unchanged.  Under
+client-axis sharding the residual matrix shards with ``PackedClients``
+([S, C, P], shard s owns rows of its client block); under the scan driver it
+joins the ``lax.scan`` carry; the host driver keeps it in server state.
+
+``backend="pallas"`` runs the fused ``fed_compress`` kernel (one VMEM pass
+per client row), ``backend="xla"`` the jnp twin in ``kernels/ref.py`` —
+op-for-op identical formulations, so the two backends agree bit for bit.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import _flatten_clients, _unflatten_like
+
+COMPRESS_MODES = ("none", "topk_q8")
+
+# simulated wire format per uploading client: k (int32 index + int8 value)
+# pairs plus one float32 scale — the honest proxy for cross-host
+# interconnect traffic recorded in BENCH_round_engine.json
+BYTES_INDEX = 4
+BYTES_VALUE = 1
+BYTES_SCALE = 4
+BYTES_DENSE = 4   # float32 coordinate in the uncompressed upload
+
+
+def check_compress(compress: str) -> str:
+    if compress not in COMPRESS_MODES:
+        raise ValueError(f"unknown upload_compress {compress!r}; "
+                         f"choose from {COMPRESS_MODES}")
+    return compress
+
+
+def resolve_k(topk_frac: float, n_params: int) -> int:
+    """Kept-coordinate count: ceil(topk_frac * P), clamped to [0, P]."""
+    frac = float(topk_frac)
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"topk_frac must be in [0, 1], got {topk_frac}")
+    return max(0, min(int(math.ceil(frac * n_params)), int(n_params)))
+
+
+def upload_bytes_per_client(n_params: int, compress: str = "none",
+                            topk_frac: float = 0.1) -> int:
+    """Simulated upload bytes one client ships per round."""
+    if check_compress(compress) == "none":
+        return int(n_params) * BYTES_DENSE
+    k = resolve_k(topk_frac, n_params)
+    return k * (BYTES_INDEX + BYTES_VALUE) + BYTES_SCALE
+
+
+def flatten_global(global_params) -> jnp.ndarray:
+    """Global pytree -> [P] float32 vector (leaf order = tree leaves)."""
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in jax.tree.leaves(global_params)])
+
+
+def n_params_of(global_params) -> int:
+    return sum(l.size for l in jax.tree.leaves(global_params))
+
+
+def unflatten_rows(mat, global_params):
+    """[K, P] float32 -> stacked client pytree shaped like global_params
+    with a leading K axis (the aggregators' input layout)."""
+    return jax.vmap(lambda row: _unflatten_like(row, global_params))(mat)
+
+
+def compress_rows(ef, k: int, backend: str):
+    """Dispatch the [K, P] row compression to the configured backend."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.fed_compress_topk_q8(ef, k)
+    from repro.kernels import ref
+    return ref.fed_compress_topk_q8(ef, k=k)
+
+
+def apply_upload_compress(global_params, params_k, residual_rows, uploaded,
+                          k: int, backend: str = "xla"):
+    """Run the upload transform on a trained client stack.
+
+    global_params : the round's incoming global pytree
+    params_k      : stacked client pytree (leading axis K) after local SGD
+    residual_rows : [K, P] f32 error-feedback residuals for these clients
+    uploaded      : [K] bool — False rows transmit NOTHING and keep their
+                    residual unchanged (crashed / zero-budget / overflowed
+                    clients, and non-owned lanes under sharding)
+    k             : static kept-coordinate count (resolve_k)
+    backend       : "xla" | "pallas" row-compression implementation
+
+    Returns (reconstructed_params_k, new_residual_rows, transmitted_rows):
+    the dense server-side reconstruction ``global + q * scale`` per
+    uploading row (non-uploaders reconstruct to exactly ``global``, matching
+    the uncompressed path where a zero-budget client's params stay at the
+    broadcast global), the updated residuals, and the raw transmitted rows
+    (for tests / accounting — the engine aggregates the reconstruction).
+    """
+    g = flatten_global(global_params)                       # [P]
+    delta = _flatten_clients(params_k) - g[None, :]         # [K, P]
+    up = uploaded[:, None]
+    ef = delta + residual_rows
+    q, scale = compress_rows(ef, k, backend)
+    # the barrier pins ``transmitted`` as a value: left fusable, XLA is
+    # free to contract ``g + q * scale`` (and ``ef - q * scale``) into an
+    # FMA in some programs but not others, which costs the last ulp of
+    # cross-configuration bitwise parity and the exactness of the
+    # error-feedback identity
+    transmitted = jax.lax.optimization_barrier(
+        jnp.where(up, q.astype(jnp.float32) * scale[:, None], 0.0))
+    new_residual = jnp.where(up, ef - transmitted, residual_rows)
+    reconstructed = unflatten_rows(g[None, :] + transmitted, global_params)
+    return reconstructed, new_residual, transmitted

@@ -1,6 +1,34 @@
 """RoundEngine — the single device-resident substrate executing a federated
 round for every training path in the repo.
 
+A round is a four-stage pipeline (ISSUE 6 added the third stage):
+
+    gather -> local SGD -> upload transform -> aggregate
+
+  1. GATHER        the cohort's samples out of the packed federation
+                   (XLA clamp-gather or the pallas fed_gather kernel);
+  2. LOCAL SGD     masked budgeted minibatch training per client;
+  3. UPLOAD        ``upload_compress="topk_q8"`` turns each client's delta
+     TRANSFORM     into a top-k-sparsified int8 upload with a per-client
+                   error-feedback residual (repro.core.compression; fused
+                   pallas kernel fed_compress or its XLA twin), then
+                   dense-reconstructs ``global + q * scale`` server-side.
+                   ``"none"`` (default) is the identity — the stage
+                   disappears and the round is bitwise the PR-5 round;
+  4. AGGREGATE     pluggable (repro.core.aggregation) over the dense
+                   (reconstructed) [K, ...] stack, so every aggregator —
+                   fedavg/trimmed_mean/median/krum/... — works unchanged
+                   under compression.
+
+The error-feedback residual is per-CLIENT state ([N, P] replicated, or
+[S, C, P] sharded with ``PackedClients`` so shard s owns its own clients'
+rows).  It rides OUTSIDE the round: the host driver keeps it in server
+state and passes it to the round function; the scan driver carries it
+through the multi-round ``lax.scan``.  Clients that transmit nothing —
+crashed (zero budget), capacity-overflowed, or simply unselected — keep
+their residuals bit-unchanged; compacted lanes read/write the residual rows
+of the slots they serve through the lane map.
+
 One engine owns the three pieces every round needs, so no scenario
 re-implements them (DESIGN.md §3, ISSUE 1):
 
@@ -109,17 +137,33 @@ class RoundEngine:
     donate    : donate the global-params argument to the jitted round
     backend   : default compute backend for the round functions ("xla" |
                 "pallas"); each make_* call can override it
+    compress  : upload transform ("none" | "topk_q8").  With "topk_q8" the
+                packed-round and segment functions take a trailing
+                error-feedback residual argument and return the updated
+                residual (see module docstring); "none" keeps the PR-5
+                signatures and arithmetic bitwise.  Padded and stream
+                rounds have no packed client axis to carry residual state
+                on and reject compression.
+    topk_frac : kept-coordinate fraction for "topk_q8"
+                (k = ceil(topk_frac * n_params), resolved at trace time)
     """
 
     def __init__(self, lr: float, aggregator: Optional[Aggregator] = None,
                  prox_mu: Optional[float] = None, donate: bool = True,
-                 backend: str = "xla"):
+                 backend: str = "xla", compress: str = "none",
+                 topk_frac: float = 0.1):
+        from repro.core.compression import check_compress, resolve_k
+
         self.lr = lr
         self.aggregator = aggregator if aggregator is not None else FedAvg()
         self.prox_mu = float(prox_mu if prox_mu is not None
                              else getattr(self.aggregator, "prox_mu", 0.0))
         self.donate = donate
         self.backend = self._resolve_backend(backend)
+        self.compress = check_compress(compress)
+        self.topk_frac = float(topk_frac)
+        resolve_k(self.topk_frac, 1)  # validate the fraction eagerly
+        self.compressing = self.compress != "none"
 
     # ------------------------------------------------------------------
     def _resolve_backend(self, backend: Optional[str]) -> str:
@@ -276,6 +320,20 @@ class RoundEngine:
         new_global = self.aggregator(params_k, global_params, weights)
         return new_global, weights.sum() > 0
 
+    def _upload_transform(self, global_params, params_k, residual_rows,
+                          uploaded, backend: str):
+        """Stage 3 of the round pipeline (see module docstring): compress
+        the trained stack's deltas against ``residual_rows`` [rows, P] and
+        dense-reconstruct.  ``uploaded`` rows transmit; the rest
+        reconstruct to exactly ``global`` and keep their residual
+        bit-unchanged.  k is static, resolved from the pytree at trace
+        time."""
+        from repro.core import compression as comp
+        k = comp.resolve_k(self.topk_frac, comp.n_params_of(global_params))
+        rec, new_rows, _ = comp.apply_upload_compress(
+            global_params, params_k, residual_rows, uploaded, k, backend)
+        return rec, new_rows
+
     # ------------------------------------------------------------------
     # pallas-backend stages (repro.kernels); each falls back to the XLA
     # implementation when no kernel applies
@@ -310,6 +368,11 @@ class RoundEngine:
           x: [K, max_n, ...] padded client data;  mask: [K, max_n]
           n: [K] true sample counts;  n_iters: [K] masked local-SGD budget
         """
+        if self.compressing:
+            raise ValueError(
+                "upload compression needs the packed client axis for "
+                "residual state; the padded seed round does not support "
+                "it — use make_packed_round/make_segment_fn")
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         local_train = None if fuse_sgd else \
@@ -358,15 +421,21 @@ class RoundEngine:
                            backend: Optional[str] = None) -> Callable:
         """Un-jitted packed-round body — shared by :meth:`make_packed_round`
         (which jits it standalone) and :meth:`make_segment_fn` (which traces
-        it inside the multi-round ``lax.scan``)."""
+        it inside the multi-round ``lax.scan``).
+
+        With ``compress="topk_q8"`` the round function takes a trailing
+        ``residual`` [N, P] argument (full-federation error-feedback state,
+        rows indexed by client id) and returns it updated as a fourth
+        output; cohort rows with ``n_iters > 0`` go through the upload
+        transform, all other rows stay bit-unchanged."""
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         local_train = None if fuse_sgd else \
             self._local_sgd(model, batch_size, max_iters, sampling)
         gather = self._cohort_gather(max_n, backend)
 
-        def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
-                     n_iters, rng):
+        def train_cohort(global_params, flat_x, flat_y, offsets, lengths,
+                         ids, n_iters, rng):
             offs = offsets[ids]
             n = jnp.minimum(lengths[ids], max_n)
             x, y, mask = gather(flat_x, flat_y, offs, n)
@@ -379,6 +448,29 @@ class RoundEngine:
                 params_k, losses = jax.vmap(
                     local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
                     global_params, x, y, mask, n, n_iters, keys)
+            return params_k, losses, n
+
+        if self.compressing:
+            def round_fn(global_params, flat_x, flat_y, offsets, lengths,
+                         ids, n_iters, rng, residual):
+                params_k, losses, n = train_cohort(
+                    global_params, flat_x, flat_y, offsets, lengths, ids,
+                    n_iters, rng)
+                params_k, new_rows = self._upload_transform(
+                    global_params, params_k, residual[ids], n_iters > 0,
+                    backend)
+                residual = residual.at[ids].set(new_rows)  # ids distinct
+                new_global, any_up = self._finish(global_params, params_k,
+                                                  n, n_iters)
+                return new_global, losses, any_up, residual
+
+            return round_fn
+
+        def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
+                     n_iters, rng):
+            params_k, losses, n = train_cohort(
+                global_params, flat_x, flat_y, offsets, lengths, ids,
+                n_iters, rng)
             new_global, any_up = self._finish(global_params, params_k,
                                               n, n_iters)
             return new_global, losses, any_up
@@ -399,8 +491,8 @@ class RoundEngine:
         """
         core = self._iid_sgd_core(model, batch_size, max_iters)
 
-        def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
-                     n_iters, rng):
+        def train_cohort(global_params, flat_x, flat_y, offsets, lengths,
+                         ids, n_iters, rng):
             offs = offsets[ids]
             n = jnp.minimum(lengths[ids], max_n)
             keys = jax.random.split(rng, ids.shape[0])
@@ -412,6 +504,29 @@ class RoundEngine:
                             nk, iters, key)
 
             params_k, losses = jax.vmap(local_train)(offs, n, n_iters, keys)
+            return params_k, losses, n
+
+        if self.compressing:
+            def round_fn(global_params, flat_x, flat_y, offsets, lengths,
+                         ids, n_iters, rng, residual):
+                params_k, losses, n = train_cohort(
+                    global_params, flat_x, flat_y, offsets, lengths, ids,
+                    n_iters, rng)
+                params_k, new_rows = self._upload_transform(
+                    global_params, params_k, residual[ids], n_iters > 0,
+                    "xla")
+                residual = residual.at[ids].set(new_rows)  # ids distinct
+                new_global, any_up = self._finish(global_params, params_k,
+                                                  n, n_iters)
+                return new_global, losses, any_up, residual
+
+            return round_fn
+
+        def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
+                     n_iters, rng):
+            params_k, losses, n = train_cohort(
+                global_params, flat_x, flat_y, offsets, lengths, ids,
+                n_iters, rng)
             new_global, any_up = self._finish(global_params, params_k,
                                               n, n_iters)
             return new_global, losses, any_up
@@ -428,6 +543,13 @@ class RoundEngine:
         round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
                  n_iters, rng) -> (new_global_params, client_losses,
                  uploaded_any)
+
+        With ``compress="topk_q8"`` (engine option) the round function
+        takes a trailing error-feedback ``residual`` argument and returns
+        the updated residual as a fourth output — [N, P] replicated, or
+        [S, C, P] sharded with the client axis when ``mesh`` is given (see
+        module docstring; allocate with
+        :func:`repro.core.compression.n_params_of` zeros).
 
         ``flat_x/flat_y/offsets/lengths`` are the once-uploaded packed
         federation (repro.data.federated.PackedClients); ``ids`` is the [K]
@@ -479,6 +601,21 @@ class RoundEngine:
         core(global_params, flat_x, flat_y, offsets, lengths, ids, n_iters,
              rng) -> (params_k [K, ...], losses [K])   — both replicated
 
+        With ``compress="topk_q8"`` the core takes a trailing ``residual``
+        [C, P] argument — the SHARD-LOCAL error-feedback rows for the C
+        clients this shard owns — and returns it updated as a third
+        output.  Each executing lane reads the residual row of the client
+        it serves (through ``local``), runs the upload transform on its
+        delta, and scatters the updated row back; lanes that transmit
+        nothing (non-owned slots in masked mode, sentinel lanes under
+        capacity, zero-budget clients, and — because no lane serves them —
+        capacity-overflowed slots) leave their rows bit-unchanged.  The
+        scatter uses a C-sentinel row index with ``mode="drop"``: cohort
+        ids are distinct, so writing lanes never collide.  The psum-rebuilt
+        stack then carries the dense RECONSTRUCTION (``global + q *
+        scale``) in uploading slots and exact zeros elsewhere, exactly like
+        the uncompressed ownership-masked rebuild.
+
         Arguments are the SHARD-LOCAL packed arrays (leading shard axis
         already stripped); ``ids``/``n_iters``/``rng`` are replicated.  Each
         shard resolves which cohort slots it owns (``ids // C ==
@@ -529,7 +666,7 @@ class RoundEngine:
         gather = self._cohort_gather(max_n, backend)
 
         def core(global_params, flat_x, flat_y, offsets, lengths, ids,
-                 n_iters, rng):
+                 n_iters, rng, residual=None):
             s = jax.lax.axis_index("data")
             C = offsets.shape[0]
             K = ids.shape[0]
@@ -540,6 +677,7 @@ class RoundEngine:
                 offs = offsets[local]
                 n = jnp.where(own, jnp.minimum(lengths[local], max_n), 0)
                 iters = jnp.where(own, n_iters, 0)
+                executes = own
             else:
                 # dense lane block: lane l serves cohort slot lane_map[l]
                 # (sentinel K = unused lane) with that slot's own key,
@@ -554,6 +692,7 @@ class RoundEngine:
                               jnp.minimum(lengths[local], max_n), 0)
                 iters = jnp.where(lane_valid, n_iters[slot], 0)
                 keys = keys[slot]
+                executes = lane_valid
             if fuse_sgd:
                 x, y, _ = gather(flat_x, flat_y, offs, n)
                 params_k, losses = self._fused_sgd(
@@ -573,6 +712,18 @@ class RoundEngine:
                     local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
                     global_params, x, y, mask, n, iters, keys)
 
+            if self.compressing:
+                # stage 3: compress each executing lane's delta against the
+                # residual row of the client it serves, then scatter the
+                # updated rows back (C-sentinel drop for silent lanes;
+                # writers never collide — cohort ids are distinct)
+                uploaded_lane = executes & (iters > 0)
+                params_k, new_rows = self._upload_transform(
+                    global_params, params_k, residual[local], uploaded_lane,
+                    backend)
+                rows = jnp.where(uploaded_lane, local, C)
+                residual = residual.at[rows].set(new_rows, mode="drop")
+
             if capacity is None:
                 def mask_slots(p):
                     shape = (-1,) + (1,) * (p.ndim - 1)
@@ -584,18 +735,20 @@ class RoundEngine:
                 losses = jax.lax.psum(
                     jnp.where(own, losses, jnp.zeros((), losses.dtype)),
                     "data")
-                return params_k, losses
+            else:
+                def scatter_slots(p):
+                    # lane results back to global [K] rows; sentinel lanes
+                    # and overflowed slots stay exact zeros, so the psum is
+                    # still the ownership-masked rebuild
+                    z = jnp.zeros((K,) + p.shape[1:], p.dtype)
+                    return z.at[lane_map].set(p, mode="drop")
 
-            def scatter_slots(p):
-                # lane results back to global [K] rows; sentinel lanes and
-                # overflowed slots stay exact zeros, so the psum is still
-                # the ownership-masked rebuild
-                z = jnp.zeros((K,) + p.shape[1:], p.dtype)
-                return z.at[lane_map].set(p, mode="drop")
-
-            params_k = jax.tree.map(
-                lambda p: jax.lax.psum(scatter_slots(p), "data"), params_k)
-            losses = jax.lax.psum(scatter_slots(losses), "data")
+                params_k = jax.tree.map(
+                    lambda p: jax.lax.psum(scatter_slots(p), "data"),
+                    params_k)
+                losses = jax.lax.psum(scatter_slots(losses), "data")
+            if self.compressing:
+                return params_k, losses, residual
             return params_k, losses
 
         return core
@@ -618,30 +771,51 @@ class RoundEngine:
 
         core = self._shard_round_core(model, batch_size, max_iters, max_n,
                                       sampling, backend, capacity)
+        compressing = self.compressing
 
         def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
-                     n_iters, rng):
+                     n_iters, rng, residual=None):
             _check_shard_count(flat_x, mesh)
             if capacity is not None:
                 n_iters = jnp.where(
                     cohort_overflow(ids, lengths.shape[1], capacity),
                     0, n_iters)
 
-            def shard_fn(gp, x, y, offs, lens, ids_, it_, rng_):
-                return core(gp, x[0], y[0], offs[0], lens[0], ids_, it_,
-                            rng_)
+            if compressing:
+                # residual [S, C, P] shards with the client axis: each
+                # shard updates only its own clients' rows
+                def shard_fn(gp, x, y, offs, lens, ids_, it_, rng_, res):
+                    pk, ls, res = core(gp, x[0], y[0], offs[0], lens[0],
+                                       ids_, it_, rng_, res[0])
+                    return pk, ls, res[None]
 
-            params_k, losses = shard_map_unchecked(
-                shard_fn, mesh,
-                in_specs=(P(), P("data"), P("data"), P("data"), P("data"),
-                          P(), P(), P()),
-                out_specs=(P(), P()))(
-                global_params, flat_x, flat_y, offsets, lengths, ids,
-                n_iters, rng)
+                params_k, losses, residual = shard_map_unchecked(
+                    shard_fn, mesh,
+                    in_specs=(P(), P("data"), P("data"), P("data"),
+                              P("data"), P(), P(), P(), P("data")),
+                    out_specs=(P(), P(), P("data")))(
+                    global_params, flat_x, flat_y, offsets, lengths, ids,
+                    n_iters, rng, residual)
+            else:
+                def shard_fn(gp, x, y, offs, lens, ids_, it_, rng_):
+                    return core(gp, x[0], y[0], offs[0], lens[0], ids_, it_,
+                                rng_)
+
+                params_k, losses = shard_map_unchecked(
+                    shard_fn, mesh,
+                    in_specs=(P(), P("data"), P("data"), P("data"),
+                              P("data"), P(), P(), P()),
+                    out_specs=(P(), P()))(
+                    global_params, flat_x, flat_y, offsets, lengths, ids,
+                    n_iters, rng)
             # [S, C] lengths flatten to global-id order (shard s owns the
             # contiguous block [s*C, (s+1)*C)), so the aggregation weights
             # match the replicated round exactly
             n = jnp.minimum(lengths.reshape(-1)[ids], max_n)
+            if compressing:
+                new_global, any_up = self._finish(global_params, params_k,
+                                                  n, n_iters)
+                return new_global, losses, any_up, residual
             new_global, any_up = self._finish(global_params, params_k,
                                               n, n_iters)
             return new_global, losses, any_up
@@ -659,6 +833,12 @@ class RoundEngine:
 
         segment_fn(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma)
             -> (state', stats)
+
+        With ``compress="topk_q8"`` (engine option) the segment takes a
+        trailing error-feedback ``residual`` argument ([N, P] replicated,
+        [S, C, P] sharded) and returns ``(state', residual', stats)`` —
+        the residual joins the ``lax.scan`` carry inside the segment, so
+        compressed multi-round blocks still dispatch once.
 
         ``state`` is the scan carry — a dict with keys
 
@@ -745,7 +925,13 @@ class RoundEngine:
             DROPPED, L/H halved, zero uploaded epochs -> zero budget) and
             the self-adaptive estimator absorbs the drop exactly like a
             paper-style straggler; the drawn E~ still feeds the
-            ``true_workload`` stat."""
+            ``true_workload`` stat.
+
+            Under compression the carry additionally holds the
+            error-feedback ``residual`` and ``train`` threads it:
+            train(params, residual, ids, n_iters, sub) -> (params,
+            residual, losses)."""
+            compressing = self.compressing
 
             def one_round(carry, t):
                 params = carry["params"]
@@ -764,7 +950,11 @@ class RoundEngine:
                 n = jnp.minimum(sizes[ids], max_n)
                 n_iters = budget_iters(e_eff, n, batch_size, max_iters)
                 data_rng, sub = jax.random.split(carry["data_rng"])
-                params, losses = train(params, ids, n_iters, sub)
+                if compressing:
+                    params, residual, losses = train(
+                        params, carry["residual"], ids, n_iters, sub)
+                else:
+                    params, losses = train(params, ids, n_iters, sub)
                 uploaded = n_iters > 0
                 values = value_update_device(values, sizes, ids, losses,
                                              uploaded)
@@ -788,6 +978,8 @@ class RoundEngine:
                 new_carry = {"params": params, "L": L, "H": H,
                              "theta": theta, "values": values,
                              "data_rng": data_rng, "sel_rng": sel_rng}
+                if compressing:
+                    new_carry["residual"] = residual
                 return new_carry, stats
 
             return one_round
@@ -805,19 +997,42 @@ class RoundEngine:
             round_body = self._packed_round_body(
                 model, batch_size, max_iters, max_n, sampling, backend)
 
-        def segment(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma):
-            def select(k_sel, values, t):
-                return select_cohort_device(k_sel, values, K, strategy,
-                                            beta, use_al=t < al_rounds)
+        if self.compressing:
+            def segment(state, ts, flat_x, flat_y, offsets, lengths, mu,
+                        sigma, residual):
+                def select(k_sel, values, t):
+                    return select_cohort_device(k_sel, values, K, strategy,
+                                                beta, use_al=t < al_rounds)
 
-            def train(params, ids, n_iters, sub):
-                params, losses, _ = round_body(
-                    params, flat_x, flat_y, offsets, lengths, ids,
-                    n_iters, sub)
-                return params, losses
+                def train(params, residual, ids, n_iters, sub):
+                    params, losses, _, residual = round_body(
+                        params, flat_x, flat_y, offsets, lengths, ids,
+                        n_iters, sub, residual)
+                    return params, residual, losses
 
-            one_round = make_one_round(select, train, lengths, mu, sigma)
-            return jax.lax.scan(one_round, state, ts)
+                one_round = make_one_round(select, train, lengths, mu,
+                                           sigma)
+                carry = dict(state)
+                carry["residual"] = residual
+                carry, stats = jax.lax.scan(one_round, carry, ts)
+                residual = carry.pop("residual")
+                return carry, residual, stats
+        else:
+            def segment(state, ts, flat_x, flat_y, offsets, lengths, mu,
+                        sigma):
+                def select(k_sel, values, t):
+                    return select_cohort_device(k_sel, values, K, strategy,
+                                                beta, use_al=t < al_rounds)
+
+                def train(params, ids, n_iters, sub):
+                    params, losses, _ = round_body(
+                        params, flat_x, flat_y, offsets, lengths, ids,
+                        n_iters, sub)
+                    return params, losses
+
+                one_round = make_one_round(select, train, lengths, mu,
+                                           sigma)
+                return jax.lax.scan(one_round, state, ts)
 
         return self._jit_round(segment)
 
@@ -844,11 +1059,14 @@ class RoundEngine:
         core = self._shard_round_core(model, batch_size, max_iters, max_n,
                                       sampling, backend, capacity)
         n_shards = mesh.shape["data"]
+        compressing = self.compressing
 
-        def segment(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma):
+        def segment(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma,
+                    residual=None):
             _check_shard_count(flat_x, mesh)
 
-            def shard_seg(state, ts, x, y, offs, lens, mu, sigma):
+            def shard_seg(state, ts, x, y, offs, lens, mu, sigma,
+                          res=None):
                 x, y, offs, lens = x[0], y[0], offs[0], lens[0]
                 s = jax.lax.axis_index("data")
                 C = offs.shape[0]
@@ -868,22 +1086,52 @@ class RoundEngine:
                 overflow = None if capacity is None else \
                     (lambda ids_: cohort_overflow(ids_, C, capacity))
 
-                def train(params, ids, n_iters, sub):
-                    if capacity is not None:
-                        n_iters = jnp.where(cohort_overflow(ids, C,
-                                                            capacity),
-                                            0, n_iters)
-                    params_k, losses = core(params, x, y, offs, lens, ids,
-                                            n_iters, sub)
-                    n = jnp.minimum(sizes[ids], max_n)
-                    new_global, _ = self._finish(params, params_k, n,
-                                                 n_iters)
-                    return new_global, losses
+                if compressing:
+                    def train(params, residual, ids, n_iters, sub):
+                        if capacity is not None:
+                            n_iters = jnp.where(cohort_overflow(ids, C,
+                                                                capacity),
+                                                0, n_iters)
+                        params_k, losses, residual = core(
+                            params, x, y, offs, lens, ids, n_iters, sub,
+                            residual)
+                        n = jnp.minimum(sizes[ids], max_n)
+                        new_global, _ = self._finish(params, params_k, n,
+                                                     n_iters)
+                        return new_global, residual, losses
+                else:
+                    def train(params, ids, n_iters, sub):
+                        if capacity is not None:
+                            n_iters = jnp.where(cohort_overflow(ids, C,
+                                                                capacity),
+                                                0, n_iters)
+                        params_k, losses = core(params, x, y, offs, lens,
+                                                ids, n_iters, sub)
+                        n = jnp.minimum(sizes[ids], max_n)
+                        new_global, _ = self._finish(params, params_k, n,
+                                                     n_iters)
+                        return new_global, losses
 
                 one_round = make_one_round(select, train, sizes, mu, sigma,
                                            overflow)
+                if compressing:
+                    # shard-local residual rows join the scan carry
+                    carry = dict(state)
+                    carry["residual"] = res[0]
+                    carry, stats = jax.lax.scan(one_round, carry, ts)
+                    res_out = carry.pop("residual")
+                    return carry, res_out[None], stats
                 return jax.lax.scan(one_round, state, ts)
 
+            if compressing:
+                state, residual, stats = shard_map_unchecked(
+                    shard_seg, mesh,
+                    in_specs=(P(), P(), P("data"), P("data"), P("data"),
+                              P("data"), P(), P(), P("data")),
+                    out_specs=(P(), P("data"), P()))(
+                    state, ts, flat_x, flat_y, offsets, lengths, mu, sigma,
+                    residual)
+                return state, residual, stats
             return shard_map_unchecked(
                 shard_seg, mesh,
                 in_specs=(P(), P(), P("data"), P("data"), P("data"),
@@ -908,6 +1156,11 @@ class RoundEngine:
         applies to arbitrary batch pytrees, so "pallas" falls back to the
         XLA scan (the flag is validated either way).
         """
+        if self.compressing:
+            raise ValueError(
+                "upload compression needs the packed client axis for "
+                "residual state; the cross-silo stream round does not "
+                "support it")
         self._resolve_backend(backend)
         lr = self.lr
 

@@ -2,9 +2,28 @@
 
 Per round the server must (1) predict task pairs from history (Ira/Fassa),
 (2) convert training values to selection probabilities (AL) or select
-uniformly, (3) broadcast + masked local training, (4) aggregate and update
-history.  Baselines: FedAvg (fixed workload, stragglers upload nothing),
-FedProx (ideal partial work) and an oracle skyline.
+uniformly, then run the four-stage round pipeline — GATHER the cohort's
+samples from the packed federation, masked budgeted LOCAL SGD, the UPLOAD
+TRANSFORM (``upload_compress="topk_q8"``: top-k + int8 delta compression
+with error feedback; ``"none"`` is the identity), and AGGREGATE — and
+finally update history.  Baselines: FedAvg (fixed workload, stragglers
+upload nothing), FedProx (ideal partial work) and an oracle skyline.
+
+Upload compression (ISSUE 6): with ``upload_compress="topk_q8"`` every
+uploading client's delta is top-k-sparsified (k = ceil(topk_frac *
+n_params)) and int8-quantized with a per-client scale; the discarded mass
+is carried as a per-client error-feedback residual added to the NEXT
+round's delta before selection, so the compressed path converges like the
+dense one (the telescoping identity ``transmitted + residual' == delta +
+residual`` is exact — repro.core.compression).  The residual is client-axis
+state: [N, P] in server state for the host driver, joined to the
+``lax.scan`` carry by the scan driver, and sharded [S, C, P] with the
+client blocks under ``mesh_shards`` (each shard updates only its own
+clients' rows; capacity-compacted lanes reach them through the lane map).
+Crashed, overflowed and unselected clients transmit nothing and keep their
+residuals bit-unchanged.  The server aggregates the dense reconstruction,
+so every aggregator stays pluggable; ``"none"`` (default) keeps the round
+bitwise-identical to the uncompressed PR-5 pipeline.
 
 Two drivers execute that loop (``ServerConfig.driver``):
 
@@ -143,6 +162,13 @@ class ServerConfig:
                                  # owned slots past capacity overflow ->
                                  # dropped via the Ira/Fassa crash branch
                                  # (core.selection.resolve_capacity)
+    upload_compress: str = "none"
+                                 # upload transform between local SGD and
+                                 # aggregation: "none" (dense f32 deltas,
+                                 # bitwise PR-5) | "topk_q8" (top-k + int8
+                                 # with error feedback — core.compression)
+    topk_frac: float = 0.1       # kept-coordinate fraction for "topk_q8"
+                                 # (k = ceil(topk_frac * n_params))
     agg_weighted: bool = False   # robust aggregators weight surviving
                                  # uploads by n_k instead of uniformly
                                  # (trimmed_mean/median/krum/
@@ -220,7 +246,26 @@ class FedSAEServer:
         aggregator = get_aggregator(cfg.aggregator, **agg_kwargs)
         self.engine = RoundEngine(
             lr=cfg.lr, aggregator=aggregator,
-            prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else None)
+            prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else None,
+            compress=cfg.upload_compress, topk_frac=cfg.topk_frac)
+        # error-feedback residual state (upload_compress="topk_q8"): one
+        # [P] float32 row per client, sharded with the client blocks when
+        # the mesh is; None disables the upload-transform stage entirely
+        if self.engine.compressing:
+            from repro.core.compression import n_params_of
+            n_params = n_params_of(self.params)
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+                self.residual = jax.device_put(
+                    jnp.zeros((cfg.mesh_shards,
+                               self.packed.clients_per_shard, n_params),
+                              jnp.float32),
+                    NamedSharding(self.mesh, P("data")))
+            else:
+                self.residual = jnp.zeros((N, n_params), jnp.float32)
+        else:
+            self.residual = None
         self.round_fn = self.engine.make_packed_round(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
             sampling=cfg.sampling, backend=cfg.backend, mesh=self.mesh,
@@ -347,10 +392,18 @@ class FedSAEServer:
             tau = np.ceil(n / cfg.batch_size)
             n_iters = np.minimum(np.round(e_eff * tau), self.max_iters)
         self.data_rng, sub = jax.random.split(self.data_rng)
-        self.params, losses, _ = self.round_fn(
-            self.params, self.packed.x, self.packed.y, self.packed.offsets,
-            self.packed.lengths, jnp.asarray(ids, jnp.int32),
-            jnp.asarray(n_iters, jnp.int32), sub)
+        if self.residual is not None:
+            self.params, losses, _, self.residual = self.round_fn(
+                self.params, self.packed.x, self.packed.y,
+                self.packed.offsets, self.packed.lengths,
+                jnp.asarray(ids, jnp.int32),
+                jnp.asarray(n_iters, jnp.int32), sub, self.residual)
+        else:
+            self.params, losses, _ = self.round_fn(
+                self.params, self.packed.x, self.packed.y,
+                self.packed.offsets, self.packed.lengths,
+                jnp.asarray(ids, jnp.int32),
+                jnp.asarray(n_iters, jnp.int32), sub)
         uploaders = np.asarray(n_iters) > 0
         if self.rng_impl == "device":
             self.values.v = np.asarray(value_update_device(
@@ -412,9 +465,14 @@ class FedSAEServer:
         while t0 < T:
             b = min(self.block_size, T - t0)
             ts = jnp.arange(t0, t0 + b, dtype=jnp.int32)
-            state, stats = self.segment_fn(
-                state, ts, pk.x, pk.y, pk.offsets, pk.lengths,
-                self._mu_dev, self._sigma_dev)
+            if self.residual is not None:
+                state, self.residual, stats = self.segment_fn(
+                    state, ts, pk.x, pk.y, pk.offsets, pk.lengths,
+                    self._mu_dev, self._sigma_dev, self.residual)
+            else:
+                state, stats = self.segment_fn(
+                    state, ts, pk.x, pk.y, pk.offsets, pk.lengths,
+                    self._mu_dev, self._sigma_dev)
             stats = jax.device_get(stats)   # the block's single host pull
             self.host_syncs += 1
             self.cohorts.extend(np.asarray(stats["ids"]))

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.fed_compress import fed_compress_topk_q8_fwd
 from repro.kernels.fed_gather import fed_cohort_gather_fwd
 from repro.kernels.fed_local_sgd import fed_local_sgd_mclr_fwd
 from repro.kernels.flash_attention import (flash_attention_bwd,
@@ -131,3 +132,11 @@ def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, lr: float,
     return fed_local_sgd_mclr_fwd(x, y, idx, w0, b0, ns, n_iters, lr=lr,
                                   prox_mu=prox_mu,
                                   interpret=KERNEL_INTERPRET)
+
+
+def fed_compress_topk_q8(ef, k: int):
+    """Fused top-k + int8 upload compression over per-client error-feedback
+    delta rows (see fed_compress.py).  Bitwise-identical to the ref twin.
+
+    Returns (q [K, P] int8, scale [K] f32); transmitted value = q * scale."""
+    return fed_compress_topk_q8_fwd(ef, k=k, interpret=KERNEL_INTERPRET)

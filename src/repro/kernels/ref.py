@@ -64,6 +64,43 @@ def fed_cohort_gather(flat_x, flat_y, starts, ns, *, max_n):
     return flat_x[idx], flat_y[idx], mask
 
 
+def fed_compress_topk_q8(ef, *, k: int):
+    """Top-k + int8 upload compression over per-client delta rows — the
+    pure-jnp oracle for the fused kernel, and the ``backend="xla"`` upload
+    transform itself (the two must stay op-for-op identical so the engine
+    backends agree bit for bit; see fed_compress.py for the formulation).
+
+    ef: [K, P] f32 error-feedback deltas; ``k`` static kept-coordinate
+    count -> (q [K, P] int8 — zero off the per-row top-k mask, scale [K]
+    f32 per-client symmetric scale).  Transmitted value = q * scale."""
+    K, P = ef.shape
+    e = ef.astype(jnp.float32)
+    a = jnp.abs(e)
+    amax = jnp.max(a, axis=-1)
+    # explicit multiply, NOT amax / 127: XLA turns a constant divisor into an
+    # inexact reciprocal-multiply under jit but not eagerly, which would break
+    # bitwise kernel/ref parity across calling contexts
+    scale = amax * jnp.float32(1.0 / 127.0)
+    safe = jnp.where(scale > 0, scale, jnp.float32(1.0))
+    if k <= 0:
+        mask = jnp.zeros(e.shape, bool)
+    elif k >= P:
+        mask = jnp.ones(e.shape, bool)
+    else:
+        thr = jnp.sort(a, axis=-1)[:, P - k]
+        gt = a > thr[:, None]
+        eq = a == thr[:, None]
+        # exactly k coordinates: all strictly-above plus the EARLIEST ties
+        need = k - jnp.sum(gt.astype(jnp.int32), axis=-1)
+        take = eq & (jnp.cumsum(eq.astype(jnp.int32), axis=-1)
+                     <= need[:, None])
+        mask = gt | take
+    q = jnp.where(mask & (scale[:, None] > 0),
+                  jnp.clip(jnp.round(e / safe[:, None]), -127.0, 127.0),
+                  jnp.float32(0.0)).astype(jnp.int8)
+    return q, scale
+
+
 def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, *, lr,
                        prox_mu: float = 0.0):
     """Masked budgeted MCLR local SGD over precomputed iid minibatch

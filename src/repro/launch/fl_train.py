@@ -60,7 +60,9 @@ def run_flat(args):
                        driver=args.driver,
                        block_size=args.block_size,
                        mesh_shards=args.shards,
-                       cohort_capacity=args.cohort_capacity)
+                       cohort_capacity=args.cohort_capacity,
+                       upload_compress=args.compress,
+                       topk_frac=args.topk_frac)
     srv = FedSAEServer(ds, model, cfg,
                        het=HeterogeneitySim(ds.n_clients, seed=cfg.seed))
     hist = srv.run(verbose=True)
@@ -159,6 +161,19 @@ def main():
                          "owned slots past capacity are dropped "
                          "deterministically through the Ira/Fassa crash "
                          "branch and reported per round as overflowed")
+    ap.add_argument("--compress", default="none",
+                    choices=("none", "topk_q8"),
+                    help="upload transform between local SGD and "
+                         "aggregation: topk_q8 ships each client's delta as "
+                         "top-k int8 coordinates with a per-client scale "
+                         "and carries the quantization error as an error-"
+                         "feedback residual; none is bitwise the "
+                         "uncompressed round (needs --driver host/scan on "
+                         "the packed path; composes with --shards and "
+                         "--cohort-capacity)")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="kept coordinate fraction for --compress topk_q8: "
+                         "k = ceil(frac * n_params) per client per round")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--silo-arch", default=None)
     ap.add_argument("--silos", type=int, default=4)

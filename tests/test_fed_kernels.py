@@ -285,3 +285,43 @@ def test_unknown_backend_rejected(fed_case):
         eng.make_packed_round(model, 10, 6, max_n, backend="tpu")
     with pytest.raises(ValueError, match="unknown backend"):
         eng.make_stream_round(lambda p, b: 0.0, 4, backend="triton")
+
+
+# ---------------------------------------------------------------------------
+# fused upload compression (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [0, 1, 7, 20, 21])
+def test_compress_kernel_matches_ref_bitwise(k):
+    """fed_compress parity with the jnp oracle across the k edges (empty
+    mask, single coordinate, interior, P-1, full row) — BITWISE: int8
+    codes, scales and the implied transmitted values must all agree."""
+    rng = np.random.default_rng(5)
+    K, P = 6, 21
+    ef = rng.normal(size=(K, P)).astype(np.float32)
+    ef[1] = 0.0                              # zero row: scale == 0 branch
+    ef[2, :10] = ef[2, 10]                   # heavy magnitude ties
+    ef = jnp.asarray(ef)
+    q, s = ops.fed_compress_topk_q8(ef, k)
+    qr, sr = ref.fed_compress_topk_q8(ef, k=k)
+    assert q.dtype == jnp.int8 and qr.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+    nz = (np.asarray(q) != 0).sum(axis=1)
+    assert (nz <= max(k, 0)).all()           # never more than k coords
+    assert np.asarray(s)[1] == 0.0 and (np.asarray(q)[1] == 0).all()
+
+
+def test_compress_kernel_matches_ref_under_jit():
+    """The parity must survive jit on both sides — a constant-divisor
+    scale would be rewritten to a reciprocal-multiply under jit but not
+    eagerly, so this guards the explicit-multiply formulation."""
+    ef = jnp.asarray(np.random.default_rng(9).normal(size=(4, 33)),
+                     jnp.float32)
+    for k in (0, 5, 33):
+        q, s = jax.jit(ops.fed_compress_topk_q8,
+                       static_argnums=1)(ef, k)
+        qr, sr = jax.jit(lambda e: ref.fed_compress_topk_q8(e, k=k))(ef)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
