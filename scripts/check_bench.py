@@ -16,15 +16,24 @@ runner speed cancels:
                      REPRO_FORCE_HOST_DEVICES, so the gate runs on
                      1-device CI runners too.
 
-A third gate is STATIC (no smoke run): the recorded compressed-upload leg
-(``engine_scan_compress_path``, ISSUE 6) must ship <= 0.15x the dense
-upload bytes at the default topk_frac — the wire format is deterministic
-arithmetic, so recording it once and checking the recorded numbers is
-exact; a topk_frac or byte-accounting change that breaks the acceptance
-ratio turns CI red without timing anything.
+Two further gates are STATIC (no smoke run), checked on the recorded file:
+
+  upload-bytes        the compressed-upload leg (``engine_scan_compress_
+                      path``, ISSUE 6) must ship <= 0.15x the dense upload
+                      bytes at the default topk_frac — the wire format is
+                      deterministic arithmetic, so recording it once and
+                      checking the recorded numbers is exact
+  telemetry-overhead  the recorded ``telemetry_overhead`` leg (ISSUE 7)
+                      must show <= 5% rounds/s loss for the JSONL sink vs
+                      the null sink (``overhead_frac <= 0.05``) — recorded
+                      on a quiet box so CI timing noise cannot flake the
+                      acceptance bar
 
 A fresh ratio more than ``--tolerance`` (default 30%) below the recorded
-one fails the job; a faster ratio prints a hint to re-record.
+one fails the job; a faster ratio prints a hint to re-record.  Every
+failing gate is also collected into a final summary naming the leg and the
+measured-vs-recorded values, so a red CI run says WHAT regressed without
+scrolling through the smoke logs.
 
 This replaces the old fire-and-forget bench smoke in the ``test`` job:
 the bench still runs on every push, but now a perf regression actually
@@ -51,14 +60,20 @@ SCALE = "reduced"
 # at the bench's default topk_frac
 COMPRESS_RATIO_CEILING = 0.15
 
+# ISSUE-7 acceptance: recorded JSONL-sink telemetry costs <= this fraction
+# of the null-sink rounds/s
+TELEMETRY_OVERHEAD_CEILING = 0.05
 
-def check_upload_bytes(entry: dict) -> bool:
+
+def check_upload_bytes(entry: dict, failures: list) -> bool:
     """Static ISSUE-6 gate on the RECORDED byte accounting."""
     comp = entry.get("engine_scan_compress_path")
     if comp is None:
         print("check_bench[upload-bytes]: no engine_scan_compress_path "
               "recorded — re-record BENCH_round_engine.json with the "
               "compressed leg")
+        failures.append(("upload-bytes", "no engine_scan_compress_path "
+                         "entry in the recorded file"))
         return False
     dense = entry["engine_scan_path"]["upload_bytes_per_round"]
     got = comp["upload_bytes_per_round"] / dense
@@ -67,6 +82,37 @@ def check_upload_bytes(entry: dict) -> bool:
           f"{comp['upload_bytes_per_round']} B/round vs dense {dense} "
           f"B/round = {got:.4f}x (ceiling {COMPRESS_RATIO_CEILING}x) "
           f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(("upload-bytes", f"recorded ratio {got:.4f}x above "
+                         f"the {COMPRESS_RATIO_CEILING}x ceiling "
+                         f"({comp['upload_bytes_per_round']} vs {dense} "
+                         f"B/round)"))
+    return ok
+
+
+def check_telemetry_overhead(entry: dict, failures: list) -> bool:
+    """Static ISSUE-7 gate on the RECORDED telemetry-overhead leg."""
+    tel = entry.get("telemetry_overhead")
+    if tel is None:
+        print("check_bench[telemetry-overhead]: no telemetry_overhead "
+              "recorded — re-record BENCH_round_engine.json with the "
+              "telemetry legs")
+        failures.append(("telemetry-overhead", "no telemetry_overhead "
+                         "entry in the recorded file"))
+        return False
+    got = tel["overhead_frac"]
+    ok = got <= TELEMETRY_OVERHEAD_CEILING
+    print(f"check_bench[telemetry-overhead]: jsonl sink "
+          f"{tel['jsonl_sink_rounds_per_sec']} rounds/s vs null sink "
+          f"{tel['null_sink_rounds_per_sec']} rounds/s = {got:.2%} overhead "
+          f"(ceiling {TELEMETRY_OVERHEAD_CEILING:.0%}) "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(("telemetry-overhead", f"recorded overhead "
+                         f"{got:.2%} above the "
+                         f"{TELEMETRY_OVERHEAD_CEILING:.0%} ceiling "
+                         f"({tel['jsonl_sink_rounds_per_sec']} vs "
+                         f"{tel['null_sink_rounds_per_sec']} rounds/s)"))
     return ok
 
 
@@ -85,7 +131,7 @@ def capacity_ratio(entry: dict) -> float:
 
 
 def run_gate(name: str, ratio_fn, want: float, extra_args, extra_env,
-             args, abs_floor: float = 0.0) -> bool:
+             args, failures: list, abs_floor: float = 0.0) -> bool:
     """Rerun the smoke up to --attempts times; gate on the BEST ratio — a
     contention spike on a shared runner should not turn CI red.
 
@@ -106,6 +152,7 @@ def run_gate(name: str, ratio_fn, want: float, extra_args, extra_env,
         rc = subprocess.run(cmd, env=env).returncode
         if rc != 0:
             print(f"check_bench[{name}]: bench smoke failed (rc={rc})")
+            failures.append((name, f"bench smoke crashed (rc={rc})"))
             return False
         with open(out) as f:
             fresh = json.load(f)[SCALE]
@@ -122,6 +169,9 @@ def run_gate(name: str, ratio_fn, want: float, extra_args, extra_env,
               f">{args.tolerance:.0%} vs BENCH_round_engine.json on "
               f"{args.attempts} attempts; if the slowdown is intended, "
               f"re-record with benchmarks/bench_round_engine.py")
+        failures.append((name, f"measured ratio {got:.3f} below floor "
+                         f"{floor:.3f} (recorded {want:.3f}, tolerance "
+                         f"{args.tolerance:.0%})"))
         return False
     if got > want * 1.3:
         print(f"check_bench[{name}]: fresh ratio is >30% above the "
@@ -171,11 +221,18 @@ def main() -> int:
             # relative tolerance against the recorded ratio
             1.2))
 
-    ok = check_upload_bytes(entry)
+    failures: list = []
+    ok = check_upload_bytes(entry, failures)
+    ok = check_telemetry_overhead(entry, failures) and ok
     for name, fn, want, extra_args, extra_env, abs_floor in gates:
         ok = run_gate(name, fn, want, extra_args, extra_env, args,
-                      abs_floor) and ok
-    print("check_bench: PASS" if ok else "check_bench: FAIL")
+                      failures, abs_floor) and ok
+    if ok:
+        print("check_bench: PASS")
+    else:
+        print(f"check_bench: FAIL — {len(failures)} gate(s) regressed:")
+        for name, detail in failures:
+            print(f"  - [{name}] {detail}")
     return 0 if ok else 1
 
 

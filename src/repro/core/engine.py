@@ -95,8 +95,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import Aggregator, FedAvg
+from repro.obs.profiling import (STAGE_AGGREGATE, STAGE_GATHER,
+                                 STAGE_LOCAL_SGD, STAGE_UPLOAD, stage)
 
 BACKENDS = ("xla", "pallas")
+
+
+def _device_hist(x, w, lo: float, hi: float, bins: int):
+    """float32 fixed-bin histogram on device — the jnp twin of
+    ``repro.obs.schema.histogram_counts`` (same clip/floor binning in
+    float32, so host- and scan-driver telemetry land in the same bins).
+    Traceable under ``lax.scan``; ``bins`` is static."""
+    x = jnp.clip(jnp.asarray(x, jnp.float32), jnp.float32(lo),
+                 jnp.float32(hi) - jnp.float32(hi - lo) * jnp.float32(1e-6))
+    idx = jnp.floor((x - jnp.float32(lo)) / jnp.float32(hi - lo)
+                    * jnp.float32(bins)).astype(jnp.int32)
+    return jnp.zeros(bins, jnp.float32).at[idx].add(
+        jnp.asarray(w, jnp.float32))
 
 
 def _check_shard_count(flat_x, mesh):
@@ -316,9 +331,11 @@ class RoundEngine:
         return local_train
 
     def _finish(self, global_params, params_k, n, n_iters):
-        weights = n.astype(jnp.float32) * (n_iters > 0).astype(jnp.float32)
-        new_global = self.aggregator(params_k, global_params, weights)
-        return new_global, weights.sum() > 0
+        with stage(STAGE_AGGREGATE):
+            weights = n.astype(jnp.float32) \
+                * (n_iters > 0).astype(jnp.float32)
+            new_global = self.aggregator(params_k, global_params, weights)
+            return new_global, weights.sum() > 0
 
     def _upload_transform(self, global_params, params_k, residual_rows,
                           uploaded, backend: str):
@@ -329,10 +346,12 @@ class RoundEngine:
         bit-unchanged.  k is static, resolved from the pytree at trace
         time."""
         from repro.core import compression as comp
-        k = comp.resolve_k(self.topk_frac, comp.n_params_of(global_params))
-        rec, new_rows, _ = comp.apply_upload_compress(
-            global_params, params_k, residual_rows, uploaded, k, backend)
-        return rec, new_rows
+        with stage(STAGE_UPLOAD):
+            k = comp.resolve_k(self.topk_frac,
+                               comp.n_params_of(global_params))
+            rec, new_rows, _ = comp.apply_upload_compress(
+                global_params, params_k, residual_rows, uploaded, k, backend)
+            return rec, new_rows
 
     # ------------------------------------------------------------------
     # pallas-backend stages (repro.kernels); each falls back to the XLA
@@ -436,18 +455,20 @@ class RoundEngine:
 
         def train_cohort(global_params, flat_x, flat_y, offsets, lengths,
                          ids, n_iters, rng):
-            offs = offsets[ids]
-            n = jnp.minimum(lengths[ids], max_n)
-            x, y, mask = gather(flat_x, flat_y, offs, n)
-            keys = jax.random.split(rng, ids.shape[0])
-            if fuse_sgd:
-                params_k, losses = self._fused_sgd(
-                    global_params, x, y, n, n_iters, keys,
-                    batch_size, max_iters)
-            else:
-                params_k, losses = jax.vmap(
-                    local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
-                    global_params, x, y, mask, n, n_iters, keys)
+            with stage(STAGE_GATHER):
+                offs = offsets[ids]
+                n = jnp.minimum(lengths[ids], max_n)
+                x, y, mask = gather(flat_x, flat_y, offs, n)
+            with stage(STAGE_LOCAL_SGD):
+                keys = jax.random.split(rng, ids.shape[0])
+                if fuse_sgd:
+                    params_k, losses = self._fused_sgd(
+                        global_params, x, y, n, n_iters, keys,
+                        batch_size, max_iters)
+                else:
+                    params_k, losses = jax.vmap(
+                        local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                        global_params, x, y, mask, n, n_iters, keys)
             return params_k, losses, n
 
         if self.compressing:
@@ -493,17 +514,22 @@ class RoundEngine:
 
         def train_cohort(global_params, flat_x, flat_y, offsets, lengths,
                          ids, n_iters, rng):
-            offs = offsets[ids]
-            n = jnp.minimum(lengths[ids], max_n)
-            keys = jax.random.split(rng, ids.shape[0])
+            with stage(STAGE_GATHER):
+                # direct packed indexing: the "gather" stage reduces to the
+                # per-client offset/length lookup (no cohort shard is built)
+                offs = offsets[ids]
+                n = jnp.minimum(lengths[ids], max_n)
+            with stage(STAGE_LOCAL_SGD):
+                keys = jax.random.split(rng, ids.shape[0])
 
-            def local_train(off_k, nk, iters, key):
-                return core(global_params,
-                            lambda idx: (flat_x[off_k + idx],
-                                         flat_y[off_k + idx]),
-                            nk, iters, key)
+                def local_train(off_k, nk, iters, key):
+                    return core(global_params,
+                                lambda idx: (flat_x[off_k + idx],
+                                             flat_y[off_k + idx]),
+                                nk, iters, key)
 
-            params_k, losses = jax.vmap(local_train)(offs, n, n_iters, keys)
+                params_k, losses = jax.vmap(local_train)(offs, n, n_iters,
+                                                         keys)
             return params_k, losses, n
 
         if self.compressing:
@@ -694,10 +720,12 @@ class RoundEngine:
                 keys = keys[slot]
                 executes = lane_valid
             if fuse_sgd:
-                x, y, _ = gather(flat_x, flat_y, offs, n)
-                params_k, losses = self._fused_sgd(
-                    global_params, x, y, n, iters, keys,
-                    batch_size, max_iters)
+                with stage(STAGE_GATHER):
+                    x, y, _ = gather(flat_x, flat_y, offs, n)
+                with stage(STAGE_LOCAL_SGD):
+                    params_k, losses = self._fused_sgd(
+                        global_params, x, y, n, iters, keys,
+                        batch_size, max_iters)
             elif direct_iid:
                 def local_fn(off_k, nk, it, key):
                     return iid_core(global_params,
@@ -705,12 +733,16 @@ class RoundEngine:
                                                  flat_y[off_k + idx]),
                                     nk, it, key)
 
-                params_k, losses = jax.vmap(local_fn)(offs, n, iters, keys)
+                with stage(STAGE_LOCAL_SGD):
+                    params_k, losses = jax.vmap(local_fn)(offs, n, iters,
+                                                          keys)
             else:
-                x, y, mask = gather(flat_x, flat_y, offs, n)
-                params_k, losses = jax.vmap(
-                    local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
-                    global_params, x, y, mask, n, iters, keys)
+                with stage(STAGE_GATHER):
+                    x, y, mask = gather(flat_x, flat_y, offs, n)
+                with stage(STAGE_LOCAL_SGD):
+                    params_k, losses = jax.vmap(
+                        local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                        global_params, x, y, mask, n, iters, keys)
 
             if self.compressing:
                 # stage 3: compress each executing lane's delta against the
@@ -828,7 +860,7 @@ class RoundEngine:
     def make_segment_fn(self, model, batch_size: int, max_iters: int,
                         max_n: int, cfg, sampling: Optional[str] = None,
                         backend: Optional[str] = None,
-                        mesh=None) -> Callable:
+                        mesh=None, telemetry: bool = False) -> Callable:
         """Fuse whole FedSAE training segments into one jitted ``lax.scan``.
 
         segment_fn(state, ts, flat_x, flat_y, offsets, lengths, mu, sigma)
@@ -888,6 +920,20 @@ class RoundEngine:
         with overflowed slots dropped through the Ira/Fassa crash branch
         and counted in the per-round ``overflowed`` stat (the resolution
         lives in ``repro.core.selection.resolve_capacity``).
+
+        ``telemetry`` (ISSUE 7): device-computed metric accumulation.  The
+        per-round stats gain ``client_uploaded`` ([K] per-slot upload
+        outcome), ``upload_bytes``/``dense_upload_bytes`` (the
+        compressed-vs-dense byte ledger under the configured upload
+        transform) and fixed-bin ``loss_hist``/``workload_hist``
+        (geometry in ``repro.obs.schema``; numpy twin
+        ``histogram_counts``).  Everything rides the block's single
+        existing stats pull — host_syncs_per_round does NOT change — and
+        all extras are derived from replicated values, so the sharded
+        segment needs no extra collectives.  ``telemetry=False``
+        (default) emits the exact PR-6 stats dict: the traced program is
+        unchanged, keeping untelemetered runs bitwise identical
+        (tests/test_telemetry.py).
         """
         from repro.core import prediction as pred
         from repro.core.heterogeneity import sample_workloads_device
@@ -911,6 +957,7 @@ class RoundEngine:
             U=float(cfg.U), alpha=float(cfg.alpha),
             gamma1=float(cfg.gamma1), gamma2=float(cfg.gamma2),
             h_cap=float(cfg.h_cap), fixed_epochs=float(cfg.fixed_epochs))
+        telemetry = bool(telemetry)
 
         def make_one_round(select, train, sizes, mu, sigma, overflow=None):
             """The per-round server step, shared verbatim by the replicated
@@ -975,6 +1022,31 @@ class RoundEngine:
                     "uploaded": e_eff.mean(),
                     "true_workload": E_true.mean(),
                 }
+                if telemetry:
+                    # ISSUE 7: device-accumulated extras that ride the
+                    # block's single stats pull.  All derived from
+                    # replicated values, so the sharded segment carries
+                    # them with no extra collectives; with telemetry off
+                    # this branch vanishes and the program is bitwise
+                    # the untelemetered one.
+                    from repro.core.compression import (
+                        n_params_of, upload_bytes_per_client)
+                    from repro.obs.schema import (LOSS_HIST_BINS,
+                                                  LOSS_HIST_MAX,
+                                                  WORKLOAD_HIST_BINS)
+                    P = n_params_of(params)
+                    bpc = upload_bytes_per_client(P, self.compress,
+                                                  self.topk_frac)
+                    dense_bpc = upload_bytes_per_client(P, "none")
+                    stats["client_uploaded"] = uploaded
+                    stats["upload_bytes"] = n_up * jnp.float32(bpc)
+                    stats["dense_upload_bytes"] = n_up \
+                        * jnp.float32(dense_bpc)
+                    stats["loss_hist"] = _device_hist(
+                        losses, upf, 0.0, LOSS_HIST_MAX, LOSS_HIST_BINS)
+                    stats["workload_hist"] = _device_hist(
+                        e_eff, upf, 0.0, wl_kwargs["h_cap"],
+                        WORKLOAD_HIST_BINS)
                 new_carry = {"params": params, "L": L, "H": H,
                              "theta": theta, "values": values,
                              "data_rng": data_rng, "sel_rng": sel_rng}

@@ -78,6 +78,33 @@ devices: on CPU simulate them with REPRO_FORCE_HOST_DEVICES=S (or
 ``multi-device`` job does.  True multi-host (process-spanning mesh,
 per-host data loading) remains future work — see ROADMAP.
 
+Observability (ISSUE 7, ``repro.obs``): every executed round is emitted as
+a typed :class:`repro.obs.schema.RoundRecord` through ONE shared code path
+(``_emit_round`` — NaN-fill, record construction and progress printing are
+identical for both drivers, so the two loops cannot drift on keys or
+formatting).  Records land in two sinks: an in-memory
+:class:`~repro.obs.sinks.RingBufferSink` that backs the backward-compatible
+``history`` property (the same dict-of-lists every pre-ISSUE-7 consumer
+reads — it is now a VIEW derived from the records, not a second
+bookkeeping path), plus an optional caller-supplied sink
+(``FedSAEServer(..., sink=JsonlSink(path))`` / ``fl_train --metrics-out``)
+for durable JSONL traces that ``scripts/fl_report.py`` renders into a
+straggler/health report.
+
+Supplying a sink (or ``telemetry=True``) additionally enables on-device
+metric accumulation: the scan driver's per-round stats gain per-client
+upload outcomes, fixed-bin loss/workload histograms and the
+compressed-vs-dense upload-byte ledger, computed inside the fused
+``lax.scan`` so they ride the block's ONE existing host pull —
+``host_syncs_per_round`` is unchanged by telemetry (asserted by
+tests/test_telemetry.py), and with telemetry off the traced programs (and
+therefore the runs) are bitwise identical to untelemetered PR-6 on both
+drivers and both backends.  The host driver computes the same extras in
+numpy with identical binning (``repro.obs.schema.histogram_counts``).
+Stage-level profiler regions (gather / local SGD / upload transform /
+aggregate — ``repro.obs.profiling``) annotate the round pipeline for trace
+capture via ``fl_train --trace-dir``.
+
 Capacity compaction (``ServerConfig.cohort_capacity``, ISSUE 5): how much
 of the cohort each shard actually EXECUTES.  The default "full" runs all
 K slots on every shard with non-owned budgets masked — bitwise the PR-4
@@ -99,6 +126,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -115,6 +143,11 @@ from repro.core.selection import (ValueTracker, cohort_overflow,
                                   select_active, select_cohort_device,
                                   value_update_device)
 from repro.data.federated import FederatedDataset
+from repro.obs.schema import (HISTORY_KEYS, LOSS_HIST_BINS, LOSS_HIST_MAX,
+                              WORKLOAD_HIST_BINS, RoundRecord,
+                              histogram_counts, record_from_row,
+                              records_from_block_stats)
+from repro.obs.sinks import NullSink, RingBufferSink, Sink
 
 DRIVERS = ("host", "scan")
 RNG_IMPLS = ("numpy", "device")
@@ -184,7 +217,9 @@ class ServerConfig:
 
 class FedSAEServer:
     def __init__(self, dataset: FederatedDataset, model, cfg: ServerConfig,
-                 het: Optional[HeterogeneitySim] = None):
+                 het: Optional[HeterogeneitySim] = None,
+                 sink: Optional[Sink] = None,
+                 telemetry: Optional[bool] = None):
         if cfg.driver not in DRIVERS:
             raise ValueError(
                 f"unknown driver {cfg.driver!r}; choose from {DRIVERS}")
@@ -266,22 +301,72 @@ class FedSAEServer:
                 self.residual = jnp.zeros((N, n_params), jnp.float32)
         else:
             self.residual = None
+        # telemetry (ISSUE 7): records always flow into the ring buffer
+        # backing the ``history`` view; a caller-supplied sink (JSONL, ...)
+        # additionally receives every record, and its presence switches on
+        # device-side metric accumulation unless overridden
+        self.sink: Sink = sink if sink is not None else NullSink()
+        self.telemetry = bool(telemetry) if telemetry is not None \
+            else sink is not None
+        self._records = RingBufferSink()
+        from repro.core.compression import (n_params_of,
+                                            upload_bytes_per_client)
+        n_params = n_params_of(self.params)
+        self._bytes_per_client = upload_bytes_per_client(
+            n_params, cfg.upload_compress, cfg.topk_frac)
+        self._dense_bytes_per_client = upload_bytes_per_client(
+            n_params, "none")
         self.round_fn = self.engine.make_packed_round(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
             sampling=cfg.sampling, backend=cfg.backend, mesh=self.mesh,
             capacity=self.capacity)
         self.segment_fn = self.engine.make_segment_fn(
             model, cfg.batch_size, self.max_iters, self.packed.max_n,
-            cfg, mesh=self.mesh) if cfg.driver == "scan" else None
+            cfg, mesh=self.mesh, telemetry=self.telemetry) \
+            if cfg.driver == "scan" else None
         self.block_size = max(1, int(cfg.block_size))
         self.select_fn = get_selection(cfg.selection)
         self.eval_fn = make_eval_fn(model)
-        self.history: Dict[str, List] = {
-            "acc": [], "test_loss": [], "train_loss": [], "dropout": [],
-            "assigned": [], "uploaded": [], "true_workload": [],
-            "overflowed": [], "dropped": []}
         self.cohorts: List[np.ndarray] = []   # [K] ids per executed round
         self.host_syncs = 0                   # device->host pulls
+
+    # ------------------------------------------------------------------
+    # telemetry (ISSUE 7): the single record path both drivers share
+    # ------------------------------------------------------------------
+    @property
+    def history(self) -> Dict[str, List]:
+        """Legacy dict-of-lists view over the recorded rounds — same keys,
+        key order and NaN-fill as the pre-ISSUE-7 bookkeeping, but derived
+        from the RoundRecord ring buffer instead of a second code path."""
+        recs = self._records.records
+        return {k: [getattr(r, k) for r in recs] for k in HISTORY_KEYS}
+
+    def _emit_round(self, record: RoundRecord):
+        """Every executed round flows through here, on both drivers."""
+        self._records.emit(record)
+        self.sink.emit(record)
+
+    def _lane_occupancy(self, ids: np.ndarray) -> Optional[List[float]]:
+        """Per-shard executed-lane occupancy, computed host-side from the
+        already-pulled cohort ids (no extra device traffic)."""
+        if self.mesh is None:
+            return None
+        S = self.cfg.mesh_shards
+        counts = np.bincount(
+            np.asarray(ids) // self.packed.clients_per_shard,
+            minlength=S)[:S]
+        if self.capacity is not None:
+            return (np.minimum(counts, self.capacity)
+                    / float(self.capacity)).tolist()
+        return (counts / float(self.cfg.n_selected)).tolist()
+
+    def _progress_line(self, tag: str, label: str, acc: float,
+                       dropout: float, loss: float,
+                       overflowed: float) -> str:
+        """The one progress-line formatter (both drivers print through it)."""
+        ovf = "" if self.capacity is None else f" overflowed={overflowed:.0f}"
+        return (f"[{tag}] {label} acc={acc:.3f} dropout={dropout:.2f} "
+                f"loss={loss:.3f}{ovf}")
 
     # ------------------------------------------------------------------
     def _wl_kwargs(self):
@@ -418,6 +503,7 @@ class FedSAEServer:
 
         stats = {
             "round": t,
+            "ids": np.asarray(ids),
             "dropout": float((outcome == pred.DROPPED).mean()),
             "dropped": float((outcome == pred.DROPPED).sum()),
             "overflowed": float(ovf.sum()),
@@ -427,6 +513,22 @@ class FedSAEServer:
             "uploaded": float(np.mean(e_eff)),
             "true_workload": float(np.mean(E_true)),
         }
+        if self.telemetry:
+            # ISSUE 7: the host-driver twin of the scan driver's
+            # device-accumulated extras — same byte ledger and identical
+            # float32 binning (schema.histogram_counts <-> _device_hist)
+            upf = uploaders.astype(np.float32)
+            n_up = float(upf.sum())
+            stats["client_uploaded"] = uploaders.astype(np.int32)
+            stats["upload_bytes"] = n_up * self._bytes_per_client
+            stats["dense_upload_bytes"] = n_up * self._dense_bytes_per_client
+            stats["loss_hist"] = histogram_counts(
+                losses, upf, 0.0, LOSS_HIST_MAX, LOSS_HIST_BINS)
+            stats["workload_hist"] = histogram_counts(
+                e_eff, upf, 0.0, cfg.h_cap, WORKLOAD_HIST_BINS)
+            occ = self._lane_occupancy(ids)
+            if occ is not None:
+                stats["lane_occupancy"] = occ
         return stats
 
     # ------------------------------------------------------------------
@@ -464,6 +566,7 @@ class FedSAEServer:
         t0 = 0
         while t0 < T:
             b = min(self.block_size, T - t0)
+            blk_start = time.perf_counter()
             ts = jnp.arange(t0, t0 + b, dtype=jnp.int32)
             if self.residual is not None:
                 state, self.residual, stats = self.segment_fn(
@@ -475,40 +578,34 @@ class FedSAEServer:
                     self._mu_dev, self._sigma_dev)
             stats = jax.device_get(stats)   # the block's single host pull
             self.host_syncs += 1
+            wall = time.perf_counter() - blk_start
             self.cohorts.extend(np.asarray(stats["ids"]))
             # eval at most once per block (with the block-end params), and
             # only when a round inside the block was due per eval_every
             due = (t0 + b == T) or any(
                 (t0 + i) % cfg.eval_every == 0 for i in range(b))
-            prev_acc = self.history["acc"][-1] if self.history["acc"] \
-                else float("nan")
+            prev = self._records.last
+            prev_acc = prev.acc if prev is not None else float("nan")
             acc, tl = prev_acc, float("nan")
             if due:
                 acc, tl = self.eval_fn(state["params"], tx, ty)
                 acc, tl = float(acc), float(tl)
                 self.host_syncs += 1    # ...plus the eval readback
-            for i in range(b):
+            recs = records_from_block_stats(stats, t0, b)
+            for i, rec in enumerate(recs):
                 last = i == b - 1
-                row = {
-                    "dropout": float(stats["dropout"][i]),
-                    "dropped": float(stats["dropped"][i]),
-                    "overflowed": float(stats["overflowed"][i]),
-                    "train_loss": float(stats["train_loss"][i]),
-                    "assigned": float(stats["assigned"][i]),
-                    "uploaded": float(stats["uploaded"][i]),
-                    "true_workload": float(stats["true_workload"][i]),
-                    "acc": acc if last else prev_acc,
-                    "test_loss": tl if last else float("nan"),
-                }
-                for k in self.history:
-                    self.history[k].append(row.get(k, float("nan")))
+                rec.acc = acc if last else prev_acc
+                rec.test_loss = tl if last else float("nan")
+                rec.wall_time_s = wall / b
+                if self.telemetry and self.mesh is not None:
+                    rec.lane_occupancy = self._lane_occupancy(
+                        np.asarray(stats["ids"])[i])
+                self._emit_round(rec)
             if verbose:
-                ovf = "" if self.capacity is None else (
-                    f" overflowed={float(np.sum(stats['overflowed'])):.0f}")
-                print(f"[{cfg.algo}/scan] rounds {t0:3d}-{t0 + b - 1:3d} "
-                      f"acc={acc:.3f} "
-                      f"dropout={float(stats['dropout'][-1]):.2f} "
-                      f"loss={float(stats['train_loss'][-1]):.3f}{ovf}")
+                print(self._progress_line(
+                    f"{cfg.algo}/scan", f"rounds {t0:3d}-{t0 + b - 1:3d}",
+                    acc, recs[-1].dropout, recs[-1].train_loss,
+                    float(np.sum(stats["overflowed"]))))
             t0 += b
         self._absorb_state(state)
         return self.history
@@ -520,20 +617,20 @@ class FedSAEServer:
             return self._run_scan(T, verbose)
         tx, ty = jnp.asarray(self.ds.test_x), jnp.asarray(self.ds.test_y)
         for t in range(T):
-            stats = self.run_round(t)
+            rnd_start = time.perf_counter()
+            row = self.run_round(t)
             if t % self.cfg.eval_every == 0 or t == T - 1:
                 acc, tl = self.eval_fn(self.params, tx, ty)
-                stats["acc"], stats["test_loss"] = float(acc), float(tl)
+                row["acc"], row["test_loss"] = float(acc), float(tl)
             else:
-                stats["acc"] = self.history["acc"][-1] if self.history["acc"] \
-                    else float("nan")
-                stats["test_loss"] = float("nan")
-            for k in self.history:
-                self.history[k].append(stats.get(k, float("nan")))
+                prev = self._records.last
+                row["acc"] = prev.acc if prev is not None else float("nan")
+                row["test_loss"] = float("nan")
+            row["wall_time_s"] = time.perf_counter() - rnd_start
+            rec = record_from_row(t, row)
+            self._emit_round(rec)
             if verbose and (t % 10 == 0 or t == T - 1):
-                ovf = "" if self.capacity is None else (
-                    f" overflowed={stats['overflowed']:.0f}")
-                print(f"[{self.cfg.algo}] round {t:3d} acc={stats['acc']:.3f} "
-                      f"dropout={stats['dropout']:.2f} "
-                      f"loss={stats['train_loss']:.3f}{ovf}")
+                print(self._progress_line(
+                    self.cfg.algo, f"round {t:3d}", rec.acc, rec.dropout,
+                    rec.train_loss, rec.overflowed))
         return self.history

@@ -9,7 +9,8 @@ arbitrary batch pytrees, and pjit-able on a mesh (silos shard over `data`).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +20,8 @@ from repro.core import prediction as pred
 from repro.core.aggregation import get_aggregator
 from repro.core.engine import RoundEngine
 from repro.core.heterogeneity import HeterogeneitySim
+from repro.obs.schema import record_from_row
+from repro.obs.sinks import NullSink, Sink
 
 
 def make_silo_round_fn(loss_fn: Callable, lr: float, max_steps: int,
@@ -44,7 +47,8 @@ class SiloFedSAE:
 
     def __init__(self, model, n_silos: int, lr: float = 5e-3,
                  max_steps: int = 16, U: float = 2.0, seed: int = 0,
-                 aggregator: str = "fedavg", **agg_kwargs):
+                 aggregator: str = "fedavg", sink: Optional[Sink] = None,
+                 **agg_kwargs):
         self.model = model
         self.K = n_silos
         self.max_steps = max_steps
@@ -62,11 +66,17 @@ class SiloFedSAE:
         self.round_fn = self.engine.make_stream_round(loss_fn, max_steps)
         self.stats: Dict[str, list] = {"loss": [], "dropout": [],
                                        "uploaded_steps": []}
+        # telemetry (ISSUE 7): the silo path emits through the same
+        # RoundRecord sink interface as FedSAEServer (fl_train --metrics-out)
+        self.sink: Sink = sink if sink is not None else NullSink()
+        self.round_idx = 0
 
     def run_round(self, batches, sizes: np.ndarray):
         """batches: pytree with leading [K, max_steps, ...]."""
+        t_start = time.perf_counter()
         E_true = np.minimum(self.het.sample_round() * self.steps_scale,
                             self.max_steps)
+        assigned = self.H.copy()
         e_eff = pred.uploaded_epochs(self.L, self.H, E_true)
         self.L, self.H, outcome = pred.ira_predict(
             self.L, self.H, E_true, U=self.U, h_cap=float(self.max_steps))
@@ -78,4 +88,16 @@ class SiloFedSAE:
         self.stats["loss"].append(float(np.mean(np.asarray(losses))))
         self.stats["dropout"].append(float((outcome == pred.DROPPED).mean()))
         self.stats["uploaded_steps"].append(float(e_eff.mean()))
+        self.sink.emit(record_from_row(self.round_idx, {
+            "wall_time_s": time.perf_counter() - t_start,
+            "train_loss": self.stats["loss"][-1],
+            "dropout": self.stats["dropout"][-1],
+            "dropped": float((outcome == pred.DROPPED).sum()),
+            "assigned": float(assigned.mean()),
+            "uploaded": self.stats["uploaded_steps"][-1],
+            "true_workload": float(E_true.mean()),
+            "ids": np.arange(self.K),
+            "client_uploaded": (n_steps > 0).astype(np.int32),
+        }))
+        self.round_idx += 1
         return self.stats

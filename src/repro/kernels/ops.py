@@ -22,6 +22,7 @@ from repro.kernels.flash_attention import (flash_attention_bwd,
                                            flash_attention_fwd)
 from repro.kernels.fused_xent import fused_softmax_xent_fwd
 from repro.kernels.selective_scan import selective_scan_fwd
+from repro.obs.profiling import annotate
 
 KERNEL_INTERPRET = True  # CPU container: interpret mode; False on real TPU
 
@@ -115,6 +116,7 @@ fused_softmax_xent.defvjp(_fx_fwd, _fx_bwd)
 # ---------------------------------------------------------------------------
 
 
+@annotate("fed.gather.pallas")
 def fed_cohort_gather(flat_x, flat_y, starts, ns, max_n: int):
     """Fused gather+mask over the packed federation (see fed_gather.py).
 
@@ -124,6 +126,7 @@ def fed_cohort_gather(flat_x, flat_y, starts, ns, max_n: int):
                                  interpret=KERNEL_INTERPRET)
 
 
+@annotate("fed.local_sgd.pallas")
 def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, lr: float,
                        prox_mu: float = 0.0):
     """Fused masked budgeted MCLR local SGD (see fed_local_sgd.py).
@@ -134,6 +137,7 @@ def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, lr: float,
                                   interpret=KERNEL_INTERPRET)
 
 
+@annotate("fed.upload_transform.pallas")
 def fed_compress_topk_q8(ef, k: int):
     """Fused top-k + int8 upload compression over per-client error-feedback
     delta rows (see fed_compress.py).  Bitwise-identical to the ref twin.

@@ -30,6 +30,16 @@ from repro.core.silo import SiloFedSAE
 from repro.data.federated import DATASETS
 from repro.models.api import build_model
 from repro.models.fl_models import make_lstm, make_mclr
+from repro.obs import JsonlSink, trace_if
+
+
+def make_sink(args, **meta):
+    """--metrics-out -> a JsonlSink with a run-meta header (else None)."""
+    if not args.metrics_out:
+        return None
+    return JsonlSink(args.metrics_out, meta=dict(
+        rounds=args.rounds, driver=args.driver, backend=args.backend,
+        **meta))
 
 
 def run_flat(args):
@@ -63,9 +73,15 @@ def run_flat(args):
                        cohort_capacity=args.cohort_capacity,
                        upload_compress=args.compress,
                        topk_frac=args.topk_frac)
+    sink = make_sink(args, path="flat", dataset=args.dataset, algo=args.algo)
     srv = FedSAEServer(ds, model, cfg,
-                       het=HeterogeneitySim(ds.n_clients, seed=cfg.seed))
-    hist = srv.run(verbose=True)
+                       het=HeterogeneitySim(ds.n_clients, seed=cfg.seed),
+                       sink=sink)
+    with trace_if(args.trace_dir):
+        hist = srv.run(verbose=not args.quiet)
+    if sink is not None:
+        sink.close()
+        print(f"metrics: {sink.path}")
     # overflow drops would otherwise be invisible outside the engine: a
     # compacted run always reports how many cohort slots it sacrificed
     ovf = "" if srv.capacity is None else (
@@ -83,23 +99,30 @@ def run_silo(args):
     model = build_model(acfg)
     agg_kwargs = ({"trim_ratio": args.trim_ratio}
                   if args.aggregator == "trimmed_mean" else {})
+    sink = make_sink(args, path="silo", arch=args.silo_arch,
+                     silos=args.silos)
     fed = SiloFedSAE(model, args.silos, lr=5e-3, max_steps=args.max_steps,
-                     aggregator=args.aggregator, **agg_kwargs)
+                     aggregator=args.aggregator, sink=sink, **agg_kwargs)
     ri = np.random.default_rng(0)
     K, S = args.silos, 64
     sizes = np.asarray(ri.integers(100, 1000, K))
     # each silo has its own token distribution (silo id biases the tokens)
-    for r in range(args.rounds):
-        toks = np.stack([
-            ri.integers(0, acfg.vocab_size // (1 + (k % 3)),
-                        (fed.max_steps, 2, S))
-            for k in range(K)])
-        batches = {"tokens": jnp.asarray(toks, jnp.int32),
-                   "labels": jnp.asarray(toks, jnp.int32)}
-        stats = fed.run_round(batches, sizes)
-        print(f"round {r}: loss={stats['loss'][-1]:.4f} "
-              f"dropout={stats['dropout'][-1]:.2f} "
-              f"uploaded_steps={stats['uploaded_steps'][-1]:.1f}")
+    with trace_if(args.trace_dir):
+        for r in range(args.rounds):
+            toks = np.stack([
+                ri.integers(0, acfg.vocab_size // (1 + (k % 3)),
+                            (fed.max_steps, 2, S))
+                for k in range(K)])
+            batches = {"tokens": jnp.asarray(toks, jnp.int32),
+                       "labels": jnp.asarray(toks, jnp.int32)}
+            stats = fed.run_round(batches, sizes)
+            if not args.quiet:
+                print(f"round {r}: loss={stats['loss'][-1]:.4f} "
+                      f"dropout={stats['dropout'][-1]:.2f} "
+                      f"uploaded_steps={stats['uploaded_steps'][-1]:.1f}")
+    if sink is not None:
+        sink.close()
+        print(f"metrics: {sink.path}")
     assert np.isfinite(stats["loss"][-1])
     print("silo FL done")
 
@@ -174,6 +197,21 @@ def main():
     ap.add_argument("--topk-frac", type=float, default=0.1,
                     help="kept coordinate fraction for --compress topk_q8: "
                          "k = ceil(frac * n_params) per client per round")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write per-round telemetry as JSONL RoundRecords "
+                         "(repro.obs) to this path; render the trace with "
+                         "scripts/fl_report.py.  Also switches on on-device "
+                         "metric accumulation (histograms, byte ledger, "
+                         "per-client upload outcomes) — metrics ride the "
+                         "scan driver's existing per-block stats pull, so "
+                         "host syncs are unchanged")
+    ap.add_argument("--trace-dir", default=None,
+                    help="capture a jax.profiler trace of the run into this "
+                         "directory (TensorBoard/perfetto); the four round "
+                         "pipeline stages appear as fed.* regions")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-round/block progress lines (the "
+                         "final summary still prints)")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--silo-arch", default=None)
     ap.add_argument("--silos", type=int, default=4)

@@ -1,0 +1,104 @@
+"""Pluggable RoundRecord sinks (ISSUE 7).
+
+A sink receives every executed round's :class:`repro.obs.schema.RoundRecord`
+through ``emit``; the server emits in driver cadence (once per round on the
+host driver, a burst per block on the scan driver — emission NEVER adds
+device->host syncs, it only consumes the block's one existing stats pull).
+
+  NullSink        drops everything (the telemetry-off default; also the
+                  baseline leg of the bench's telemetry_overhead gate)
+  RingBufferSink  in-memory, optionally bounded; backs the server's
+                  backward-compatible ``history`` view
+  JsonlSink       one strict-JSON line per record, optional ``{"_meta":
+                  {...}}`` header line; read back with
+                  repro.obs.schema.read_jsonl / rendered by
+                  scripts/fl_report.py
+  TeeSink         fan-out to several sinks
+"""
+from __future__ import annotations
+
+import collections
+import json
+from typing import Dict, List, Optional
+
+from repro.obs.schema import RoundRecord
+
+
+class Sink:
+    """Interface: ``emit`` each record, ``close`` when the run ends."""
+
+    def emit(self, record: RoundRecord) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "Sink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class NullSink(Sink):
+    def emit(self, record: RoundRecord) -> None:
+        pass
+
+
+class RingBufferSink(Sink):
+    """Keep the last ``capacity`` records in memory (None = unbounded)."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        self._buf: collections.deque = collections.deque(maxlen=capacity)
+
+    def emit(self, record: RoundRecord) -> None:
+        self._buf.append(record)
+
+    @property
+    def records(self) -> List[RoundRecord]:
+        return list(self._buf)
+
+    @property
+    def last(self) -> Optional[RoundRecord]:
+        return self._buf[-1] if self._buf else None
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class JsonlSink(Sink):
+    """Append records to ``path`` as JSON lines.
+
+    ``meta`` (run-level context: algo, dataset, config, ...) is written as
+    a ``{"_meta": {...}}`` first line so reports can label themselves.
+    Writes go through the file object's normal buffering; ``close`` (or the
+    context manager) flushes.  Keep the emitted volume in mind: one record
+    is a few hundred bytes, so even paper-scale runs stay in the MBs.
+    """
+
+    def __init__(self, path: str, meta: Optional[Dict] = None):
+        self.path = path
+        self._f = open(path, "w")
+        if meta is not None:
+            self._f.write(json.dumps({"_meta": meta}, allow_nan=False)
+                          + "\n")
+
+    def emit(self, record: RoundRecord) -> None:
+        self._f.write(record.to_json() + "\n")
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class TeeSink(Sink):
+    def __init__(self, *sinks: Sink):
+        self.sinks = sinks
+
+    def emit(self, record: RoundRecord) -> None:
+        for s in self.sinks:
+            s.emit(record)
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
