@@ -82,6 +82,19 @@ Compressed-upload leg (ISSUE 6, ``upload_compress="topk_q8"``):
                              topk_frac) and scripts/check_bench.py gates
                              it statically from the recorded file.
 
+Fault-screen overhead leg (ISSUE 8, ``repro.faults``):
+
+  scan_faults_screen  two runs of the xla scan leg — once plain and once
+                      with the finite/norm upload screen forced on
+                      (upload_screen="on": screen_uploads + the
+                      optimization-barrier fence in RoundEngine._finish,
+                      exactly the hardened-aggregation program a faulted
+                      run compiles, minus injection).  ``overhead_frac =
+                      1 - screened/plain`` is the recorded cost of
+                      screening every round; the ISSUE-8 acceptance bar
+                      is <= 0.05 and scripts/check_bench.py gates it
+                      statically from the recorded file.
+
 Telemetry-overhead legs (ISSUE 7, ``repro.obs``):
 
   telemetry_overhead  two runs of the xla scan leg with device-side metric
@@ -200,9 +213,13 @@ def _seed_round_fn(model, lr, batch_size, max_iters):
     return round_fn
 
 
+SCREEN_NORM_BOUND = 1e4   # the screened leg's norm bound (config default)
+
+
 def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 reps: int = 3, shards: int = 0, gate_only: bool = False,
-                sharded_only: bool = False, telemetry_only: bool = False):
+                sharded_only: bool = False, telemetry_only: bool = False,
+                faults_only: bool = False):
     from repro.core.selection import resolve_capacity
     from repro.models.fl_models import make_mclr
 
@@ -222,6 +239,10 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
     engine = RoundEngine(lr=0.03, aggregator=get_aggregator("fedavg"))
     engine_c = RoundEngine(lr=0.03, aggregator=get_aggregator("fedavg"),
                            compress="topk_q8", topk_frac=TOPK_FRAC)
+    # ISSUE 8: the hardened-aggregation program (finite/norm screen +
+    # aggregator fence) without injection — pure screening cost
+    engine_s = RoundEngine(lr=0.03, aggregator=get_aggregator("fedavg"),
+                           screen_norm=SCREEN_NORM_BOUND)
     n_params = n_params_of(params)
     packed = ds.packed(max_n)
     packed_fns = {
@@ -302,11 +323,13 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             "sel_rng": jax.random.PRNGKey(seed),
         }
 
-    def timed_scan(backend, mesh=None, pk=None, capacity="full"):
+    def timed_scan(backend, mesh=None, pk=None, capacity="full",
+                   eng=None):
         pk = packed if pk is None else pk
-        seg = engine.make_segment_fn(model, batch_size, max_iters,
-                                     pk.max_n,
-                                     scan_cfg(backend, capacity), mesh=mesh)
+        seg = (eng or engine).make_segment_fn(model, batch_size, max_iters,
+                                              pk.max_n,
+                                              scan_cfg(backend, capacity),
+                                              mesh=mesh)
 
         def run_blocks(state):
             for b in range(n_blocks):
@@ -403,6 +426,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 timed(engine_round(packed_fns[("shuffle", "pallas")])),
             "pallas_iid": timed(engine_round(packed_fns[("iid", "pallas")])),
             "scan": timed_scan("xla"),
+            "scan_screen": timed_scan("xla", eng=engine_s),
             "scan_pallas": timed_scan("pallas"),
             "scan_compress": timed_scan_compress("xla"),
             "scan_telemetry_null": timed_scan_telemetry(NullSink),
@@ -442,6 +466,10 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         # merges it into the existing scale entry (like --sharded-only)
         legs = {k: legs[k] for k in ("scan_telemetry_null",
                                      "scan_telemetry_jsonl")}
+    elif faults_only:
+        # --faults-only re-records just the ISSUE-8 screening pair and
+        # merges it into the existing scale entry
+        legs = {k: legs[k] for k in ("scan", "scan_screen")}
     elif gate_only:
         # scripts/check_bench.py consumes only the scan/engine ratio — time
         # exactly those two legs so the CI gate pays for nothing else
@@ -456,8 +484,8 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             samples[name].append(r)
     rps = {name: float(np.median(v)) for name, v in samples.items()}
     for name in set(rps) & {"iid", "pallas_iid", "scan", "scan_pallas",
-                            "scan_compress", "scan_telemetry_null",
-                            "scan_telemetry_jsonl",
+                            "scan_screen", "scan_compress",
+                            "scan_telemetry_null", "scan_telemetry_jsonl",
                             "scan_sharded", "scan_sharded_capacity"}:
         for leaf in jax.tree.leaves(final_p[name]):
             assert np.isfinite(np.asarray(leaf)).all()
@@ -502,6 +530,22 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             "jsonl_sink_rounds_per_sec": round(jsonl, 3),
             "overhead_frac": round(1.0 - jsonl / null, 4)}}
 
+    def faults_entry():
+        plain = rps["scan"]
+        screened = rps["scan_screen"]
+        return {"scan_faults_screen": {
+            "driver": "scan", "sampling": "iid", "backend": "xla",
+            "block_size": block, "upload_screen": "on",
+            "screen_norm_bound": SCREEN_NORM_BOUND,
+            "data": "finite/norm upload screen + aggregator fence in "
+                    "every round (the hardened-aggregation program minus "
+                    "injection); overhead_frac = 1 - screened/plain "
+                    "(ISSUE-8 acceptance: <= 0.05, gated statically by "
+                    "scripts/check_bench.py)",
+            "plain_rounds_per_sec": round(plain, 3),
+            "screened_rounds_per_sec": round(screened, 3),
+            "overhead_frac": round(1.0 - screened / plain, 4)}}
+
     if shards and (gate_only or sharded_only):
         out = sharded_entries()
         if gate_only:
@@ -510,6 +554,8 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         return out
     if telemetry_only:
         return telemetry_entry()
+    if faults_only:
+        return faults_entry()
     if gate_only:
         return {
             "scale": scale, "rounds_timed": rounds,
@@ -591,6 +637,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 / dense_upload, 4),
             "rounds_per_sec": round(rps["scan_compress"], 3)},
         **telemetry_entry(),
+        **faults_entry(),
         "pallas_mode": "interpret" if jax.default_backend() == "cpu"
         else "compiled",
         "pallas_speedup_vs_engine": round(rps["pallas_iid"] / iid_rps, 3),
@@ -635,6 +682,12 @@ def main():
                          "vs jsonl sink) and MERGE the telemetry_overhead "
                          "entry into the existing scale record — the other "
                          "legs keep their recorded numbers")
+    ap.add_argument("--faults-only", action="store_true",
+                    help="time only the two ISSUE-8 screening legs (plain "
+                         "vs upload_screen='on' scan) and MERGE the "
+                         "scan_faults_screen entry into the existing scale "
+                         "record — the other legs keep their recorded "
+                         "numbers")
     ap.add_argument("--gate-only", action="store_true",
                     help="time only the gate legs (iid-engine + scan, or "
                          "the sharded masked/compacted pair with --shards) "
@@ -649,18 +702,25 @@ def main():
     if args.sharded_only and not args.shards:
         ap.error("--sharded-only requires --shards")
     if args.telemetry_only and (args.gate_only or args.sharded_only
-                                or args.shards):
+                                or args.shards or args.faults_only):
         ap.error("--telemetry-only times the 1-device telemetry pair "
-                 "alone; drop --shards/--gate-only/--sharded-only")
+                 "alone; drop --shards/--gate-only/--sharded-only/"
+                 "--faults-only")
+    if args.faults_only and (args.gate_only or args.sharded_only
+                             or args.shards):
+        ap.error("--faults-only times the 1-device screening pair alone; "
+                 "drop --shards/--gate-only/--sharded-only")
     scales = ("reduced", "paper") if args.scale == "both" else (args.scale,)
     merged = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
             merged = json.load(f)
-    if args.sharded_only or args.telemetry_only:
+    if args.sharded_only or args.telemetry_only or args.faults_only:
         # merging into a missing entry would leave a partial record that
         # check_bench.py's scan/engine gate crashes on
-        which = "--sharded-only" if args.sharded_only else "--telemetry-only"
+        which = ("--sharded-only" if args.sharded_only else
+                 "--telemetry-only" if args.telemetry_only else
+                 "--faults-only")
         missing = [s for s in scales if "engine_scan_path"
                    not in merged.get(s, {})]
         if missing:
@@ -671,8 +731,9 @@ def main():
         res = bench_scale(scale, args.rounds, args.epochs, reps=args.reps,
                           shards=args.shards, gate_only=args.gate_only,
                           sharded_only=args.sharded_only,
-                          telemetry_only=args.telemetry_only)
-        if args.sharded_only or args.telemetry_only:
+                          telemetry_only=args.telemetry_only,
+                          faults_only=args.faults_only)
+        if args.sharded_only or args.telemetry_only or args.faults_only:
             entry = merged.get(scale, {})
             entry.update(res)
             merged[scale] = entry
@@ -693,6 +754,13 @@ def main():
                   f"{tel['null_sink_rounds_per_sec']:.2f} rounds/s   jsonl "
                   f"sink {tel['jsonl_sink_rounds_per_sec']:.2f} rounds/s   "
                   f"overhead {tel['overhead_frac']:.1%}")
+            continue
+        if args.faults_only:
+            fs = res["scan_faults_screen"]
+            print(f"[{scale}] scan+screen: plain "
+                  f"{fs['plain_rounds_per_sec']:.2f} rounds/s   screened "
+                  f"{fs['screened_rounds_per_sec']:.2f} rounds/s   "
+                  f"overhead {fs['overhead_frac']:.1%}")
             continue
         if args.gate_only:
             print(f"[{scale}] gate legs: engine "
@@ -717,6 +785,11 @@ def main():
               f"{tel['null_sink_rounds_per_sec']:.2f} rounds/s   jsonl sink "
               f"{tel['jsonl_sink_rounds_per_sec']:.2f} rounds/s   overhead "
               f"{tel['overhead_frac']:.1%}")
+        fs = res["scan_faults_screen"]
+        print(f"[{scale}] scan+screen: plain "
+              f"{fs['plain_rounds_per_sec']:.2f} rounds/s   screened "
+              f"{fs['screened_rounds_per_sec']:.2f} rounds/s   overhead "
+              f"{fs['overhead_frac']:.1%}")
     with open(args.out, "w") as f:
         json.dump(merged, f, indent=2)
     print(f"wrote {os.path.abspath(args.out)}")

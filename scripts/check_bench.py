@@ -28,6 +28,10 @@ Two further gates are STATIC (no smoke run), checked on the recorded file:
                       the null sink (``overhead_frac <= 0.05``) — recorded
                       on a quiet box so CI timing noise cannot flake the
                       acceptance bar
+  screen-overhead     the recorded ``scan_faults_screen`` leg (ISSUE 8)
+                      must show <= 5% rounds/s loss for the finite/norm
+                      upload screen vs the plain scan leg
+                      (``overhead_frac <= 0.05``), same quiet-box rule
 
 A fresh ratio more than ``--tolerance`` (default 30%) below the recorded
 one fails the job; a faster ratio prints a hint to re-record.  Every
@@ -63,6 +67,10 @@ COMPRESS_RATIO_CEILING = 0.15
 # ISSUE-7 acceptance: recorded JSONL-sink telemetry costs <= this fraction
 # of the null-sink rounds/s
 TELEMETRY_OVERHEAD_CEILING = 0.05
+
+# ISSUE-8 acceptance: the finite/norm upload screen costs <= this fraction
+# of the plain scan leg's rounds/s
+SCREEN_OVERHEAD_CEILING = 0.05
 
 
 def check_upload_bytes(entry: dict, failures: list) -> bool:
@@ -113,6 +121,31 @@ def check_telemetry_overhead(entry: dict, failures: list) -> bool:
                          f"{TELEMETRY_OVERHEAD_CEILING:.0%} ceiling "
                          f"({tel['jsonl_sink_rounds_per_sec']} vs "
                          f"{tel['null_sink_rounds_per_sec']} rounds/s)"))
+    return ok
+
+
+def check_screen_overhead(entry: dict, failures: list) -> bool:
+    """Static ISSUE-8 gate on the RECORDED fault-screen leg."""
+    fs = entry.get("scan_faults_screen")
+    if fs is None:
+        print("check_bench[screen-overhead]: no scan_faults_screen "
+              "recorded — re-record BENCH_round_engine.json with the "
+              "screening leg (bench_round_engine.py --faults-only)")
+        failures.append(("screen-overhead", "no scan_faults_screen entry "
+                         "in the recorded file"))
+        return False
+    got = fs["overhead_frac"]
+    ok = got <= SCREEN_OVERHEAD_CEILING
+    print(f"check_bench[screen-overhead]: screened "
+          f"{fs['screened_rounds_per_sec']} rounds/s vs plain "
+          f"{fs['plain_rounds_per_sec']} rounds/s = {got:.2%} overhead "
+          f"(ceiling {SCREEN_OVERHEAD_CEILING:.0%}) "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(("screen-overhead", f"recorded overhead {got:.2%} "
+                         f"above the {SCREEN_OVERHEAD_CEILING:.0%} ceiling "
+                         f"({fs['screened_rounds_per_sec']} vs "
+                         f"{fs['plain_rounds_per_sec']} rounds/s)"))
     return ok
 
 
@@ -224,6 +257,7 @@ def main() -> int:
     failures: list = []
     ok = check_upload_bytes(entry, failures)
     ok = check_telemetry_overhead(entry, failures) and ok
+    ok = check_screen_overhead(entry, failures) and ok
     for name, fn, want, extra_args, extra_env, abs_floor in gates:
         ok = run_gate(name, fn, want, extra_args, extra_env, args,
                       failures, abs_floor) and ok

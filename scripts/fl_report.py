@@ -4,7 +4,9 @@ Consumes the per-round RoundRecord lines written by ``fl_train
 --metrics-out`` (or any ``repro.obs.sinks.JsonlSink``), validates every
 line against the schema, and renders the markdown report from
 ``repro.obs.report``: round summary, windowed straggler rates, per-client
-reliability, the compressed-vs-dense upload ledger and the rounds/s trend.
+reliability, the fault-screen/quarantine section (when the trace carries
+the ISSUE-8 counters), the compressed-vs-dense upload ledger and the
+rounds/s trend.
 
   PYTHONPATH=src python scripts/fl_report.py run.jsonl
   PYTHONPATH=src python scripts/fl_report.py run.jsonl --out report.md

@@ -1,1 +1,6 @@
-from repro.checkpoint.msgpack_ckpt import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.fl_state import (checkpoint_path,  # noqa: F401
+                                       latest_checkpoint, list_checkpoints,
+                                       restore_server_state,
+                                       save_server_state)
+from repro.checkpoint.msgpack_ckpt import (load_checkpoint,  # noqa: F401
+                                           save_checkpoint)

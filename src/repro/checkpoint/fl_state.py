@@ -1,0 +1,158 @@
+"""Whole-server crash-recovery checkpoints (ISSUE 8).
+
+A checkpoint captures EVERYTHING a :class:`repro.core.server.FedSAEServer`
+needs to continue bitwise — resuming from round t must produce the same
+params, history state and telemetry trace as the uninterrupted run:
+
+  tensors   params pytree, the Ira/Fassa history (L/H/theta, float64 so
+            the host driver's numpy math round-trips exactly), the
+            ValueTracker values, both threefry key states (data_rng,
+            sel_key), the compression error-feedback residual (when the
+            upload transform carries one) and the quarantine counters
+  metadata  the next round index, the numpy Generator states (host driver
+            with rng_impl="numpy"; PCG64 state holds a 128-bit int, so it
+            is JSON-stringified — msgpack ints cap at 64 bits), every
+            RoundRecord emitted so far (``to_json`` lines: repr float
+            round-tripping keeps e.g. the carried-forward prev_acc
+            bit-exact) and the executed cohort list
+
+Files are ``ckpt_<round>.msgpack`` under a caller-chosen directory, written
+through :func:`repro.checkpoint.msgpack_ckpt.save_checkpoint` (atomic
+temp-file + fsync + rename), so a run killed mid-save never corrupts the
+previous checkpoint.  ``restore_server_state`` loads the LATEST one.
+
+The fault-injection streams (repro.faults) need no state here: they are
+keyed by ``fold_in(PRNGKey(fault_seed), t)`` per round, so a resumed run
+replays the exact fault schedule by construction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.msgpack_ckpt import load_checkpoint, save_checkpoint
+from repro.obs.schema import RoundRecord
+from repro.obs.sinks import RingBufferSink
+
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.msgpack$")
+
+
+def checkpoint_path(directory: str, next_round: int) -> str:
+    return os.path.join(directory, f"ckpt_{next_round:08d}.msgpack")
+
+
+def list_checkpoints(directory: str) -> List[Tuple[int, str]]:
+    """Sorted [(next_round, path)] for every checkpoint in ``directory``."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _CKPT_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(directory, name)))
+    return sorted(out)
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    ckpts = list_checkpoints(directory)
+    return ckpts[-1][1] if ckpts else None
+
+
+def _server_tensors(server) -> Dict:
+    tree = {
+        "params": server.params,
+        "L": np.asarray(server.L, np.float64),
+        "H": np.asarray(server.H, np.float64),
+        "theta": np.asarray(server.theta, np.float64),
+        "values": np.asarray(server.values.v, np.float64),
+        "data_rng": np.asarray(server.data_rng),
+        "sel_key": np.asarray(server.sel_key),
+    }
+    if server.residual is not None:
+        tree["residual"] = np.asarray(server.residual)
+    if getattr(server, "_quarantine", False):
+        tree["q_fail"] = np.asarray(server.q_fail, np.int32)
+        tree["q_try"] = np.asarray(server.q_try, np.int32)
+        tree["q_susp"] = np.asarray(server.q_susp, np.int32)
+    return tree
+
+
+def save_server_state(server, directory: str, next_round: int) -> str:
+    """Checkpoint ``server`` so a fresh process can continue at
+    ``next_round``.  Returns the written path."""
+    metadata: Dict = {
+        "round": int(next_round),
+        "rng_impl": server.rng_impl,
+        "records": [r.to_json() for r in server._records.records],
+        "cohorts": [np.asarray(c).tolist() for c in server.cohorts],
+    }
+    if server.rng_impl == "numpy":
+        # numpy Generator states hold >64-bit ints (PCG64 carries a
+        # 128-bit state word) — msgpack cannot, JSON can
+        metadata["sel_rng_state"] = json.dumps(
+            server.sel_rng.bit_generator.state)
+        metadata["het_rng_state"] = json.dumps(
+            server.het._rng.bit_generator.state)
+    path = checkpoint_path(directory, next_round)
+    save_checkpoint(path, _server_tensors(server), step=int(next_round),
+                    metadata=metadata)
+    return path
+
+
+def restore_server_state(server, directory: str) -> int:
+    """Restore ``server`` from the latest checkpoint in ``directory``.
+
+    Returns the next round index to execute.  The server must have been
+    constructed with the SAME config/dataset/model as the checkpointing
+    run (tensor shapes are validated by the pytree restore; semantics are
+    on the caller, as with any checkpoint format).
+    """
+    path = latest_checkpoint(directory)
+    if path is None:
+        raise FileNotFoundError(
+            f"no ckpt_*.msgpack checkpoint found in {directory!r}")
+    tree, step, metadata = load_checkpoint(
+        path, like=_server_tensors(server))
+    server.params = jax.tree.map(jnp.asarray, tree["params"])
+    server.L = np.asarray(tree["L"], np.float64)
+    server.H = np.asarray(tree["H"], np.float64)
+    server.theta = np.asarray(tree["theta"], np.float64)
+    server.values.v = np.asarray(tree["values"], np.float64)
+    # threefry key states restore as plain uint32 vectors
+    server.data_rng = jnp.asarray(np.asarray(tree["data_rng"], np.uint32))
+    server.sel_key = jnp.asarray(np.asarray(tree["sel_key"], np.uint32))
+    if server.residual is not None:
+        residual = jnp.asarray(tree["residual"], jnp.float32)
+        if server.mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            residual = jax.device_put(
+                residual, NamedSharding(server.mesh, P("data")))
+        server.residual = residual
+    if getattr(server, "_quarantine", False):
+        server.q_fail = np.asarray(tree["q_fail"], np.int32)
+        server.q_try = np.asarray(tree["q_try"], np.int32)
+        server.q_susp = np.asarray(tree["q_susp"], np.int32)
+    if metadata.get("rng_impl") != server.rng_impl:
+        raise ValueError(
+            f"checkpoint was taken with rng_impl="
+            f"{metadata.get('rng_impl')!r} but this server runs "
+            f"{server.rng_impl!r}")
+    if server.rng_impl == "numpy":
+        server.sel_rng.bit_generator.state = json.loads(
+            metadata["sel_rng_state"])
+        server.het._rng.bit_generator.state = json.loads(
+            metadata["het_rng_state"])
+    # replay the telemetry trace into the ring buffer only — the external
+    # sink is the caller's (fl_train reopens its JSONL in append mode)
+    server._records = RingBufferSink()
+    for line in metadata["records"]:
+        server._records.emit(RoundRecord.from_json(line))
+    server.cohorts = [np.asarray(c, np.int64) for c in metadata["cohorts"]]
+    return int(metadata["round"])

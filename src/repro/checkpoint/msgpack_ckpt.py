@@ -12,7 +12,6 @@ import tempfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import msgpack
 import numpy as np
 
@@ -32,11 +31,21 @@ def save_checkpoint(path: str, tree, step: int = 0,
                     metadata: Optional[Dict] = None) -> None:
     payload = {"step": step, "metadata": metadata or {},
                "tensors": _flatten(tree)}
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    # serialize BEFORE creating the temp file: a pack failure (e.g. a
+    # non-msgpack-able metadata value) then leaves the directory untouched
+    # instead of racing the except-branch cleanup
+    blob = msgpack.packb(payload, use_bin_type=True)
+    dirname = os.path.dirname(os.path.abspath(path))
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname)
     try:
         with os.fdopen(fd, "wb") as f:
-            f.write(msgpack.packb(payload, use_bin_type=True))
+            f.write(blob)
+            f.flush()
+            # the atomic-rename guarantee is only as strong as the data
+            # behind it: fsync the temp file so a crash right after
+            # os.replace cannot surface a named-but-empty checkpoint
+            os.fsync(f.fileno())
         os.replace(tmp, path)
     except BaseException:
         if os.path.exists(tmp):
@@ -46,7 +55,12 @@ def save_checkpoint(path: str, tree, step: int = 0,
 
 def load_checkpoint(path: str, like=None) -> Tuple[Any, int, Dict]:
     """Returns (tree, step, metadata). With ``like`` given, restores the
-    exact pytree structure; otherwise returns a flat {path: array} dict."""
+    exact pytree structure; otherwise returns a flat {path: array} dict.
+
+    Leaves come back as NUMPY arrays in their saved dtypes — never
+    ``jnp.asarray``'d here, which would silently downcast float64 state
+    (e.g. the server's Ira/Fassa history) to float32 under the default
+    x64-disabled jax config.  Callers device_put what they need."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
     tensors = {
@@ -63,6 +77,6 @@ def load_checkpoint(path: str, like=None) -> Tuple[Any, int, Dict]:
                        for p in path)
         if key not in tensors:
             raise KeyError(f"checkpoint missing tensor {key!r}")
-        leaves.append(jnp.asarray(tensors[key]))
+        leaves.append(tensors[key])
     return jax.tree_util.tree_unflatten(treedef, leaves), payload["step"], \
         payload["metadata"]

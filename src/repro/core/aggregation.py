@@ -47,6 +47,18 @@ and tolerates adversaries only while they hold < 1/2 of the total n_k.
 ``weighted=False`` is bitwise the previous behaviour.  Validity is always respected — dropped clients (weight 0,
 including capacity-overflowed cohort slots whose stack rows are exact
 zeros) never enter any statistic.
+
+Screening contract (ISSUE 8): NO aggregator here defends against
+non-finite uploads on its own — a single NaN row poisons FedAvg's
+tensordot (0 * NaN = NaN) and infects every pairwise distance in
+krum/geometric_median even at weight 0.  When the upload screen is active
+(``ServerConfig.upload_screen``), ``repro.faults.screen.screen_uploads``
+runs in ``RoundEngine._finish`` BEFORE every registry aggregator:
+screened rows enter with weight 0 and the global-params row value, so the
+(stack, weights) pair each aggregator sees is exactly what a crashed
+client produces.  Aggregators may therefore assume finite inputs when the
+screen is on; with the screen off they inherit the historical hazard
+(tests/test_faults.py documents it as a regression test).
 """
 from __future__ import annotations
 

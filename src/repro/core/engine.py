@@ -161,12 +161,30 @@ class RoundEngine:
                 on and reject compression.
     topk_frac : kept-coordinate fraction for "topk_q8"
                 (k = ceil(topk_frac * n_params), resolved at trace time)
+    faults    : optional ``repro.faults.FaultModel`` (ISSUE 8).  Corrupt
+                modes that mutate uploads ("nan"/"inf"/"sign_flip"/
+                "explode") add a trailing ``corrupt`` [K] bool argument to
+                the packed round functions (after the residual, when
+                compressing): the marked uploading rows are overwritten
+                with the mode's garbage at the upload-transform seam.
+                Screened modes additionally exclude the corrupt rows from
+                compressed TRANSMISSION, so their error-feedback residual
+                stays bit-identical to the crash-twin run.  ``None`` (and
+                the pure "crash" mode) leaves every signature and traced
+                program exactly as before.
+    screen_norm : enable the finite/norm upload screen before aggregation
+                (``repro.faults.screen_uploads``) with this delta-l2 norm
+                bound.  Round functions then return a trailing ``bad``
+                [K] bool output (after the residual) marking the screened
+                rows.  ``None`` (default) disables the screen — the traced
+                program is unchanged.
     """
 
     def __init__(self, lr: float, aggregator: Optional[Aggregator] = None,
                  prox_mu: Optional[float] = None, donate: bool = True,
                  backend: str = "xla", compress: str = "none",
-                 topk_frac: float = 0.1):
+                 topk_frac: float = 0.1, faults=None,
+                 screen_norm: Optional[float] = None):
         from repro.core.compression import check_compress, resolve_k
 
         self.lr = lr
@@ -179,6 +197,28 @@ class RoundEngine:
         self.topk_frac = float(topk_frac)
         resolve_k(self.topk_frac, 1)  # validate the fraction eagerly
         self.compressing = self.compress != "none"
+        self.faults = faults
+        self.screen_norm = None if screen_norm is None else float(screen_norm)
+        self.screening = self.screen_norm is not None
+        self.injecting = faults is not None and faults.injects
+        # where the garbage goes in: delta-shaped modes (sign_flip,
+        # explode) corrupt what the CLIENT compresses and transmits —
+        # before the upload transform, as an in-line where() on the
+        # trained stack.  Deriving them post-transform would collapse to
+        # the global row (a non-transmitting row reconstructs to exactly
+        # ``global``), and tapping the raw stack from a post-transform
+        # side branch perturbs XLA's fusion of the transform enough to
+        # break the crash twin's bitwise claim at the ulp level.
+        # Value-independent garbage (nan/inf) corrupts the reconstructed
+        # stack "on the wire" and never transmits.
+        self._inject_pre = (self.injecting and self.compressing
+                            and faults.corrupt in ("sign_flip", "explode"))
+        self._inject_post = self.injecting and not self._inject_pre
+        # a screened transmitting mode (explode) must not leak into the
+        # server's error-feedback state: the residual row of a detected
+        # upload keeps its pre-round bits, exactly like the crash twin's
+        self._block_residual = (self._inject_pre
+                                and faults.corrupt == "explode")
 
     # ------------------------------------------------------------------
     def _resolve_backend(self, backend: Optional[str]) -> str:
@@ -331,11 +371,54 @@ class RoundEngine:
         return local_train
 
     def _finish(self, global_params, params_k, n, n_iters):
+        """Stage 4: screen (optional) + aggregate.
+
+        Returns ``(new_global, uploaded_any, bad)`` where ``bad`` is the
+        [K] bool mask of screen-rejected rows (all-False zeros when the
+        screen is off — callers only propagate it when
+        ``self.screening``).  A screened row is demoted to the zero-budget
+        crash branch before the aggregator ever sees it: weight 0 AND the
+        global-params row value, so no registry aggregator — weighted mean
+        or distance-based — can be poisoned by it, and an all-faulty round
+        degenerates to the existing no-participant no-op."""
         with stage(STAGE_AGGREGATE):
             weights = n.astype(jnp.float32) \
                 * (n_iters > 0).astype(jnp.float32)
+            if self.screening:
+                from repro.faults.screen import screen_uploads
+                params_k, weights, bad = screen_uploads(
+                    global_params, params_k, weights, self.screen_norm)
+                # fence the sanitized stack: the injection dataflow differs
+                # between a faulted run and its crash twin, and letting XLA
+                # fuse the aggregator with either upstream graph perturbs
+                # the reduction at the ulp level — behind the barrier both
+                # programs aggregate bitwise-identical inputs identically
+                params_k, weights = jax.lax.optimization_barrier(
+                    (params_k, weights))
+            else:
+                bad = jnp.zeros(n_iters.shape, bool)
             new_global = self.aggregator(params_k, global_params, weights)
-            return new_global, weights.sum() > 0
+            return new_global, weights.sum() > 0, bad
+
+    def _inject_faults(self, global_params, params_k, corrupt, uploading):
+        """Overwrite the ``corrupt & uploading`` rows of the stacked upload
+        with the configured garbage (``repro.faults.inject``).  Rows that
+        uploaded nothing are never corrupted — they carry the exact
+        crash-branch value and weight 0, so injecting into them would dodge
+        the weight-gated screen and poison distance-based aggregators.
+
+        The injection is a pure in-line ``where()`` on the stack it
+        corrupts (pre-transform for delta-shaped modes, post-reconstruction
+        for nan/inf — see ``_inject_pre``); it never taps another tensor
+        from a side branch, which is what keeps the faulted program's
+        fusion — and therefore the non-corrupt rows' bits — identical to
+        the crash twin's."""
+        from repro.faults.inject import inject_upload_faults
+        fm = self.faults
+        mask = corrupt & uploading
+        with stage(STAGE_UPLOAD):
+            return inject_upload_faults(params_k, global_params, mask,
+                                        fm.corrupt, fm.explode_factor)
 
     def _upload_transform(self, global_params, params_k, residual_rows,
                           uploaded, backend: str):
@@ -392,6 +475,11 @@ class RoundEngine:
                 "upload compression needs the packed client axis for "
                 "residual state; the padded seed round does not support "
                 "it — use make_packed_round/make_segment_fn")
+        if self.injecting or self.screening:
+            raise ValueError(
+                "fault injection / upload screening are packed-round "
+                "features; the padded seed round does not support them — "
+                "use make_packed_round/make_segment_fn")
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         local_train = None if fuse_sgd else \
@@ -407,8 +495,8 @@ class RoundEngine:
                 params_k, losses = jax.vmap(
                     local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
                     global_params, x, y, mask, n, n_iters, keys)
-            new_global, any_up = self._finish(global_params, params_k,
-                                              n, n_iters)
+            new_global, any_up, _ = self._finish(global_params, params_k,
+                                                 n, n_iters)
             return new_global, losses, any_up
 
         return self._jit_round(round_fn)
@@ -446,12 +534,21 @@ class RoundEngine:
         ``residual`` [N, P] argument (full-federation error-feedback state,
         rows indexed by client id) and returns it updated as a fourth
         output; cohort rows with ``n_iters > 0`` go through the upload
-        transform, all other rows stay bit-unchanged."""
+        transform, all other rows stay bit-unchanged.
+
+        Fault threading (ISSUE 8, all statically gated — see the engine
+        constructor): with an injecting FaultModel the round function takes
+        a trailing ``corrupt`` [K] bool argument; with the screen on it
+        returns a trailing ``bad`` [K] bool output.  Screened corrupt rows
+        are excluded from compressed transmission (their residual rows stay
+        bit-identical to the crash-twin run) and the post-transform stack
+        is corrupted "on the wire" instead."""
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         local_train = None if fuse_sgd else \
             self._local_sgd(model, batch_size, max_iters, sampling)
         gather = self._cohort_gather(max_n, backend)
+        injecting, screening = self.injecting, self.screening
 
         def train_cohort(global_params, flat_x, flat_y, offsets, lengths,
                          ids, n_iters, rng):
@@ -473,27 +570,51 @@ class RoundEngine:
 
         if self.compressing:
             def round_fn(global_params, flat_x, flat_y, offsets, lengths,
-                         ids, n_iters, rng, residual):
+                         ids, n_iters, rng, residual, corrupt=None):
                 params_k, losses, n = train_cohort(
                     global_params, flat_x, flat_y, offsets, lengths, ids,
                     n_iters, rng)
+                uploading = n_iters > 0
+                transmit = uploading
+                if self._inject_pre:      # sign_flip/explode: the client
+                    params_k = self._inject_faults(  # transmits the
+                        global_params, params_k, corrupt, uploading)
+                elif injecting:           # nan/inf garbage never transmits
+                    transmit = uploading & ~corrupt
                 params_k, new_rows = self._upload_transform(
-                    global_params, params_k, residual[ids], n_iters > 0,
+                    global_params, params_k, residual[ids], transmit,
                     backend)
-                residual = residual.at[ids].set(new_rows)  # ids distinct
-                new_global, any_up = self._finish(global_params, params_k,
-                                                  n, n_iters)
+                if self._block_residual:  # screened transmit (explode):
+                    # the error-feedback rows of detected uploads keep
+                    # their pre-round bits (crash-twin residual parity)
+                    residual = residual.at[
+                        jnp.where(corrupt, residual.shape[0], ids)].set(
+                        new_rows, mode="drop")
+                else:
+                    residual = residual.at[ids].set(new_rows)  # distinct
+                if self._inject_post:
+                    params_k = self._inject_faults(global_params, params_k,
+                                                   corrupt, uploading)
+                new_global, any_up, bad = self._finish(
+                    global_params, params_k, n, n_iters)
+                if screening:
+                    return new_global, losses, any_up, residual, bad
                 return new_global, losses, any_up, residual
 
             return round_fn
 
         def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
-                     n_iters, rng):
+                     n_iters, rng, corrupt=None):
             params_k, losses, n = train_cohort(
                 global_params, flat_x, flat_y, offsets, lengths, ids,
                 n_iters, rng)
-            new_global, any_up = self._finish(global_params, params_k,
-                                              n, n_iters)
+            if injecting:
+                params_k = self._inject_faults(global_params, params_k,
+                                               corrupt, n_iters > 0)
+            new_global, any_up, bad = self._finish(global_params, params_k,
+                                                   n, n_iters)
+            if screening:
+                return new_global, losses, any_up, bad
             return new_global, losses, any_up
 
         return round_fn
@@ -532,29 +653,53 @@ class RoundEngine:
                                                          keys)
             return params_k, losses, n
 
+        injecting, screening = self.injecting, self.screening
+
         if self.compressing:
             def round_fn(global_params, flat_x, flat_y, offsets, lengths,
-                         ids, n_iters, rng, residual):
+                         ids, n_iters, rng, residual, corrupt=None):
                 params_k, losses, n = train_cohort(
                     global_params, flat_x, flat_y, offsets, lengths, ids,
                     n_iters, rng)
+                uploading = n_iters > 0
+                transmit = uploading
+                if self._inject_pre:
+                    params_k = self._inject_faults(
+                        global_params, params_k, corrupt, uploading)
+                elif injecting:
+                    transmit = uploading & ~corrupt
                 params_k, new_rows = self._upload_transform(
-                    global_params, params_k, residual[ids], n_iters > 0,
+                    global_params, params_k, residual[ids], transmit,
                     "xla")
-                residual = residual.at[ids].set(new_rows)  # ids distinct
-                new_global, any_up = self._finish(global_params, params_k,
-                                                  n, n_iters)
+                if self._block_residual:
+                    residual = residual.at[
+                        jnp.where(corrupt, residual.shape[0], ids)].set(
+                        new_rows, mode="drop")
+                else:
+                    residual = residual.at[ids].set(new_rows)  # distinct
+                if self._inject_post:
+                    params_k = self._inject_faults(global_params, params_k,
+                                                   corrupt, uploading)
+                new_global, any_up, bad = self._finish(
+                    global_params, params_k, n, n_iters)
+                if screening:
+                    return new_global, losses, any_up, residual, bad
                 return new_global, losses, any_up, residual
 
             return round_fn
 
         def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
-                     n_iters, rng):
+                     n_iters, rng, corrupt=None):
             params_k, losses, n = train_cohort(
                 global_params, flat_x, flat_y, offsets, lengths, ids,
                 n_iters, rng)
-            new_global, any_up = self._finish(global_params, params_k,
-                                              n, n_iters)
+            if injecting:
+                params_k = self._inject_faults(global_params, params_k,
+                                               corrupt, n_iters > 0)
+            new_global, any_up, bad = self._finish(global_params, params_k,
+                                                   n, n_iters)
+            if screening:
+                return new_global, losses, any_up, bad
             return new_global, losses, any_up
 
         return round_fn
@@ -692,7 +837,7 @@ class RoundEngine:
         gather = self._cohort_gather(max_n, backend)
 
         def core(global_params, flat_x, flat_y, offsets, lengths, ids,
-                 n_iters, rng, residual=None):
+                 n_iters, rng, residual=None, corrupt=None):
             s = jax.lax.axis_index("data")
             C = offsets.shape[0]
             K = ids.shape[0]
@@ -750,10 +895,30 @@ class RoundEngine:
                 # updated rows back (C-sentinel drop for silent lanes;
                 # writers never collide — cohort ids are distinct)
                 uploaded_lane = executes & (iters > 0)
+                resid_lane = uploaded_lane
+                if corrupt is not None:
+                    # per-lane view of the cohort corrupt mask (ISSUE 8):
+                    # a sign_flip/explode lane transmits its corrupted
+                    # delta (injected pre-transform, in-line — but a
+                    # screened mode's residual write is dropped); nan/inf
+                    # lanes are cut out of transmission, their garbage
+                    # goes into the psum-rebuilt replicated stack in the
+                    # caller
+                    corrupt_lane = corrupt if capacity is None \
+                        else corrupt[slot]
+                    if self._inject_pre:
+                        params_k = self._inject_faults(
+                            global_params, params_k, corrupt_lane,
+                            uploaded_lane)
+                        if self._block_residual:
+                            resid_lane = uploaded_lane & ~corrupt_lane
+                    else:
+                        uploaded_lane = uploaded_lane & ~corrupt_lane
+                        resid_lane = uploaded_lane
                 params_k, new_rows = self._upload_transform(
                     global_params, params_k, residual[local], uploaded_lane,
                     backend)
-                rows = jnp.where(uploaded_lane, local, C)
+                rows = jnp.where(resid_lane, local, C)
                 residual = residual.at[rows].set(new_rows, mode="drop")
 
             if capacity is None:
@@ -804,16 +969,37 @@ class RoundEngine:
         core = self._shard_round_core(model, batch_size, max_iters, max_n,
                                       sampling, backend, capacity)
         compressing = self.compressing
+        injecting, screening = self.injecting, self.screening
 
         def round_fn(global_params, flat_x, flat_y, offsets, lengths, ids,
-                     n_iters, rng, residual=None):
+                     n_iters, rng, *extra):
+            # trailing args mirror the server's positional convention:
+            # residual (compressing only), then corrupt (injecting only)
+            residual = extra[0] if compressing else None
+            corrupt = extra[-1] if injecting else None
             _check_shard_count(flat_x, mesh)
             if capacity is not None:
                 n_iters = jnp.where(
                     cohort_overflow(ids, lengths.shape[1], capacity),
                     0, n_iters)
 
-            if compressing:
+            if compressing and injecting:
+                # residual shards with the client axis; the cohort corrupt
+                # mask is replicated like ids/budgets
+                def shard_fn(gp, x, y, offs, lens, ids_, it_, rng_, res,
+                             cor):
+                    pk, ls, res = core(gp, x[0], y[0], offs[0], lens[0],
+                                       ids_, it_, rng_, res[0], cor)
+                    return pk, ls, res[None]
+
+                params_k, losses, residual = shard_map_unchecked(
+                    shard_fn, mesh,
+                    in_specs=(P(), P("data"), P("data"), P("data"),
+                              P("data"), P(), P(), P(), P("data"), P()),
+                    out_specs=(P(), P(), P("data")))(
+                    global_params, flat_x, flat_y, offsets, lengths, ids,
+                    n_iters, rng, residual, corrupt)
+            elif compressing:
                 # residual [S, C, P] shards with the client axis: each
                 # shard updates only its own clients' rows
                 def shard_fn(gp, x, y, offs, lens, ids_, it_, rng_, res):
@@ -840,17 +1026,24 @@ class RoundEngine:
                     out_specs=(P(), P()))(
                     global_params, flat_x, flat_y, offsets, lengths, ids,
                     n_iters, rng)
+            if self._inject_post:
+                # corrupt the psum-rebuilt replicated stack "on the wire"
+                # (nan/inf garbage is value-independent, so it needs no
+                # lane ownership — the mask is replicated)
+                params_k = self._inject_faults(global_params, params_k,
+                                               corrupt, n_iters > 0)
             # [S, C] lengths flatten to global-id order (shard s owns the
             # contiguous block [s*C, (s+1)*C)), so the aggregation weights
             # match the replicated round exactly
             n = jnp.minimum(lengths.reshape(-1)[ids], max_n)
+            new_global, any_up, bad = self._finish(global_params, params_k,
+                                                   n, n_iters)
+            out = (new_global, losses, any_up)
             if compressing:
-                new_global, any_up = self._finish(global_params, params_k,
-                                                  n, n_iters)
-                return new_global, losses, any_up, residual
-            new_global, any_up = self._finish(global_params, params_k,
-                                              n, n_iters)
-            return new_global, losses, any_up
+                out = out + (residual,)
+            if screening:
+                out = out + (bad,)
+            return out
 
         return round_fn
 
@@ -940,6 +1133,9 @@ class RoundEngine:
         from repro.core.selection import (resolve_capacity,
                                           select_cohort_device,
                                           value_update_device)
+        from repro.faults import (apply_availability_stragglers,
+                                  corrupt_mask, dropout_mask, eligibility,
+                                  quarantine_update)
 
         sampling = cfg.sampling if sampling is None else sampling
         backend = self._resolve_backend(
@@ -959,6 +1155,27 @@ class RoundEngine:
             h_cap=float(cfg.h_cap), fixed_epochs=float(cfg.fixed_epochs))
         telemetry = bool(telemetry)
 
+        # ISSUE 8: fault + defense wiring.  With faults=None and screening
+        # off every branch below is statically absent, so the traced
+        # program is bitwise the PR-7 one.
+        fm = self.faults
+        injecting, screening = self.injecting, self.screening
+        q_threshold = float(
+            getattr(cfg, "quarantine_threshold", 0.0) or 0.0)
+        quarantine = q_threshold > 0.0
+        q_rounds = int(getattr(cfg, "quarantine_rounds", 16))
+        q_min_tries = int(getattr(cfg, "quarantine_min_tries", 3))
+        if quarantine and mesh is not None:
+            raise ValueError(
+                "quarantine_threshold > 0 is not supported on a sharded "
+                "mesh (per-client reliability counters would need an "
+                "extra replicated carry audit; run quarantine on the "
+                "replicated scan driver)")
+        if quarantine and not screening:
+            raise ValueError(
+                "quarantine_threshold > 0 requires the upload screen "
+                "(screen_norm) — quarantine counts screened failures")
+
         def make_one_round(select, train, sizes, mu, sigma, overflow=None):
             """The per-round server step, shared verbatim by the replicated
             and the sharded segment — only cohort selection, the training
@@ -977,8 +1194,27 @@ class RoundEngine:
             Under compression the carry additionally holds the
             error-feedback ``residual`` and ``train`` threads it:
             train(params, residual, ids, n_iters, sub) -> (params,
-            residual, losses)."""
+            residual, losses).
+
+            Fault semantics (ISSUE 8): availability/straggler faults
+            rescale E~ BEFORE selection sees anything (a slowed client is
+            just a weaker client to Ira/Fassa).  Seeded dropout zeroes
+            E_run like an overflow.  Screened corruption modes
+            (crash/nan/inf/explode) zero the OBSERVED workload so the
+            history update takes the crash branch — the Ira/Fassa state
+            evolves bitwise like the crash-twin run — while injected modes
+            still train with the un-demoted budget (the garbage the client
+            would actually transmit) and the upload screen in ``_finish``
+            restores the crash-row (weight 0, global-row) outcome.
+            ``sign_flip`` is NOT demoted: the server cannot tell a flipped
+            delta from a real one, so it uploads normally and robust
+            aggregation is the defense."""
             compressing = self.compressing
+            phases = None if fm is None else fm.phases(int(mu.shape[0]))
+            if phases is not None:
+                phases = jnp.asarray(phases)
+            n_clients = int(mu.shape[0])
+            demote = fm is not None and fm.demotes
 
             def one_round(carry, t):
                 params = carry["params"]
@@ -986,23 +1222,59 @@ class RoundEngine:
                 values = carry["values"]
                 sel_rng, k_sel, k_het = jax.random.split(carry["sel_rng"], 3)
                 E_all = sample_workloads_device(k_het, mu, sigma)
-                ids = select(k_sel, values, t)
+                if fm is not None:
+                    E_all = apply_availability_stragglers(fm, phases, t,
+                                                          E_all)
+                if quarantine:
+                    ids = select(k_sel, values, t,
+                                 eligibility(carry["q_susp"], t))
+                else:
+                    ids = select(k_sel, values, t)
                 E_true = E_all[ids]
                 ovf = (jnp.zeros(ids.shape, bool) if overflow is None
                        else overflow(ids))
                 E_run = jnp.where(ovf, jnp.float32(0.0), E_true)
-                e_eff, outcome, assigned, L, H, theta = \
+                if fm is not None and fm.dropout_prob > 0.0:
+                    drop = dropout_mask(fm, t, n_clients)[ids]
+                    E_run = jnp.where(drop, jnp.float32(0.0), E_run)
+                corrupt = (corrupt_mask(fm, t, n_clients)[ids]
+                           if fm is not None and fm.corrupts else None)
+                E_obs = (jnp.where(corrupt, jnp.float32(0.0), E_run)
+                         if demote else E_run)
+                e_eff, outcome, assigned, L_new, H_new, theta_new = \
                     pred.workload_update_device(algo, L, H, theta, ids,
-                                                E_run, **wl_kwargs)
+                                                E_obs, **wl_kwargs)
+                if demote and injecting:
+                    # the faulty client doesn't know it will be screened:
+                    # it trains with the UN-demoted budget (same old
+                    # history, real E~) and transmits garbage.  ids are
+                    # unique, so per-row e_eff matches the observed call
+                    # bitwise on every non-corrupt row.
+                    e_train = pred.workload_update_device(
+                        algo, L, H, theta, ids, E_run, **wl_kwargs)[0]
+                else:
+                    e_train = e_eff
+                L, H, theta = L_new, H_new, theta_new
                 n = jnp.minimum(sizes[ids], max_n)
-                n_iters = budget_iters(e_eff, n, batch_size, max_iters)
+                n_iters = budget_iters(e_train, n, batch_size, max_iters)
                 data_rng, sub = jax.random.split(carry["data_rng"])
                 if compressing:
-                    params, residual, losses = train(
-                        params, carry["residual"], ids, n_iters, sub)
+                    targs = (params, carry["residual"], ids, n_iters, sub)
                 else:
-                    params, losses = train(params, ids, n_iters, sub)
+                    targs = (params, ids, n_iters, sub)
+                if injecting:
+                    targs = targs + (corrupt,)
+                out = train(*targs)
+                if compressing:
+                    params, residual, losses = out[0], out[1], out[2]
+                else:
+                    params, losses = out[0], out[1]
+                bad = out[-1] if screening else None
                 uploaded = n_iters > 0
+                if demote and injecting:
+                    # the observed upload set: screened-out rows count as
+                    # crashes, bitwise the crash-twin's (n_iters > 0)
+                    uploaded = uploaded & ~corrupt
                 values = value_update_device(values, sizes, ids, losses,
                                              uploaded)
                 upf = uploaded.astype(jnp.float32)
@@ -1050,6 +1322,17 @@ class RoundEngine:
                 new_carry = {"params": params, "L": L, "H": H,
                              "theta": theta, "values": values,
                              "data_rng": data_rng, "sel_rng": sel_rng}
+                if screening:
+                    stats["screened"] = bad.sum().astype(jnp.float32)
+                if quarantine:
+                    q_fail, q_try, q_susp, n_susp = quarantine_update(
+                        carry["q_fail"], carry["q_try"], carry["q_susp"],
+                        ids, n_iters > 0, bad, t, q_threshold, q_rounds,
+                        q_min_tries)
+                    new_carry["q_fail"] = q_fail
+                    new_carry["q_try"] = q_try
+                    new_carry["q_susp"] = q_susp
+                    stats["quarantined"] = n_susp.astype(jnp.float32)
                 if compressing:
                     new_carry["residual"] = residual
                 return new_carry, stats
@@ -1072,15 +1355,21 @@ class RoundEngine:
         if self.compressing:
             def segment(state, ts, flat_x, flat_y, offsets, lengths, mu,
                         sigma, residual):
-                def select(k_sel, values, t):
+                def select(k_sel, values, t, elig=None):
                     return select_cohort_device(k_sel, values, K, strategy,
-                                                beta, use_al=t < al_rounds)
+                                                beta, use_al=t < al_rounds,
+                                                elig=elig)
 
-                def train(params, residual, ids, n_iters, sub):
-                    params, losses, _, residual = round_body(
-                        params, flat_x, flat_y, offsets, lengths, ids,
-                        n_iters, sub, residual)
-                    return params, residual, losses
+                def train(params, residual, ids, n_iters, sub,
+                          corrupt=None):
+                    args = (params, flat_x, flat_y, offsets, lengths, ids,
+                            n_iters, sub, residual)
+                    if corrupt is not None:
+                        args = args + (corrupt,)
+                    out = round_body(*args)
+                    if screening:
+                        return out[0], out[3], out[1], out[4]
+                    return out[0], out[3], out[1]
 
                 one_round = make_one_round(select, train, lengths, mu,
                                            sigma)
@@ -1092,15 +1381,20 @@ class RoundEngine:
         else:
             def segment(state, ts, flat_x, flat_y, offsets, lengths, mu,
                         sigma):
-                def select(k_sel, values, t):
+                def select(k_sel, values, t, elig=None):
                     return select_cohort_device(k_sel, values, K, strategy,
-                                                beta, use_al=t < al_rounds)
+                                                beta, use_al=t < al_rounds,
+                                                elig=elig)
 
-                def train(params, ids, n_iters, sub):
-                    params, losses, _ = round_body(
-                        params, flat_x, flat_y, offsets, lengths, ids,
-                        n_iters, sub)
-                    return params, losses
+                def train(params, ids, n_iters, sub, corrupt=None):
+                    args = (params, flat_x, flat_y, offsets, lengths, ids,
+                            n_iters, sub)
+                    if corrupt is not None:
+                        args = args + (corrupt,)
+                    out = round_body(*args)
+                    if screening:
+                        return out[0], out[1], out[3]
+                    return out[0], out[1]
 
                 one_round = make_one_round(select, train, lengths, mu,
                                            sigma)
@@ -1159,29 +1453,42 @@ class RoundEngine:
                     (lambda ids_: cohort_overflow(ids_, C, capacity))
 
                 if compressing:
-                    def train(params, residual, ids, n_iters, sub):
+                    def train(params, residual, ids, n_iters, sub,
+                              corrupt=None):
                         if capacity is not None:
                             n_iters = jnp.where(cohort_overflow(ids, C,
                                                                 capacity),
                                                 0, n_iters)
-                        params_k, losses, residual = core(
-                            params, x, y, offs, lens, ids, n_iters, sub,
-                            residual)
+                        cargs = (params, x, y, offs, lens, ids, n_iters,
+                                 sub, residual)
+                        if corrupt is not None:
+                            cargs = cargs + (corrupt,)
+                        params_k, losses, residual = core(*cargs)
+                        if self._inject_post and corrupt is not None:
+                            params_k = self._inject_faults(
+                                params, params_k, corrupt, n_iters > 0)
                         n = jnp.minimum(sizes[ids], max_n)
-                        new_global, _ = self._finish(params, params_k, n,
-                                                     n_iters)
+                        new_global, _, bad = self._finish(params, params_k,
+                                                          n, n_iters)
+                        if self.screening:
+                            return new_global, residual, losses, bad
                         return new_global, residual, losses
                 else:
-                    def train(params, ids, n_iters, sub):
+                    def train(params, ids, n_iters, sub, corrupt=None):
                         if capacity is not None:
                             n_iters = jnp.where(cohort_overflow(ids, C,
                                                                 capacity),
                                                 0, n_iters)
                         params_k, losses = core(params, x, y, offs, lens,
                                                 ids, n_iters, sub)
+                        if self._inject_post and corrupt is not None:
+                            params_k = self._inject_faults(
+                                params, params_k, corrupt, n_iters > 0)
                         n = jnp.minimum(sizes[ids], max_n)
-                        new_global, _ = self._finish(params, params_k, n,
-                                                     n_iters)
+                        new_global, _, bad = self._finish(params, params_k,
+                                                          n, n_iters)
+                        if self.screening:
+                            return new_global, losses, bad
                         return new_global, losses
 
                 one_round = make_one_round(select, train, sizes, mu, sigma,
@@ -1233,6 +1540,11 @@ class RoundEngine:
                 "upload compression needs the packed client axis for "
                 "residual state; the cross-silo stream round does not "
                 "support it")
+        if self.injecting or self.screening:
+            raise ValueError(
+                "fault injection / upload screening target the packed "
+                "client-axis rounds; the cross-silo stream round calls "
+                "its aggregator directly and does not support them")
         self._resolve_backend(backend)
         lr = self.lr
 

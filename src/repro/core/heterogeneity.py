@@ -23,6 +23,22 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def pareto_slowdowns(key, alpha, shape):
+    """Heavy-tailed per-client slowdown factors, drawn on device (ISSUE 8).
+
+    Standard Pareto(alpha) via inverse-CDF: ``(1 - u) ** (-1/alpha)`` for
+    u ~ U[0, 1), so every factor is >= 1 (a straggler can only be slower,
+    never faster).  Small ``alpha`` fattens the tail (alpha <= 1 has
+    infinite mean — the regime the straggler-resilient FL line studies).
+    Layered multiplicatively under the Gaussian sim: the fault layer
+    divides the affordable workload by these factors, so a slowed client
+    completes fewer local epochs and Ira/Fassa adapts to it like any other
+    capability shift.
+    """
+    u = jax.random.uniform(key, shape, jnp.float32)
+    return (1.0 - u) ** jnp.float32(-1.0 / alpha)
+
+
 def sample_workloads_device(key, mu, sigma):
     """Affordable workloads for every client, drawn on device (float32).
 

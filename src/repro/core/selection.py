@@ -144,31 +144,41 @@ def _strategy_logits(strategy: str, v, beta: float):
         f"choose from {sorted(SELECTIONS)}")
 
 
-def _cohort_scores(key, values, strategy: str, beta: float, use_al):
+def _cohort_scores(key, values, strategy: str, beta: float, use_al,
+                   elig=None):
     """The perturbed Gumbel-top-k scores every selection variant ranks by.
 
     Shared by the replicated ``select_cohort_device``, the mesh-free merge
     ``select_cohort_sharded`` and the per-shard path inside the engine's
     ``shard_map`` — same key, same logits, same gumbel field, so all three
     rank bitwise-identical scores.
+
+    ``elig`` (ISSUE 8): optional bool [N] eligibility mask — ineligible
+    clients (e.g. quarantine-suspended, ``repro.faults.screen``) score
+    -inf so they can never win the top-k.  ``None`` leaves the scores (and
+    the traced program) untouched.
     """
     v = jnp.asarray(values, jnp.float32)
     base = _strategy_logits(strategy, v, beta)
     base = jnp.where(use_al, _strategy_logits("active", v, beta), base)
-    return base + jax.random.gumbel(key, v.shape, jnp.float32)
+    scores = base + jax.random.gumbel(key, v.shape, jnp.float32)
+    if elig is not None:
+        scores = jnp.where(elig, scores, -jnp.inf)
+    return scores
 
 
 def select_cohort_device(key, values, k: int, strategy: str = "random",
-                         beta: float = 0.01, use_al=False):
+                         beta: float = 0.01, use_al=False, elig=None):
     """Select k distinct clients on device (Gumbel top-k, float32).
 
     ``use_al`` may be a traced bool: when true the Active-Learning logits
     (beta * v) override the configured strategy, which lets the scan driver
     cross the ``al_rounds`` warm-up boundary inside a block without
-    retracing.
+    retracing.  ``elig`` masks ineligible clients out of the ranking (see
+    ``_cohort_scores``).
     """
     _, ids = jax.lax.top_k(_cohort_scores(key, values, strategy, beta,
-                                          use_al), k)
+                                          use_al, elig), k)
     return ids.astype(jnp.int32)
 
 

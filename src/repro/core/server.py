@@ -121,6 +121,50 @@ paper-style straggler), and both drivers surface the per-round
 ``history`` dict so capacity drops are never silent.  Any ``capacity >=
 max owned slots per shard`` remains bitwise-identical to "full"
 (tests/test_capacity.py).
+
+Failure handling (ISSUE 8, ``repro.faults`` + ``repro.checkpoint``):
+every failure the server tolerates funnels into ONE mechanism — the
+zero-budget crash branch of the Ira/Fassa history update (E = 0 ->
+outcome DROPPED -> L/H halved -> zero uploaded epochs -> aggregation
+weight 0).  The taxonomy, in the order a round encounters it:
+
+  availability / stragglers  ``ServerConfig.faults`` (a seeded
+        FaultModel) reshapes the affordable-workload draw BEFORE
+        selection: diurnal off-duty clients get E~ = 0, Pareto-slowed
+        clients get E~ / slowdown.  To the self-adaptive estimator these
+        are just weaker clients — no special path.
+  paper crashes / overflow / dropouts  the pre-existing branches
+        (affordable < assigned-L, capacity overflow) plus seeded
+        mid-round dropouts (``dropout_prob``) — all force E = 0 into the
+        workload update.
+  corrupted uploads  drawn per-round from the decoupled fault stream
+        (``fold_in(PRNGKey(fault_seed), t)``).  Screened modes
+        (nan/inf/explode) train with their real budget and transmit
+        garbage; the finite/norm screen (``upload_screen``, on by
+        default whenever faults are configured) runs before EVERY
+        registry aggregator and demotes each caught row to the crash
+        outcome — weight 0 plus the global-params row value, which is
+        exactly what a crashed client's row holds, so the hardened run's
+        global params are provably bitwise the crash-twin run's and an
+        all-faulty round degenerates to the existing no-participant
+        no-op.  ``sign_flip`` is indistinguishable at the server (finite,
+        honest norm) and is left to the robust aggregators
+        (krum/median/trimmed_mean/geometric_median/bulyan).
+  repeat offenders  ``quarantine_threshold`` suspends clients whose
+        screened-failure rate trips the threshold for
+        ``quarantine_rounds`` rounds (eligibility masks the Gumbel-top-k
+        scores); counters ride the scan carry / host mirrors and reset
+        on trip so clients re-earn trust.
+  server crashes  ``run(checkpoint_dir=..., checkpoint_every=N)``
+        writes atomic whole-state checkpoints (params, L/H/theta,
+        values, both rng keys, compression residuals, quarantine
+        counters, emitted records); ``run(..., resume=True)`` continues
+        bitwise — and because fault draws are stateless in t, a resumed
+        run replays the exact fault schedule (tests/test_checkpoint.py).
+
+Per-round ``screened`` / ``quarantined`` counts surface through the
+stats dict, RoundRecords and ``scripts/fl_report.py``, so silent
+mitigation never masks a sick federation.
 """
 from __future__ import annotations
 
@@ -207,6 +251,28 @@ class ServerConfig:
                                  # (trimmed_mean/median/krum/
                                  # geometric_median/bulyan)
     n_byzantine: int = 0         # assumed byzantine uploads (krum/bulyan)
+    faults: object = None        # Optional[repro.faults.FaultModel] —
+                                 # deterministic fault injection (ISSUE 8):
+                                 # diurnal availability, Pareto stragglers,
+                                 # seeded dropouts and corrupted uploads.
+                                 # None (default) leaves the traced round
+                                 # programs bitwise PR-7.
+    upload_screen: str = "auto"  # finite/norm screen before aggregation:
+                                 # "auto" = on iff faults is set, "on",
+                                 # "off" (screened rows demote to the
+                                 # zero-budget crash branch — faults.screen)
+    screen_norm_bound: float = 1e4
+                                 # reject uploads whose delta l2 norm
+                                 # exceeds this (plus any non-finite row)
+    quarantine_threshold: float = 0.0
+                                 # suspend clients whose screened-failure
+                                 # rate exceeds this (0 = quarantine off;
+                                 # needs the screen + device rng, not
+                                 # supported on a sharded mesh)
+    quarantine_rounds: int = 16  # suspension length (rounds)
+    quarantine_min_tries: int = 3
+                                 # attempts on record before a client can
+                                 # trip the quarantine
     rng_impl: str = ""           # "" auto (numpy for host, device for scan)
                                  # | numpy | device — which PRNG streams
                                  # drive heterogeneity/selection
@@ -230,6 +296,31 @@ class FedSAEServer:
                 f"unknown rng_impl {cfg.rng_impl!r}; choose from {RNG_IMPLS}")
         if cfg.driver == "scan" and self.rng_impl != "device":
             raise ValueError("driver='scan' requires the device rng streams")
+        # ISSUE 8: fault injection + defenses.  "auto" turns the upload
+        # screen on exactly when a fault model is configured, so fault-free
+        # runs keep the bitwise-PR-7 round programs.
+        if cfg.upload_screen not in ("auto", "on", "off"):
+            raise ValueError(
+                f"unknown upload_screen {cfg.upload_screen!r}; choose "
+                f"from ('auto', 'on', 'off')")
+        self.screening = cfg.upload_screen == "on" or (
+            cfg.upload_screen == "auto" and cfg.faults is not None)
+        self._quarantine = float(cfg.quarantine_threshold or 0.0) > 0.0
+        if self._quarantine:
+            if not self.screening:
+                raise ValueError(
+                    "quarantine_threshold > 0 requires the upload screen "
+                    "(it counts screened failures) — set upload_screen="
+                    "'on' or configure faults")
+            if self.rng_impl != "device":
+                raise ValueError(
+                    "quarantine needs the device rng streams (eligibility "
+                    "masks thread through the device Gumbel-top-k); set "
+                    "rng_impl='device'")
+            if cfg.mesh_shards:
+                raise ValueError(
+                    "quarantine is not supported on a sharded mesh — run "
+                    "it on the replicated drivers")
         self.ds = dataset
         self.model = model
         self.cfg = cfg
@@ -239,6 +330,11 @@ class FedSAEServer:
         self.H = np.full(N, cfg.init_pair[1], np.float64)
         self.theta = np.full(N, 0.5 * sum(cfg.init_pair), np.float64)
         self.values = ValueTracker(N, dataset.sizes.astype(np.float64))
+        # reliability quarantine counters (host mirrors; the scan driver
+        # carries them on device and syncs back per block)
+        self.q_fail = np.zeros(N, np.int32)
+        self.q_try = np.zeros(N, np.int32)
+        self.q_susp = np.zeros(N, np.int32)
         self.sel_rng = np.random.default_rng(cfg.selection_seed)
         self.sel_key = jax.random.PRNGKey(cfg.selection_seed)
         self.data_rng = jax.random.PRNGKey(cfg.seed)
@@ -267,6 +363,13 @@ class FedSAEServer:
         self.capacity = resolve_capacity(
             cfg.cohort_capacity, cfg.n_selected, cfg.mesh_shards)
         self._mu_dev, self._sigma_dev = self.het.device_params()
+        # per-client diurnal phase offsets (seeded, drawn once — the scan
+        # driver derives the identical array at trace time)
+        self._phases = None
+        if cfg.faults is not None:
+            ph = cfg.faults.phases(N)
+            if ph is not None:
+                self._phases = jnp.asarray(ph)
         agg_kwargs = {}
         if cfg.aggregator == "trimmed_mean":
             agg_kwargs.update(trim_ratio=cfg.trim_ratio,
@@ -282,7 +385,9 @@ class FedSAEServer:
         self.engine = RoundEngine(
             lr=cfg.lr, aggregator=aggregator,
             prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else None,
-            compress=cfg.upload_compress, topk_frac=cfg.topk_frac)
+            compress=cfg.upload_compress, topk_frac=cfg.topk_frac,
+            faults=cfg.faults,
+            screen_norm=cfg.screen_norm_bound if self.screening else None)
         # error-feedback residual state (upload_compress="topk_q8"): one
         # [P] float32 row per client, sharded with the client blocks when
         # the mesh is; None disables the upload-transform stage entirely
@@ -431,18 +536,36 @@ class FedSAEServer:
     # ------------------------------------------------------------------
     def _draw_round_inputs(self, t: int):
         """(E_true_all [N], ids [K]) for round t from the configured rng."""
+        from repro.faults import apply_availability_stragglers, eligibility
+
         cfg = self.cfg
+        fm = cfg.faults
         if self.rng_impl == "device":
             # identical key discipline to the scan carry: one split for
             # (selection, heterogeneity) per round
             self.sel_key, k_sel, k_het = jax.random.split(self.sel_key, 3)
-            E_true_all = np.asarray(sample_workloads_device(
-                k_het, self._mu_dev, self._sigma_dev))
+            E_dev = sample_workloads_device(k_het, self._mu_dev,
+                                            self._sigma_dev)
+            if fm is not None:
+                # same eager f32 ops the scan body traces — bit-identical
+                # availability/straggler adjustments across drivers
+                E_dev = apply_availability_stragglers(fm, self._phases, t,
+                                                      E_dev)
+            E_true_all = np.asarray(E_dev)
+            elig = (eligibility(jnp.asarray(self.q_susp), t)
+                    if self._quarantine else None)
             ids = np.asarray(select_cohort_device(
                 k_sel, self.values.v, cfg.n_selected, cfg.selection,
-                cfg.beta, use_al=t < cfg.al_rounds))
+                cfg.beta, use_al=t < cfg.al_rounds, elig=elig))
             return E_true_all, ids
         E_true_all = self.het.sample_round()
+        if fm is not None:
+            # float64 numpy twin of the device adjustment (the fault
+            # streams themselves are threefry-keyed either way, so the
+            # SCHEDULE matches the device drivers; only the float widths
+            # follow the host driver's numpy math)
+            E_true_all = self._host_availability_stragglers(fm, t,
+                                                            E_true_all)
         if t < cfg.al_rounds:
             ids = select_active(self.sel_rng, self.values.v, cfg.n_selected,
                                 cfg.beta)
@@ -451,9 +574,30 @@ class FedSAEServer:
                                  self.ds.n_clients, cfg.n_selected, cfg.beta)
         return E_true_all, ids
 
+    def _host_availability_stragglers(self, fm, t: int,
+                                      E_all: np.ndarray) -> np.ndarray:
+        """Numpy (float64) twin of faults.apply_availability_stragglers."""
+        from repro.faults import availability_mask
+        from repro.faults.inject import round_fault_key
+        from repro.core.heterogeneity import pareto_slowdowns
+
+        if fm.straggler == "pareto":
+            slow = np.asarray(pareto_slowdowns(
+                jax.random.fold_in(round_fault_key(fm.seed, t), 0),
+                fm.pareto_alpha, E_all.shape), np.float64)
+            E_all = E_all / slow
+        if fm.availability == "diurnal":
+            on = np.asarray(availability_mask(fm, self._phases, t))
+            E_all = np.where(on, E_all, 0.0)
+        return E_all
+
     # ------------------------------------------------------------------
     def run_round(self, t: int) -> Dict:
+        from repro.faults import (corrupt_mask, dropout_mask,
+                                  quarantine_update)
+
         cfg = self.cfg
+        fm = cfg.faults
         E_true_all, ids = self._draw_round_inputs(t)
         E_true = E_true_all[ids]
         # capacity overflow (ISSUE 5): slots dropped by the per-shard lane
@@ -464,32 +608,58 @@ class FedSAEServer:
                 ids, self.packed.clients_per_shard, self.capacity))
         else:
             ovf = np.zeros(len(ids), bool)
-        e_eff, outcome, assigned = self._workloads(
-            ids, np.where(ovf, 0.0, E_true))
+        E_run = np.where(ovf, 0.0, E_true)
+        # ISSUE 8: seeded mid-round dropouts zero the workload like an
+        # overflow; screened corruption modes zero the OBSERVED workload so
+        # Ira/Fassa evolves bitwise like the crash-twin run, while the
+        # faulty client still trains with the un-demoted budget (the
+        # garbage it would actually transmit)
+        N = self.ds.n_clients
+        if fm is not None and fm.dropout_prob > 0.0:
+            E_run = np.where(np.asarray(dropout_mask(fm, t, N))[ids],
+                             0.0, E_run)
+        corrupt = (np.asarray(corrupt_mask(fm, t, N))[ids]
+                   if fm is not None and fm.corrupts else None)
+        demote = fm is not None and fm.demotes
+        E_obs = np.where(corrupt, 0.0, E_run) if demote else E_run
+        if demote and self.engine.injecting:
+            snap = (self.L.copy(), self.H.copy(), self.theta.copy())
+            e_eff, outcome, assigned = self._workloads(ids, E_obs)
+            new_hist = (self.L, self.H, self.theta)
+            self.L, self.H, self.theta = snap
+            e_train = self._workloads(ids, E_run)[0]
+            self.L, self.H, self.theta = new_hist
+        else:
+            e_eff, outcome, assigned = self._workloads(ids, E_obs)
+            e_train = e_eff
 
         # no host restack: only the [K] cohort ids / budgets cross to device;
         # the packed federation was uploaded once at construction
         n = np.minimum(self.sizes[ids], self.max_n)
         if self.rng_impl == "device":
-            n_iters = np.asarray(budget_iters(e_eff, n, cfg.batch_size,
+            n_iters = np.asarray(budget_iters(e_train, n, cfg.batch_size,
                                               self.max_iters))
         else:
             tau = np.ceil(n / cfg.batch_size)
-            n_iters = np.minimum(np.round(e_eff * tau), self.max_iters)
+            n_iters = np.minimum(np.round(e_train * tau), self.max_iters)
         self.data_rng, sub = jax.random.split(self.data_rng)
-        if self.residual is not None:
-            self.params, losses, _, self.residual = self.round_fn(
-                self.params, self.packed.x, self.packed.y,
-                self.packed.offsets, self.packed.lengths,
-                jnp.asarray(ids, jnp.int32),
-                jnp.asarray(n_iters, jnp.int32), sub, self.residual)
-        else:
-            self.params, losses, _ = self.round_fn(
-                self.params, self.packed.x, self.packed.y,
+        args = (self.params, self.packed.x, self.packed.y,
                 self.packed.offsets, self.packed.lengths,
                 jnp.asarray(ids, jnp.int32),
                 jnp.asarray(n_iters, jnp.int32), sub)
+        if self.residual is not None:
+            args = args + (self.residual,)
+        if self.engine.injecting:
+            args = args + (jnp.asarray(corrupt),)
+        out = self.round_fn(*args)
+        self.params, losses = out[0], out[1]
+        if self.residual is not None:
+            self.residual = out[3]
+        bad = np.asarray(out[-1]) if self.engine.screening else None
         uploaders = np.asarray(n_iters) > 0
+        if demote and self.engine.injecting:
+            # the observed upload set — screened rows count as crashes
+            uploaders = uploaders & ~corrupt
         if self.rng_impl == "device":
             self.values.v = np.asarray(value_update_device(
                 self.values.v, self.sizes, jnp.asarray(ids, jnp.int32),
@@ -513,6 +683,19 @@ class FedSAEServer:
             "uploaded": float(np.mean(e_eff)),
             "true_workload": float(np.mean(E_true)),
         }
+        if self.engine.screening:
+            stats["screened"] = float(bad.sum())
+        if self._quarantine:
+            qf, qt, qs, n_susp = quarantine_update(
+                jnp.asarray(self.q_fail), jnp.asarray(self.q_try),
+                jnp.asarray(self.q_susp), jnp.asarray(ids, jnp.int32),
+                jnp.asarray(np.asarray(n_iters) > 0), jnp.asarray(bad), t,
+                float(cfg.quarantine_threshold),
+                int(cfg.quarantine_rounds), int(cfg.quarantine_min_tries))
+            self.q_fail = np.asarray(qf, np.int32)
+            self.q_try = np.asarray(qt, np.int32)
+            self.q_susp = np.asarray(qs, np.int32)
+            stats["quarantined"] = float(n_susp)
         if self.telemetry:
             # ISSUE 7: the host-driver twin of the scan driver's
             # device-accumulated extras — same byte ledger and identical
@@ -536,7 +719,7 @@ class FedSAEServer:
     # ------------------------------------------------------------------
     def device_state(self) -> Dict:
         """The scan carry, built from the host-side history (float32)."""
-        return {
+        state = {
             "params": self.params,
             "L": jnp.asarray(self.L, jnp.float32),
             "H": jnp.asarray(self.H, jnp.float32),
@@ -545,6 +728,11 @@ class FedSAEServer:
             "data_rng": self.data_rng,
             "sel_rng": self.sel_key,
         }
+        if self._quarantine:
+            state["q_fail"] = jnp.asarray(self.q_fail, jnp.int32)
+            state["q_try"] = jnp.asarray(self.q_try, jnp.int32)
+            state["q_susp"] = jnp.asarray(self.q_susp, jnp.int32)
+        return state
 
     def _absorb_state(self, state: Dict):
         """Sync the scan carry back into the host-side mirrors (the float32
@@ -557,13 +745,19 @@ class FedSAEServer:
         self.values.v = np.asarray(state["values"], np.float64)
         self.data_rng = state["data_rng"]
         self.sel_key = state["sel_rng"]
+        if self._quarantine:
+            self.q_fail = np.asarray(state["q_fail"], np.int32)
+            self.q_try = np.asarray(state["q_try"], np.int32)
+            self.q_susp = np.asarray(state["q_susp"], np.int32)
 
-    def _run_scan(self, T: int, verbose: bool):
+    def _run_scan(self, T: int, verbose: bool, t_start: int = 0,
+                  checkpoint_dir: Optional[str] = None,
+                  checkpoint_every: int = 0):
         cfg = self.cfg
         tx, ty = jnp.asarray(self.ds.test_x), jnp.asarray(self.ds.test_y)
         state = self.device_state()
         pk = self.packed
-        t0 = 0
+        t0 = t_start
         while t0 < T:
             b = min(self.block_size, T - t0)
             blk_start = time.perf_counter()
@@ -607,16 +801,44 @@ class FedSAEServer:
                     acc, recs[-1].dropout, recs[-1].train_loss,
                     float(np.sum(stats["overflowed"]))))
             t0 += b
+            if checkpoint_dir and (
+                    (checkpoint_every > 0 and t0 % checkpoint_every == 0)
+                    or t0 == T):
+                # the scan driver checkpoints at block boundaries only;
+                # align checkpoint_every with block_size for a resumed
+                # trace whose eval cadence matches the uninterrupted run
+                from repro.checkpoint import save_server_state
+                self._absorb_state(state)
+                save_server_state(self, checkpoint_dir, t0)
         self._absorb_state(state)
         return self.history
 
     # ------------------------------------------------------------------
-    def run(self, rounds: Optional[int] = None, verbose: bool = False):
+    def run(self, rounds: Optional[int] = None, verbose: bool = False,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 0, resume: bool = False):
+        """Execute the training loop.
+
+        ``checkpoint_dir`` + ``checkpoint_every`` (ISSUE 8) write an
+        atomic whole-server checkpoint every N rounds (scan driver: at
+        the enclosing block boundary; ``checkpoint_every=0`` saves only
+        the final state); ``resume=True`` restores the
+        latest checkpoint from ``checkpoint_dir`` before running — the
+        resumed run's params, history state and records are bitwise the
+        uninterrupted run's (tests/test_checkpoint.py)."""
         T = rounds or self.cfg.rounds
+        t_start = 0
+        if resume:
+            if not checkpoint_dir:
+                raise ValueError("resume=True requires checkpoint_dir")
+            from repro.checkpoint import restore_server_state
+            t_start = restore_server_state(self, checkpoint_dir)
         if self.cfg.driver == "scan":
-            return self._run_scan(T, verbose)
+            return self._run_scan(T, verbose, t_start=t_start,
+                                  checkpoint_dir=checkpoint_dir,
+                                  checkpoint_every=int(checkpoint_every))
         tx, ty = jnp.asarray(self.ds.test_x), jnp.asarray(self.ds.test_y)
-        for t in range(T):
+        for t in range(t_start, T):
             rnd_start = time.perf_counter()
             row = self.run_round(t)
             if t % self.cfg.eval_every == 0 or t == T - 1:
@@ -633,4 +855,9 @@ class FedSAEServer:
                 print(self._progress_line(
                     self.cfg.algo, f"round {t:3d}", rec.acc, rec.dropout,
                     rec.train_loss, rec.overflowed))
+            if checkpoint_dir and (
+                    (checkpoint_every > 0
+                     and (t + 1) % checkpoint_every == 0) or t + 1 == T):
+                from repro.checkpoint import save_server_state
+                save_server_state(self, checkpoint_dir, t + 1)
         return self.history

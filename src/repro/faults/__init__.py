@@ -1,0 +1,24 @@
+"""Deterministic fault injection + server-side defenses (ISSUE 8).
+
+See ``faults.model`` for the configuration surface, ``faults.inject`` for
+the seeded draw/corruption primitives and ``faults.screen`` for the
+finite-upload screen and reliability quarantine.  docs/robustness.md has
+the full taxonomy and the bitwise crash-twin / resume contracts.
+"""
+from repro.faults.inject import (apply_availability_stragglers,
+                                 availability_mask, corrupt_mask,
+                                 dropout_mask, inject_upload_faults,
+                                 round_fault_key)
+from repro.faults.model import (AVAILABILITY_MODES, CORRUPT_MODES,
+                                INJECTED_CORRUPT, SCREENED_CORRUPT,
+                                STRAGGLER_MODES, FaultModel)
+from repro.faults.screen import (eligibility, quarantine_update,
+                                 screen_uploads)
+
+__all__ = [
+    "FaultModel", "AVAILABILITY_MODES", "STRAGGLER_MODES", "CORRUPT_MODES",
+    "SCREENED_CORRUPT", "INJECTED_CORRUPT",
+    "round_fault_key", "availability_mask", "apply_availability_stragglers",
+    "dropout_mask", "corrupt_mask", "inject_upload_faults",
+    "screen_uploads", "quarantine_update", "eligibility",
+]

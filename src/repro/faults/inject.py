@@ -1,0 +1,109 @@
+"""Seeded fault draws + upload corruption (the injection half of ISSUE 8).
+
+Every draw here is a pure function of ``(FaultModel.seed, t)``:
+
+    key_t = fold_in(PRNGKey(seed), t)
+    straggler draws  <- fold_in(key_t, 0)
+    dropout mask     <- fold_in(key_t, 1)
+    corrupt mask     <- fold_in(key_t, 2)
+
+No state is carried between rounds and nothing is split from the
+training/selection rng streams, so the same schedule falls out of the host
+driver (eager), the scan driver (traced, ``t`` a scan-carried index) and a
+checkpoint/resume boundary — which is what makes the crash-twin and
+kill/resume bitwise proofs possible.  All masks are drawn over the full
+[N] population and gathered at the selected ids, so the schedule is also
+independent of *how* the cohort was selected (numpy vs device rng).
+
+``inject_upload_faults`` is the wire-corruption primitive: given the
+stacked post-SGD uploads it overwrites the corrupt rows with the mode's
+garbage.  It runs at the engine's upload-transform seam (the same seam
+``core.compression`` uses), never inside client training, so the corrupted
+bytes are exactly what the server's screen (``faults.screen``) must catch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.heterogeneity import pareto_slowdowns
+from repro.faults.model import FaultModel
+
+
+def round_fault_key(seed: int, t):
+    """The per-round fault key: stateless in ``t`` (works for traced t)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), t)
+
+
+def availability_mask(fm: FaultModel, phases, t):
+    """bool [N]: which clients are on duty at round ``t`` (diurnal trace).
+
+    Client i is on for the first ``duty_len`` rounds of its phase-shifted
+    ``day_rounds``-round day.
+    """
+    return ((t + phases) % fm.day_rounds) < fm.duty_len
+
+
+def apply_availability_stragglers(fm: FaultModel, phases, t, E_all):
+    """Pre-selection workload shaping over the full [N] draw.
+
+    Pareto slowdowns divide the Gaussian-sim workload (slowdown >= 1, tail
+    index ``pareto_alpha``); off-duty clients are zeroed afterwards so an
+    unavailable client contributes exactly E=0 (the existing zero-budget
+    crash branch absorbs it).  Both branches are statically gated: a
+    FaultModel with neither leaves ``E_all`` untouched — same program,
+    bitwise.
+    """
+    if fm.straggler == "pareto":
+        k = jax.random.fold_in(round_fault_key(fm.seed, t), 0)
+        E_all = E_all / pareto_slowdowns(k, fm.pareto_alpha, E_all.shape)
+    if fm.availability == "diurnal":
+        E_all = jnp.where(availability_mask(fm, phases, t), E_all, 0.0)
+    return E_all
+
+
+def dropout_mask(fm: FaultModel, t, n_clients: int):
+    """bool [N]: mid-round dropouts this round (None when disabled)."""
+    if fm.dropout_prob <= 0.0:
+        return None
+    k = jax.random.fold_in(round_fault_key(fm.seed, t), 1)
+    return jax.random.bernoulli(k, fm.dropout_prob, (n_clients,))
+
+
+def corrupt_mask(fm: FaultModel, t, n_clients: int):
+    """bool [N]: corrupted-upload draws this round (None when disabled)."""
+    if not fm.corrupts:
+        return None
+    k = jax.random.fold_in(round_fault_key(fm.seed, t), 2)
+    return jax.random.bernoulli(k, fm.corrupt_prob, (n_clients,))
+
+
+def inject_upload_faults(params_k, global_params, mask, mode: str,
+                         factor: float = 1e8):
+    """Overwrite the masked rows of a stacked upload with garbage.
+
+    params_k        pytree of [K, ...] stacked client uploads
+    global_params   matching unstacked pytree (broadcasts against rows)
+    mask            bool [K] — rows to corrupt
+    mode            "nan" | "inf" | "sign_flip" | "explode"
+
+    sign_flip sends ``g - (p - g)`` (the delta's mirror image: finite,
+    norm-identical to the honest delta, so it passes the screen); explode
+    sends ``g + factor * (p - g)``.
+    """
+    if mode not in ("nan", "inf", "sign_flip", "explode"):
+        raise ValueError(f"not an injected corrupt mode: {mode!r}")
+
+    def row(p, g):
+        m = mask.reshape((-1,) + (1,) * (p.ndim - 1))
+        if mode == "nan":
+            garbage = jnp.full_like(p, jnp.nan)
+        elif mode == "inf":
+            garbage = jnp.full_like(p, jnp.inf)
+        elif mode == "sign_flip":
+            garbage = 2.0 * g - p
+        else:  # explode
+            garbage = g + jnp.asarray(factor, p.dtype) * (p - g)
+        return jnp.where(m, garbage, p)
+
+    return jax.tree.map(row, params_k, global_params)

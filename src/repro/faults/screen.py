@@ -1,0 +1,105 @@
+"""Server-side defenses: the finite-upload screen + reliability quarantine.
+
+``screen_uploads`` runs immediately before EVERY registry aggregator (it
+is called from ``RoundEngine._finish``, the single aggregation entry for
+the replicated, direct-iid and sharded paths alike).  A screened-out row
+is demoted to the existing zero-budget crash branch:
+
+  * its aggregation weight becomes 0 (so FedAvg/FedProx never mix it), and
+  * its row VALUE is replaced by the current global params — the exact
+    stack value a crashed (zero-budget) client produces — because several
+    aggregators are poisoned by the mere PRESENCE of a non-finite row even
+    at weight zero (FedAvg's tensordot: 0 * NaN = NaN; geometric-median /
+    krum distances: any NaN row infects every pairwise distance).
+
+That substitution is what makes the hardened run provably equal to the
+crash-twin run: after screening, the (stack, weights) pair entering the
+aggregator is bitwise-identical to the run where the faulty client simply
+crashed, so global params can never be contaminated, and an all-faulty
+round degenerates to the existing no-participant no-op (every weight 0).
+
+``quarantine_update`` is the reliability layer on top: per-client
+attempted/screened-failure counters ride the server state (scan carry or
+host mirrors); a client whose failure rate crosses the threshold is
+suspended from selection for ``quarantine_rounds`` rounds (its counters
+reset on trip, so it re-earns trust after the suspension).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def screen_uploads(global_params, params_k, weights, norm_bound: float):
+    """Finite + norm screen over a stacked upload.
+
+    global_params  unstacked pytree (current global params)
+    params_k       pytree of [K, ...] stacked uploads (post upload
+                   transform — what would enter the aggregator)
+    weights        f32 [K] aggregation weights (0 already means "not
+                   uploading"; only weight>0 rows are screened)
+    norm_bound     reject rows whose full-row delta l2 norm exceeds this
+
+    Returns ``(params_k_clean, weights_clean, bad)`` where screened rows
+    carry weight 0 and the global-params row value; ``bad`` is the bool
+    [K] mask of rejected rows (count it for telemetry, feed it to the
+    quarantine counters).
+    """
+    leaves_k = jax.tree.leaves(params_k)
+    leaves_g = jax.tree.leaves(global_params)
+    K = leaves_k[0].shape[0]
+    finite = jnp.ones((K,), bool)
+    sq = jnp.zeros((K,), jnp.float32)
+    for p, g in zip(leaves_k, leaves_g):
+        d = (p - g).reshape(K, -1).astype(jnp.float32)
+        ok = jnp.isfinite(d)
+        finite = finite & ok.all(axis=1)
+        # mask non-finite entries so an Inf row doesn't turn the norm
+        # accumulator into NaN (it is already condemned by `finite`)
+        sq = sq + jnp.sum(jnp.where(ok, d, 0.0) ** 2, axis=1)
+    bad = (weights > 0) & (~finite | (sq > jnp.float32(norm_bound) ** 2))
+
+    def sanitize(p, g):
+        m = bad.reshape((-1,) + (1,) * (p.ndim - 1))
+        return jnp.where(m, jnp.broadcast_to(g, p.shape), p)
+
+    clean = jax.tree.map(sanitize, params_k, global_params)
+    return clean, jnp.where(bad, 0.0, weights), bad
+
+
+def quarantine_update(fail, tries, susp_until, ids, attempted, failed, t,
+                      threshold: float, quarantine_rounds: int,
+                      min_tries: int):
+    """One round of reliability bookkeeping (pure; runs under jit).
+
+    fail, tries   int32 [N] screened-failure / attempted-upload counters
+    susp_until    int32 [N] first round at which the client is eligible
+                  again (0 = never suspended)
+    ids           int32 [K] selected clients (unique within a round)
+    attempted     bool [K] rows that delivered an upload to the screen
+    failed        bool [K] rows the screen rejected
+    t             current round index
+
+    A client trips when it has at least ``min_tries`` attempts on record
+    and its failure rate exceeds ``threshold``; tripping suspends it until
+    round ``t + 1 + quarantine_rounds`` and resets both counters.
+    Returns ``(fail, tries, susp_until, n_suspended)`` where n_suspended
+    counts clients currently serving a suspension (after this update).
+    """
+    i32 = jnp.int32
+    tries = tries.at[ids].add(attempted.astype(i32))
+    fail = fail.at[ids].add(failed.astype(i32))
+    trip = ((tries >= min_tries)
+            & (fail.astype(jnp.float32)
+               > threshold * tries.astype(jnp.float32)))
+    susp_until = jnp.where(trip, i32(t) + 1 + i32(quarantine_rounds),
+                           susp_until)
+    tries = jnp.where(trip, 0, tries)
+    fail = jnp.where(trip, 0, fail)
+    n_susp = (susp_until > t).sum(dtype=i32)
+    return fail, tries, susp_until, n_susp
+
+
+def eligibility(susp_until, t):
+    """bool [N]: clients not currently suspended (selectable at round t)."""
+    return susp_until <= t

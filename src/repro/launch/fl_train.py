@@ -15,6 +15,8 @@
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 from repro.launch.hostdev import force_from_env
 
@@ -33,13 +35,52 @@ from repro.models.fl_models import make_lstm, make_mclr
 from repro.obs import JsonlSink, trace_if
 
 
-def make_sink(args, **meta):
-    """--metrics-out -> a JsonlSink with a run-meta header (else None)."""
+#: --faults CLI spellings -> FaultModel corrupt modes
+FAULT_MODES = {"none": "none", "crash": "crash", "nan_upload": "nan",
+               "inf_upload": "inf", "sign_flip_upload": "sign_flip",
+               "explode_upload": "explode"}
+
+
+def make_sink(args, resume_round=None, **meta):
+    """--metrics-out -> a JsonlSink with a run-meta header (else None).
+
+    On --resume, an existing trace is truncated to the rounds before the
+    checkpoint (the resumed run re-emits everything from there — dropping
+    them first keeps the trace free of duplicate rounds) and reopened in
+    append mode, preserving the original header line.
+    """
     if not args.metrics_out:
         return None
+    append = False
+    if resume_round is not None and os.path.exists(args.metrics_out):
+        with open(args.metrics_out) as f:
+            lines = [ln for ln in f if ln.strip()]
+        kept = [ln for ln in lines
+                if "_meta" in (row := json.loads(ln))
+                or row.get("round", 0) < resume_round]
+        with open(args.metrics_out, "w") as f:
+            f.writelines(kept)
+        append = True
     return JsonlSink(args.metrics_out, meta=dict(
         rounds=args.rounds, driver=args.driver, backend=args.backend,
-        **meta))
+        **meta), append=append)
+
+
+def build_faults(args):
+    """The CLI's fault axes -> a FaultModel (None when everything is off,
+    so a fault-free run compiles the exact pre-ISSUE-8 round program)."""
+    corrupt = FAULT_MODES[args.faults]
+    if (corrupt == "none" and args.dropout_prob <= 0
+            and args.availability == "always" and args.straggler == "none"):
+        return None
+    from repro.faults import FaultModel
+    return FaultModel(seed=args.fault_seed, availability=args.availability,
+                      day_rounds=args.day_rounds,
+                      duty_cycle=args.duty_cycle, straggler=args.straggler,
+                      pareto_alpha=args.pareto_alpha,
+                      dropout_prob=args.dropout_prob, corrupt=corrupt,
+                      corrupt_prob=args.fault_prob,
+                      explode_factor=args.explode_factor)
 
 
 def run_flat(args):
@@ -72,13 +113,33 @@ def run_flat(args):
                        mesh_shards=args.shards,
                        cohort_capacity=args.cohort_capacity,
                        upload_compress=args.compress,
-                       topk_frac=args.topk_frac)
-    sink = make_sink(args, path="flat", dataset=args.dataset, algo=args.algo)
+                       topk_frac=args.topk_frac,
+                       faults=build_faults(args),
+                       upload_screen=args.screen,
+                       screen_norm_bound=args.screen_norm_bound,
+                       quarantine_threshold=args.quarantine_threshold,
+                       quarantine_rounds=args.quarantine_rounds,
+                       quarantine_min_tries=args.quarantine_min_tries)
+    resume_round = None
+    if args.resume:
+        from repro.checkpoint import list_checkpoints
+        if not args.checkpoint_dir:
+            raise SystemExit("--resume needs --checkpoint-dir")
+        ckpts = list_checkpoints(args.checkpoint_dir)
+        if not ckpts:
+            raise SystemExit(f"--resume: no ckpt_*.msgpack under "
+                             f"{args.checkpoint_dir!r}")
+        resume_round = ckpts[-1][0]
+    sink = make_sink(args, resume_round=resume_round, path="flat",
+                     dataset=args.dataset, algo=args.algo)
     srv = FedSAEServer(ds, model, cfg,
                        het=HeterogeneitySim(ds.n_clients, seed=cfg.seed),
                        sink=sink)
     with trace_if(args.trace_dir):
-        hist = srv.run(verbose=not args.quiet)
+        hist = srv.run(verbose=not args.quiet,
+                       checkpoint_dir=args.checkpoint_dir,
+                       checkpoint_every=args.checkpoint_every,
+                       resume=args.resume)
     if sink is not None:
         sink.close()
         print(f"metrics: {sink.path}")
@@ -88,9 +149,15 @@ def run_flat(args):
         f" overflowed={np.sum(hist['overflowed']):.0f}"
         f"/{len(hist['overflowed']) * cfg.n_selected:.0f} slots"
         f" (capacity={srv.capacity})")
+    recs = srv._records.records
+    scr = [r.screened for r in recs if r.screened is not None]
+    flt = "" if not scr else f" screened={np.sum(scr):.0f} uploads"
+    q = [r.quarantined for r in recs if r.quarantined is not None]
+    if q:
+        flt += f" quarantined={q[-1]:.0f} clients"
     print(f"final: acc={hist['acc'][-1]:.3f} "
           f"mean_dropout={np.nanmean(hist['dropout']):.3f}"
-          f" dropped={np.sum(hist['dropped']):.0f}{ovf}")
+          f" dropped={np.sum(hist['dropped']):.0f}{ovf}{flt}")
 
 
 def run_silo(args):
@@ -197,6 +264,68 @@ def main():
     ap.add_argument("--topk-frac", type=float, default=0.1,
                     help="kept coordinate fraction for --compress topk_q8: "
                          "k = ceil(frac * n_params) per client per round")
+    ap.add_argument("--faults", default="none",
+                    choices=list(FAULT_MODES),
+                    help="corrupted-upload fault injection (repro.faults): "
+                         "crash = the corrupt client silently dies; "
+                         "*_upload = its upload is garbage (NaN/Inf/"
+                         "sign-flipped/1e8-amplified delta).  Schedules "
+                         "are a pure function of (--fault-seed, round), "
+                         "identical across drivers and across --resume")
+    ap.add_argument("--fault-prob", type=float, default=0.1,
+                    help="per-(client, round) corruption probability")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault schedule (independent of the "
+                         "training/selection rng streams)")
+    ap.add_argument("--explode-factor", type=float, default=1e8,
+                    help="delta amplification for --faults explode_upload")
+    ap.add_argument("--dropout-prob", type=float, default=0.0,
+                    help="per-(client, round) mid-round crash probability "
+                         "(DROPPED outcome; Ira/Fassa halves the task "
+                         "pair)")
+    ap.add_argument("--availability", default="always",
+                    choices=("always", "diurnal"),
+                    help="diurnal: each client is on duty for --duty-cycle "
+                         "of every --day-rounds rounds, with a seeded "
+                         "per-client phase")
+    ap.add_argument("--day-rounds", type=int, default=24)
+    ap.add_argument("--duty-cycle", type=float, default=0.5)
+    ap.add_argument("--straggler", default="none",
+                    choices=("none", "pareto"),
+                    help="pareto: heavy-tailed per-round slowdowns divide "
+                         "the simulated workloads (tail --pareto-alpha)")
+    ap.add_argument("--pareto-alpha", type=float, default=2.0)
+    ap.add_argument("--screen", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="server-side upload screen (finite + delta-norm "
+                         "check before ANY aggregator; rejected uploads "
+                         "are demoted to the zero-budget crash branch).  "
+                         "auto = on whenever faults are configured")
+    ap.add_argument("--screen-norm-bound", type=float, default=1e4,
+                    help="max accepted upload delta l2 norm (--screen)")
+    ap.add_argument("--quarantine-threshold", type=float, default=0.0,
+                    help="> 0: suspend clients whose screened-upload rate "
+                         "exceeds this fraction of their attempts for "
+                         "--quarantine-rounds rounds (needs the screen and "
+                         "rng-impl device selection; off by default)")
+    ap.add_argument("--quarantine-rounds", type=int, default=16)
+    ap.add_argument("--quarantine-min-tries", type=int, default=3)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="write atomic whole-server checkpoints "
+                         "(ckpt_<round>.msgpack: params, Ira/Fassa state, "
+                         "rng, compression residual, telemetry trace) into "
+                         "this directory")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint cadence in rounds (0 = only with "
+                         "--checkpoint-dir at the end; on the scan driver "
+                         "align it with --block-size — checkpoints land on "
+                         "block boundaries)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in "
+                         "--checkpoint-dir; the completed run is bitwise "
+                         "identical to an uninterrupted one, and an "
+                         "existing --metrics-out trace is truncated at the "
+                         "checkpoint round and appended to")
     ap.add_argument("--metrics-out", default=None,
                     help="write per-round telemetry as JSONL RoundRecords "
                          "(repro.obs) to this path; render the trace with "

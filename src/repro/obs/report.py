@@ -10,6 +10,9 @@ artifact):
   * per-client reliability — selected/uploaded/drop-rate table for the
     least reliable clients (needs the telemetry extras ``ids`` +
     ``client_uploaded``; degrades gracefully to a note without them)
+  * faults & defenses — screened-upload totals/trend and quarantine
+    occupancy when the run carried the ISSUE-8 counters (omitted for
+    fault-free / pre-ISSUE-8 traces)
   * upload ledger — bytes shipped vs the dense-f32 cost of the same uploads
   * rounds/s trend — from per-round wall times, early vs late windows
 
@@ -159,6 +162,33 @@ def render_report(meta: Dict, records: List[RoundRecord],
         for cid in rank[:top]:
             s, u = sel[cid], up[cid]
             lines.append(f"| {cid} | {s} | {u} | {(s - u) / s:.0%} |")
+        lines.append("")
+
+    # ---- faults & defenses (ISSUE 8) ---------------------------------
+    # rendered only when the run recorded the hardened-aggregation
+    # counters (screened / quarantined are Optional schema fields; traces
+    # from fault-free or pre-ISSUE-8 runs simply skip the section)
+    scr = [r.screened for r in records if r.screened is not None]
+    qua = [r.quarantined for r in records if r.quarantined is not None]
+    if scr or qua:
+        lines.append("## Faults & defenses")
+        lines.append("")
+        if scr:
+            total_scr = sum(scr)
+            hit = sum(1 for s in scr if s > 0)
+            lines.append(f"- uploads rejected by the finite/norm screen: "
+                         f"**{total_scr:.0f}** across {hit} of {len(scr)} "
+                         f"screened rounds")
+            srates = [_nanmean([records[i].screened for i in range(a, b)
+                                if records[i].screened is not None])
+                      for a, b in win]
+            lines.append(f"- screened per round (windowed): "
+                         f"`{_sparkline(srates)}`")
+        if qua:
+            peak = max(qua)
+            lines.append(f"- reliability quarantine: peak **{peak:.0f}** "
+                         f"clients suspended at once, {qua[-1]:.0f} still "
+                         f"suspended at the end of the run")
         lines.append("")
 
     # ---- upload ledger -----------------------------------------------

@@ -23,6 +23,10 @@ extras that only exist when on-device metric accumulation is enabled
   workload_hist    [WORKLOAD_HIST_BINS] histogram of uploaded epochs e_eff
                    over [0, h_cap)
   lane_occupancy   [S] per-shard executed-lane occupancy (sharded runs)
+  screened         uploads rejected by the finite/norm screen this round
+                   (ISSUE 8; present only when the screen is on)
+  quarantined      clients currently serving a reliability suspension
+                   (ISSUE 8; present only when quarantine is on)
 
 The histogram binning formula is shared verbatim by the device (jnp) twin
 in ``repro.core.engine`` and the numpy fallback here: values are clipped
@@ -50,7 +54,8 @@ HISTORY_KEYS = ("acc", "test_loss", "train_loss", "dropout", "assigned",
 _FLOAT_FIELDS = ("wall_time_s",) + HISTORY_KEYS
 _OPT_LIST_FIELDS = ("ids", "client_uploaded", "loss_hist", "workload_hist",
                     "lane_occupancy")
-_OPT_SCALAR_FIELDS = ("upload_bytes", "dense_upload_bytes")
+_OPT_SCALAR_FIELDS = ("upload_bytes", "dense_upload_bytes", "screened",
+                      "quarantined")
 
 
 class SchemaError(ValueError):
@@ -84,6 +89,9 @@ class RoundRecord:
     loss_hist: Optional[List[float]] = None
     workload_hist: Optional[List[float]] = None
     lane_occupancy: Optional[List[float]] = None
+    # fault defenses (ISSUE 8; None when the screen / quarantine are off)
+    screened: Optional[float] = None
+    quarantined: Optional[float] = None
 
     # -- NaN-aware equality (dataclass eq fails on NaN fields) ----------
     def __eq__(self, other) -> bool:

@@ -74,12 +74,18 @@ class JsonlSink(Sink):
     Writes go through the file object's normal buffering; ``close`` (or the
     context manager) flushes.  Keep the emitted volume in mind: one record
     is a few hundred bytes, so even paper-scale runs stay in the MBs.
+
+    ``append=True`` (ISSUE 8, crash recovery) reopens an existing trace
+    and appends records after the ones already on disk; the ``meta``
+    header is only ever written to a fresh file, so a resumed run keeps
+    the original run's header line.
     """
 
-    def __init__(self, path: str, meta: Optional[Dict] = None):
+    def __init__(self, path: str, meta: Optional[Dict] = None,
+                 append: bool = False):
         self.path = path
-        self._f = open(path, "w")
-        if meta is not None:
+        self._f = open(path, "a" if append else "w")
+        if meta is not None and not append:
             self._f.write(json.dumps({"_meta": meta}, allow_nan=False)
                           + "\n")
 

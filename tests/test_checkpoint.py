@@ -1,0 +1,258 @@
+"""Crash-recovery checkpoints (ISSUE 8, ``repro.checkpoint``).
+
+Two layers under test:
+
+  * ``msgpack_ckpt`` — the tensor container: round-trip fidelity (pytree
+    structure, dtypes incl. float64 under x64-disabled jax, step,
+    metadata), atomic replace-over-existing, and no temp-file litter when
+    packing fails;
+  * ``fl_state`` + ``FedSAEServer.run(checkpoint_dir=..., resume=True)`` —
+    the whole-server contract: a run killed at round t and resumed in a
+    FRESH server continues to bitwise the params, history state, rng
+    streams and telemetry trace of the uninterrupted run, on both drivers
+    and both rng impls.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_checkpoint, list_checkpoints,
+                              load_checkpoint, restore_server_state,
+                              save_checkpoint, save_server_state)
+from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro.data.federated import make_femnist_like
+from repro.models.fl_models import make_mclr
+
+N_CLIENTS = 24
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def fed():
+    ds = make_femnist_like(n_clients=N_CLIENTS, total=1400, dim=DIM,
+                           max_size=60)
+    return ds, make_mclr(DIM, ds.n_classes)
+
+
+# ---------------------------------------------------------------------------
+# msgpack container
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": jnp.arange(6.0, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.float32),
+                       "i": np.arange(3, dtype=np.int32)},
+            "hist": np.linspace(0, 1, 5).astype(np.float64)}
+
+
+def test_save_load_round_trip(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, _tree(), step=17, metadata={"note": "hello"})
+    tree, step, meta = load_checkpoint(path, like=_tree())
+    assert step == 17 and meta == {"note": "hello"}
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(_tree())):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_load_preserves_saved_dtypes(tmp_path):
+    """float64 state must come back float64 even though jax's default
+    config would silently truncate it through jnp.asarray — the loader
+    returns plain numpy in saved dtypes (the resume-bitwise linchpin:
+    the server's Ira/Fassa history lives in float64)."""
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, _tree())
+    tree, _, _ = load_checkpoint(path, like=_tree())
+    assert tree["hist"].dtype == np.float64
+    assert tree["nested"]["i"].dtype == np.int32
+    np.testing.assert_array_equal(tree["hist"],
+                                  np.linspace(0, 1, 5).astype(np.float64))
+
+
+def test_load_flat_without_like(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, _tree(), step=3)
+    flat, step, _ = load_checkpoint(path)
+    assert step == 3
+    assert set(flat) == {"w", "nested/b", "nested/i", "hist"}
+    np.testing.assert_array_equal(flat["nested/b"], np.ones((4,)))
+
+
+def test_atomic_replace_over_existing(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, {"x": np.zeros(2)}, step=1)
+    save_checkpoint(path, {"x": np.ones(2)}, step=2)
+    flat, step, _ = load_checkpoint(path)
+    assert step == 2
+    np.testing.assert_array_equal(flat["x"], np.ones(2))
+    # atomic writes never leave mkstemp droppings behind
+    assert os.listdir(tmp_path) == ["ckpt.msgpack"]
+
+
+def test_failed_pack_leaves_directory_untouched(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, {"x": np.zeros(2)}, step=1)
+    with pytest.raises(TypeError):
+        # a non-msgpack-able metadata value fails BEFORE the temp file is
+        # created, so the previous checkpoint survives and no temp litter
+        save_checkpoint(path, {"x": np.ones(2)}, step=2,
+                        metadata={"bad": object()})
+    flat, step, _ = load_checkpoint(path)
+    assert step == 1
+    assert os.listdir(tmp_path) == ["ckpt.msgpack"]
+
+
+def test_missing_tensor_raises_keyerror(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, {"x": np.zeros(2)})
+    with pytest.raises(KeyError):
+        load_checkpoint(path, like={"x": np.zeros(2), "y": np.zeros(2)})
+
+
+def test_list_and_latest_checkpoints(tmp_path):
+    d = str(tmp_path)
+    assert list_checkpoints(d) == [] and latest_checkpoint(d) is None
+    for t in (4, 2, 10):
+        save_checkpoint(os.path.join(d, f"ckpt_{t:08d}.msgpack"),
+                        {"x": np.zeros(1)}, step=t)
+    (tmp_path / "not_a_ckpt.msgpack").write_bytes(b"")
+    rounds = [r for r, _ in list_checkpoints(d)]
+    assert rounds == [2, 4, 10]
+    assert latest_checkpoint(d).endswith("ckpt_00000010.msgpack")
+    assert latest_checkpoint(str(tmp_path / "nope")) is None
+
+
+# ---------------------------------------------------------------------------
+# whole-server kill/resume, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _cfg(driver, **over):
+    kw = dict(algo="ira", n_selected=8, rounds=8, h_cap=4.0,
+              fixed_epochs=4.0, sampling="iid", driver=driver, block_size=2,
+              rng_impl="device" if driver == "host" else "")
+    kw.update(over)
+    return ServerConfig(**kw)
+
+
+def _mk(fed, cfg):
+    ds, model = fed
+    return FedSAEServer(ds, model, cfg,
+                        het=HeterogeneitySim(ds.n_clients, seed=0))
+
+
+def _assert_servers_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(a.L, b.L)
+    np.testing.assert_array_equal(a.H, b.H)
+    np.testing.assert_array_equal(a.theta, b.theta)
+    np.testing.assert_array_equal(a.values.v, b.values.v)
+    assert len(a.cohorts) == len(b.cohorts)
+    for c1, c2 in zip(a.cohorts, b.cohorts):
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def _assert_traces_equal(a, b):
+    import json
+    ra, rb = a._records.records, b._records.records
+    assert len(ra) == len(rb)
+    for x, y in zip(ra, rb):
+        dx, dy = json.loads(x.to_json()), json.loads(y.to_json())
+        dx.pop("wall_time_s", None)
+        dy.pop("wall_time_s", None)
+        assert dx == dy, f"record diverged at round {dx.get('round')}"
+
+
+@pytest.mark.parametrize("driver", ["host", "scan"])
+def test_kill_and_resume_is_bitwise(fed, tmp_path, driver):
+    full = _mk(fed, _cfg(driver))
+    full.run()
+
+    d = str(tmp_path / driver)
+    part = _mk(fed, _cfg(driver))
+    part.run(rounds=4, checkpoint_dir=d, checkpoint_every=2)
+    assert [r for r, _ in list_checkpoints(d)] == [2, 4]
+
+    resumed = _mk(fed, _cfg(driver))       # a FRESH process, state-free
+    resumed.run(checkpoint_dir=d, checkpoint_every=2, resume=True)
+    _assert_servers_bitwise(full, resumed)
+    _assert_traces_equal(full, resumed)
+
+
+def test_resume_with_faults_and_compression(fed, tmp_path):
+    """The hard case: resuming must also restore the compression residual
+    and replay the fault schedule — the resumed faulted run is bitwise the
+    uninterrupted faulted run, residual state included."""
+    from repro.faults import FaultModel
+    over = dict(faults=FaultModel(seed=3, corrupt="nan", corrupt_prob=0.4),
+                upload_compress="topk_q8", topk_frac=0.1)
+    full = _mk(fed, _cfg("scan", **over))
+    full.run()
+
+    d = str(tmp_path / "faulted")
+    part = _mk(fed, _cfg("scan", **over))
+    part.run(rounds=4, checkpoint_dir=d, checkpoint_every=4)
+
+    resumed = _mk(fed, _cfg("scan", **over))
+    resumed.run(checkpoint_dir=d, resume=True)
+    _assert_servers_bitwise(full, resumed)
+    _assert_traces_equal(full, resumed)
+    np.testing.assert_array_equal(np.asarray(full.residual),
+                                  np.asarray(resumed.residual))
+
+
+def test_resume_numpy_rng_host(fed, tmp_path):
+    """rng_impl='numpy' carries stateful numpy Generators — their bit
+    states (PCG64's 128-bit word, JSON-stringified in metadata) must
+    round-trip for the resumed selection stream to continue exactly."""
+    cfg = _cfg("host", rng_impl="numpy", sampling="shuffle")
+    full = _mk(fed, cfg)
+    full.run()
+
+    d = str(tmp_path / "np")
+    part = _mk(fed, cfg)
+    part.run(rounds=3, checkpoint_dir=d, checkpoint_every=3)
+
+    resumed = _mk(fed, cfg)
+    resumed.run(checkpoint_dir=d, resume=True)
+    _assert_servers_bitwise(full, resumed)
+
+
+def test_checkpoint_dir_alone_saves_final_state(fed, tmp_path):
+    d = str(tmp_path / "final")
+    srv = _mk(fed, _cfg("scan"))
+    srv.run(checkpoint_dir=d)          # checkpoint_every=0
+    assert [r for r, _ in list_checkpoints(d)] == [srv.cfg.rounds]
+
+
+def test_resume_guards(fed, tmp_path):
+    srv = _mk(fed, _cfg("host"))
+    with pytest.raises(ValueError, match="requires checkpoint_dir"):
+        srv.run(resume=True)
+    with pytest.raises(FileNotFoundError):
+        srv.run(checkpoint_dir=str(tmp_path / "empty"), resume=True)
+
+
+def test_rng_impl_mismatch_rejected(fed, tmp_path):
+    d = str(tmp_path / "mismatch")
+    srv = _mk(fed, _cfg("host", rng_impl="numpy"))
+    srv.run(rounds=2, checkpoint_dir=d, checkpoint_every=2)
+    other = _mk(fed, _cfg("host", rng_impl="device"))
+    with pytest.raises(ValueError, match="rng_impl"):
+        restore_server_state(other, d)
+
+
+def test_save_restore_server_state_direct(fed, tmp_path):
+    """State-level round trip without running any rounds in between."""
+    d = str(tmp_path / "direct")
+    srv = _mk(fed, _cfg("host"))
+    srv.run(rounds=3)
+    save_server_state(srv, d, 3)
+    fresh = _mk(fed, _cfg("host"))
+    assert restore_server_state(fresh, d) == 3
+    _assert_servers_bitwise(srv, fresh)
+    assert fresh.L.dtype == np.float64 and fresh.theta.dtype == np.float64

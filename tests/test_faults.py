@@ -1,0 +1,483 @@
+"""Fault injection + hardened aggregation (ISSUE 8, ``repro.faults``).
+
+The load-bearing claims, in test order:
+
+  * unit: FaultModel validation, seeded schedule determinism, the
+    finite/norm screen's demote-to-crash semantics;
+  * hazard regression: a NaN/Inf upload poisons UNSCREENED fedavg (the
+    documented pre-ISSUE-8 behaviour) while every registry aggregator is
+    clean behind the screen;
+  * crash-twin parity: a run whose corrupt clients upload garbage
+    (nan/inf/explode) produces BITWISE the params of the run where those
+    same clients simply crashed — on both drivers, both backends, and
+    under topk_q8 compression (residual state included);
+  * composition: faults-off + screen-off is the identical program (bitwise
+    vs a plain PR-7 server), schedules reproduce run-to-run, diurnal/
+    Pareto/dropout traces agree host vs scan, and the sharded mesh keeps
+    the crash-twin claim (multi-device cases gated on simulated devices);
+  * quarantine: repeat offenders get suspended and surface in telemetry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro.core.aggregation import AGGREGATORS, get_aggregator
+from repro.data.federated import make_femnist_like
+from repro.faults import (FaultModel, apply_availability_stragglers,
+                          availability_mask, corrupt_mask, dropout_mask,
+                          inject_upload_faults, screen_uploads)
+from repro.models.fl_models import make_mclr
+
+N_CLIENTS = 24
+DIM = 16
+N_DEVICES = len(jax.devices())
+
+needs_devices = lambda n: pytest.mark.skipif(  # noqa: E731
+    N_DEVICES < n, reason=f"needs {n} (simulated) devices, have {N_DEVICES};"
+    " set REPRO_FORCE_HOST_DEVICES / XLA_FLAGS before jax initializes")
+
+
+@pytest.fixture(scope="module")
+def fed():
+    ds = make_femnist_like(n_clients=N_CLIENTS, total=1400, dim=DIM,
+                           max_size=60)
+    return ds, make_mclr(DIM, ds.n_classes)
+
+
+_RUNS = {}
+
+
+def _run(fed, driver, corrupt=None, rounds=8, **over):
+    """Memoized small faulted run (the crash-twin comparisons reuse the
+    twin across parametrized cases)."""
+    key = (driver, corrupt, rounds, tuple(sorted(over.items())))
+    if key in _RUNS:
+        return _RUNS[key]
+    ds, model = fed
+    fm = None if corrupt is None else FaultModel(seed=3, corrupt=corrupt,
+                                                 corrupt_prob=0.4)
+    cfg = ServerConfig(algo="ira", n_selected=8, rounds=rounds, h_cap=4.0,
+                       fixed_epochs=4.0, sampling="iid", driver=driver,
+                       block_size=4,
+                       rng_impl="device" if driver == "host" else "",
+                       faults=fm, **over)
+    srv = FedSAEServer(ds, model, cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=0))
+    srv.run()
+    _RUNS[key] = srv
+    return srv
+
+
+def _assert_bitwise(a, b):
+    for c1, c2 in zip(a.cohorts, b.cohorts):
+        np.testing.assert_array_equal(c1, c2)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _finite(params):
+    return all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# FaultModel / schedule units
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError):
+        FaultModel(availability="sometimes")
+    with pytest.raises(ValueError):
+        FaultModel(corrupt="gamma_rays")
+    with pytest.raises(ValueError):
+        FaultModel(duty_cycle=0.0)
+    with pytest.raises(ValueError):
+        FaultModel(dropout_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(straggler="pareto", pareto_alpha=0.0)
+    fm = FaultModel(corrupt="nan", corrupt_prob=0.2)
+    assert fm.corrupts and fm.demotes and fm.injects
+    assert not FaultModel(corrupt="crash", corrupt_prob=0.2).injects
+    assert not FaultModel(corrupt="sign_flip", corrupt_prob=0.2).demotes
+    assert not FaultModel(corrupt="nan", corrupt_prob=0.0).corrupts
+
+
+def test_schedules_are_pure_functions_of_seed_and_round():
+    fm = FaultModel(seed=7, corrupt="nan", corrupt_prob=0.3,
+                    dropout_prob=0.2, availability="diurnal",
+                    straggler="pareto")
+    for t in (0, 5, 17):
+        np.testing.assert_array_equal(
+            np.asarray(corrupt_mask(fm, t, 50)),
+            np.asarray(corrupt_mask(fm, t, 50)))
+        np.testing.assert_array_equal(
+            np.asarray(dropout_mask(fm, t, 50)),
+            np.asarray(dropout_mask(fm, t, 50)))
+    # different rounds draw different masks (not a constant schedule)
+    assert not np.array_equal(np.asarray(corrupt_mask(fm, 0, 200)),
+                              np.asarray(corrupt_mask(fm, 1, 200)))
+    # phases are a pure function of the seed
+    np.testing.assert_array_equal(fm.phases(50), fm.phases(50))
+    assert FaultModel(availability="always").phases(50) is None
+
+
+def test_diurnal_duty_cycle_and_pareto_floor():
+    fm = FaultModel(seed=0, availability="diurnal", day_rounds=10,
+                    duty_cycle=0.3, straggler="pareto", pareto_alpha=1.5)
+    phases = jnp.asarray(fm.phases(400))
+    on = np.stack([np.asarray(availability_mask(fm, phases, t))
+                   for t in range(10)])
+    # every client is on duty for exactly duty_len rounds per day
+    np.testing.assert_array_equal(on.sum(axis=0), fm.duty_len)
+    E = jnp.full((400,), 8.0)
+    shaped = np.asarray(apply_availability_stragglers(fm, phases, 0, E))
+    # slowdowns divide (never accelerate); off-duty clients are zeroed
+    off = ~np.asarray(availability_mask(fm, phases, 0))
+    assert (shaped[off] == 0.0).all()
+    assert (shaped[~off] <= 8.0).all() and (shaped[~off] > 0.0).all()
+
+
+def test_inject_upload_faults_modes():
+    g = {"w": jnp.ones((3,)), "b": jnp.zeros(())}
+    pk = {"w": jnp.full((4, 3), 2.0), "b": jnp.full((4,), 0.5)}
+    mask = jnp.asarray([True, False, True, False])
+    nan = inject_upload_faults(pk, g, mask, "nan")
+    assert np.isnan(np.asarray(nan["w"])[0]).all()
+    np.testing.assert_array_equal(np.asarray(nan["w"])[1], 2.0)
+    flip = inject_upload_faults(pk, g, mask, "sign_flip")
+    np.testing.assert_allclose(np.asarray(flip["w"])[0], 0.0)  # 2g - p
+    boom = inject_upload_faults(pk, g, mask, "explode", factor=100.0)
+    np.testing.assert_allclose(np.asarray(boom["w"])[0], 101.0)
+    with pytest.raises(ValueError):
+        inject_upload_faults(pk, g, mask, "crash")
+
+
+# ---------------------------------------------------------------------------
+# the screen: demote-to-crash semantics + the unscreened hazard
+# ---------------------------------------------------------------------------
+
+
+def _stack(n_rows, poison=None, mode="nan"):
+    """An honest stacked upload around g=0.1, optionally one poisoned row."""
+    k = jax.random.PRNGKey(0)
+    g = {"w": jnp.full((DIM,), 0.1), "b": jnp.zeros(())}
+    pk = {"w": 0.1 + 0.01 * jax.random.normal(k, (n_rows, DIM)),
+          "b": 0.01 * jnp.ones((n_rows,))}
+    if poison is not None:
+        val = {"nan": jnp.nan, "inf": jnp.inf, "explode": 1e6}[mode]
+        pk = {"w": pk["w"].at[poison].set(val),
+              "b": pk["b"].at[poison].set(val)}
+    return g, pk
+
+
+def test_screen_demotes_poisoned_rows_to_crash():
+    g, pk = _stack(6, poison=2, mode="nan")
+    w = jnp.ones((6,))
+    clean, w2, bad = screen_uploads(g, pk, w, norm_bound=1e4)
+    np.testing.assert_array_equal(np.asarray(bad),
+                                  [False, False, True, False, False, False])
+    assert float(w2[2]) == 0.0
+    np.testing.assert_array_equal(np.asarray(clean["w"])[2],
+                                  np.asarray(g["w"]))
+    # honest rows pass through bit-untouched
+    np.testing.assert_array_equal(np.asarray(clean["w"])[[0, 1, 3, 4, 5]],
+                                  np.asarray(pk["w"])[[0, 1, 3, 4, 5]])
+    # weight-0 rows are never flagged (a crashed client is not a fault)
+    _, _, bad0 = screen_uploads(g, pk, w.at[2].set(0.0), norm_bound=1e4)
+    assert not np.asarray(bad0).any()
+
+
+def test_screen_norm_bound_catches_exploded_rows():
+    g, pk = _stack(6, poison=1, mode="explode")
+    _, w2, bad = screen_uploads(g, pk, jnp.ones((6,)), norm_bound=1e3)
+    assert bool(bad[1]) and float(w2[1]) == 0.0
+
+
+@pytest.mark.parametrize("mode", ["nan", "inf"])
+def test_unscreened_fedavg_is_poisoned_regression(mode):
+    """The documented hazard this PR closes: one non-finite upload at
+    nonzero weight contaminates unscreened FedAvg's global params."""
+    g, pk = _stack(6, poison=0, mode=mode)
+    out = get_aggregator("fedavg")(pk, g, jnp.ones((6,)))
+    assert not _finite(out)
+
+
+@pytest.mark.parametrize("name", sorted(AGGREGATORS))
+def test_every_registry_aggregator_clean_behind_screen(name):
+    g, pk = _stack(8, poison=3, mode="nan")
+    w = jnp.ones((8,))
+    clean, w2, bad = screen_uploads(g, pk, w, norm_bound=1e4)
+    kwargs = {"n_byzantine": 1} if name in ("krum", "bulyan") else {}
+    out = get_aggregator(name, **kwargs)(clean, g, w2)
+    assert _finite(out)
+    # and equals aggregating the honest rows with the poisoned one crashed
+    g2, pk2 = _stack(8)
+    crashed = {k: pk2[k].at[3].set(jnp.broadcast_to(g[k], pk2[k][3].shape))
+               for k in pk2}
+    ref = get_aggregator(name, **kwargs)(crashed, g, w.at[3].set(0.0))
+    for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# crash-twin parity: garbage uploads == the same clients crashing, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("driver", ["host", "scan"])
+@pytest.mark.parametrize("mode", ["nan", "inf", "explode"])
+def test_crash_twin_bitwise(fed, driver, mode):
+    twin = _run(fed, driver, "crash")
+    faulted = _run(fed, driver, mode)
+    assert _finite(faulted.params)
+    assert np.sum([r.screened for r in faulted._records.records]) > 0
+    _assert_bitwise(twin, faulted)
+
+
+@pytest.mark.parametrize("driver", ["host", "scan"])
+def test_crash_twin_bitwise_under_compression(fed, driver):
+    """The screened modes keep the crash-twin claim with topk_q8 upload
+    compression: residual state included (a screened row's error-feedback
+    bits never change)."""
+    twin = _run(fed, driver, "crash", upload_compress="topk_q8",
+                topk_frac=0.1)
+    for mode in ("nan", "explode"):
+        faulted = _run(fed, driver, mode, upload_compress="topk_q8",
+                       topk_frac=0.1)
+        assert _finite(faulted.params)
+        _assert_bitwise(twin, faulted)
+        np.testing.assert_array_equal(np.asarray(twin.residual),
+                                      np.asarray(faulted.residual))
+
+
+def test_crash_twin_bitwise_pallas(fed):
+    twin = _run(fed, "scan", "crash", backend="pallas")
+    faulted = _run(fed, "scan", "nan", backend="pallas")
+    assert _finite(faulted.params)
+    _assert_bitwise(twin, faulted)
+
+
+@pytest.mark.parametrize("mode", ["crash", "nan", "sign_flip"])
+def test_fault_schedule_host_equals_scan(fed, mode):
+    _assert_bitwise(_run(fed, "host", mode), _run(fed, "scan", mode))
+
+
+def test_all_faulty_round_degenerates_to_noop(fed):
+    """corrupt_prob=1: every selected upload is screened out; the round is
+    the existing no-participant no-op (finite params, zero progress — the
+    exact behaviour of every client crashing)."""
+    ds, model = fed
+    out = {}
+    for corrupt in ("crash", "nan"):
+        cfg = ServerConfig(algo="ira", n_selected=8, rounds=3, h_cap=4.0,
+                           sampling="iid", driver="host",
+                           rng_impl="device",
+                           faults=FaultModel(seed=0, corrupt=corrupt,
+                                             corrupt_prob=1.0))
+        srv = FedSAEServer(ds, model, cfg,
+                           het=HeterogeneitySim(ds.n_clients, seed=0))
+        srv.run()
+        assert _finite(srv.params)
+        out[corrupt] = srv
+    _assert_bitwise(out["crash"], out["nan"])
+
+
+def test_sign_flip_passes_screen_but_stays_finite(fed):
+    """sign_flip is the stealthy mode: finite and norm-plausible, so the
+    screen does NOT demote it (robust aggregators are the defense) — but
+    it must actually reach aggregation (screened counter stays 0)."""
+    srv = _run(fed, "scan", "sign_flip", upload_screen="on")
+    assert _finite(srv.params)
+    assert np.sum([r.screened or 0 for r in srv._records.records]) == 0
+    honest = _run(fed, "scan", None, upload_screen="on")
+    diff = any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(srv.params),
+                               jax.tree.leaves(honest.params)))
+    assert diff, "sign_flip uploads never reached the aggregator"
+
+
+def test_sign_flip_with_median_aggregator(fed):
+    srv = _run(fed, "scan", "sign_flip", aggregator="median")
+    assert _finite(srv.params)
+
+
+# ---------------------------------------------------------------------------
+# composition with PRs 1-7
+# ---------------------------------------------------------------------------
+
+
+def test_faults_off_is_bitwise_the_plain_program(fed):
+    """faults=None + screen auto compiles the exact pre-ISSUE-8 round
+    program: bitwise params on both drivers (the static-gating contract)."""
+    for driver in ("host", "scan"):
+        plain = _run(fed, driver, None)
+        defaulted = _run(fed, driver, None, upload_screen="auto",
+                         screen_norm_bound=123.0)  # inert without faults
+        _assert_bitwise(plain, defaulted)
+
+
+def test_faulted_run_reproduces_itself(fed):
+    ds, model = fed
+    runs = []
+    for _ in range(2):
+        cfg = ServerConfig(algo="ira", n_selected=8, rounds=6, h_cap=4.0,
+                           sampling="iid", driver="scan", block_size=3,
+                           faults=FaultModel(seed=11, corrupt="nan",
+                                             corrupt_prob=0.3,
+                                             dropout_prob=0.2,
+                                             availability="diurnal",
+                                             straggler="pareto"))
+        srv = FedSAEServer(ds, model, cfg,
+                           het=HeterogeneitySim(ds.n_clients, seed=0))
+        srv.run()
+        runs.append(srv)
+    _assert_bitwise(*runs)
+    a = [r.screened for r in runs[0]._records.records]
+    b = [r.screened for r in runs[1]._records.records]
+    assert a == b
+
+
+def test_availability_stragglers_dropouts_host_equals_scan(fed):
+    ds, model = fed
+    out = {}
+    for driver in ("host", "scan"):
+        cfg = ServerConfig(algo="ira", n_selected=8, rounds=8, h_cap=4.0,
+                           sampling="iid", driver=driver, block_size=4,
+                           rng_impl="device" if driver == "host" else "",
+                           faults=FaultModel(seed=5, availability="diurnal",
+                                             day_rounds=6, duty_cycle=0.7,
+                                             straggler="pareto",
+                                             dropout_prob=0.2))
+        srv = FedSAEServer(ds, model, cfg,
+                           het=HeterogeneitySim(ds.n_clients, seed=0))
+        srv.run()
+        assert _finite(srv.params)
+        out[driver] = srv
+    _assert_bitwise(out["host"], out["scan"])
+
+
+def test_sharded_single_device_crash_twin(fed):
+    """The shard_map program keeps the crash-twin claim (1-shard mesh runs
+    in every tier-1 environment)."""
+    twin = _run(fed, "scan", "crash", mesh_shards=1)
+    for mode in ("nan", "explode"):
+        faulted = _run(fed, "scan", mode, mesh_shards=1)
+        assert _finite(faulted.params)
+        _assert_bitwise(twin, faulted)
+
+
+@needs_devices(8)
+@pytest.mark.parametrize("driver", ["host", "scan"])
+@pytest.mark.parametrize("shards", [2, 8])
+def test_sharded_multi_device_crash_twin(fed, driver, shards):
+    twin = _run(fed, driver, "crash", mesh_shards=shards,
+                upload_compress="topk_q8", topk_frac=0.1)
+    faulted = _run(fed, driver, "nan", mesh_shards=shards,
+                   upload_compress="topk_q8", topk_frac=0.1)
+    assert _finite(faulted.params)
+    _assert_bitwise(twin, faulted)
+    np.testing.assert_array_equal(np.asarray(twin.residual),
+                                  np.asarray(faulted.residual))
+
+
+@needs_devices(8)
+def test_sharded_injection_matches_replicated(fed):
+    rep = _run(fed, "scan", "nan")
+    sh = _run(fed, "scan", "nan", mesh_shards=2)
+    _assert_bitwise(rep, sh)
+
+
+@needs_devices(8)
+def test_capacity_compacted_crash_twin(fed):
+    twin = _run(fed, "scan", "crash", mesh_shards=2, cohort_capacity=4,
+                upload_compress="topk_q8", topk_frac=0.1)
+    faulted = _run(fed, "scan", "nan", mesh_shards=2, cohort_capacity=4,
+                   upload_compress="topk_q8", topk_frac=0.1)
+    assert _finite(faulted.params)
+    _assert_bitwise(twin, faulted)
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+
+def test_report_faults_section_degrades_gracefully():
+    from repro.obs import RoundRecord, render_report
+    plain = [RoundRecord(round=t, acc=0.5, dropout=0.1) for t in range(4)]
+    rep = render_report({}, plain)
+    assert "Faults & defenses" not in rep  # pre-ISSUE-8 traces: no section
+    hardened = [RoundRecord(round=t, acc=0.5, dropout=0.1,
+                            screened=float(t % 2), quarantined=float(t))
+                for t in range(4)]
+    rep = render_report({}, hardened)
+    assert "Faults & defenses" in rep
+    assert "rejected by the finite/norm screen: **2**" in rep
+    assert "peak **3** clients suspended" in rep
+    # screen-only runs (quarantine off) still render
+    screen_only = [RoundRecord(round=t, screened=0.0) for t in range(4)]
+    assert "finite/norm screen: **0**" in render_report({}, screen_only)
+
+
+# ---------------------------------------------------------------------------
+# quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_suspends_repeat_offenders(fed):
+    ds, model = fed
+    cfg = ServerConfig(algo="ira", n_selected=8, rounds=12, h_cap=4.0,
+                       sampling="iid", driver="host", rng_impl="device",
+                       faults=FaultModel(seed=3, corrupt="nan",
+                                         corrupt_prob=0.6),
+                       quarantine_threshold=0.5, quarantine_rounds=4,
+                       quarantine_min_tries=2)
+    srv = FedSAEServer(ds, model, cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=0))
+    srv.run()
+    assert _finite(srv.params)
+    q = [r.quarantined for r in srv._records.records]
+    assert max(q) > 0, "no client ever tripped the quarantine"
+
+
+def test_quarantine_update_and_eligibility_units():
+    from repro.faults import eligibility, quarantine_update
+    N = 6
+    fail = jnp.zeros((N,), jnp.int32)
+    tries = jnp.zeros((N,), jnp.int32)
+    susp = jnp.zeros((N,), jnp.int32)
+    ids = jnp.asarray([0, 1, 2], jnp.int32)
+    att = jnp.asarray([True, True, True])
+    bad = jnp.asarray([True, False, True])
+    # below min_tries: nobody trips yet
+    fail, tries, susp, n = quarantine_update(
+        fail, tries, susp, ids, att, bad, 0, threshold=0.5,
+        quarantine_rounds=4, min_tries=2)
+    assert int(n) == 0 and np.asarray(eligibility(susp, 1)).all()
+    # second all-bad round for client 0: rate 2/2 > 0.5 with 2 tries
+    fail, tries, susp, n = quarantine_update(
+        fail, tries, susp, ids, att, jnp.asarray([True, False, False]), 1,
+        threshold=0.5, quarantine_rounds=4, min_tries=2)
+    assert int(n) == 1  # client 0 at 2/2 > 0.5; client 2 at 1/2 stays
+    susp_np = np.asarray(susp)
+    assert susp_np[0] == 1 + 1 + 4  # suspended until round 6
+    elig = np.asarray(eligibility(susp, 2))
+    assert not elig[0] and elig[1]
+    assert np.asarray(eligibility(susp, 6)).all()  # trust re-earned
+    # counters reset on trip
+    assert int(fail[0]) == 0 and int(tries[0]) == 0
+
+
+def test_quarantine_requires_screen_and_device_rng(fed):
+    ds, model = fed
+    with pytest.raises(ValueError):
+        FedSAEServer(ds, model, ServerConfig(
+            quarantine_threshold=0.5, upload_screen="off",
+            rng_impl="device"), het=HeterogeneitySim(ds.n_clients, seed=0))
+    with pytest.raises(ValueError):
+        FedSAEServer(ds, model, ServerConfig(
+            quarantine_threshold=0.5, upload_screen="on",
+            rng_impl="numpy"), het=HeterogeneitySim(ds.n_clients, seed=0))
