@@ -95,6 +95,20 @@ Fault-screen overhead leg (ISSUE 8, ``repro.faults``):
                       is <= 0.05 and scripts/check_bench.py gates it
                       statically from the recorded file.
 
+Model-generic leg (ISSUE 9, the ``LocalStep`` seam):
+
+  engine_scan_mlp_path  the xla scan leg with a NON-MCLR local step (the
+                        built-in 2-layer tanh MLP): the local step runs
+                        through XLA autodiff (``fused_sgd_eligible`` is
+                        False off the MCLR fast path) and its pytree
+                        params flow through the engine's [K, P] ravel
+                        contract.  Tracks what leaving the hand-tuned
+                        MCLR path costs — the number the LocalStep API
+                        has to keep honest.  ``--models-only`` re-records
+                        just this leg (plus the plain scan baseline it is
+                        normalized against) and merges it into the
+                        existing scale entry, like --faults-only.
+
 Telemetry-overhead legs (ISSUE 7, ``repro.obs``):
 
   telemetry_overhead  two runs of the xla scan leg with device-side metric
@@ -147,7 +161,7 @@ from repro.core.aggregation import get_aggregator
 from repro.core.compression import n_params_of
 from repro.core.engine import RoundEngine
 from repro.core.heterogeneity import HeterogeneitySim
-from repro.core.server import ServerConfig
+from repro.core.server import ComputeConfig, ServerConfig
 from repro.data.federated import make_mnist_like
 from repro.obs import JsonlSink, NullSink, records_from_block_stats
 
@@ -219,9 +233,9 @@ SCREEN_NORM_BOUND = 1e4   # the screened leg's norm bound (config default)
 def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 reps: int = 3, shards: int = 0, gate_only: bool = False,
                 sharded_only: bool = False, telemetry_only: bool = False,
-                faults_only: bool = False):
+                faults_only: bool = False, models_only: bool = False):
     from repro.core.selection import resolve_capacity
-    from repro.models.fl_models import make_mclr
+    from repro.models.fl_models import make_mclr, make_mlp
 
     spec = SCALES[scale]
     ds = make_mnist_like(seed=seed, n_clients=spec["n_clients"],
@@ -229,6 +243,11 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                          max_size=spec["max_size"])
     model = make_mclr(spec["dim"], ds.n_classes)
     params = model.init(jax.random.PRNGKey(seed))
+    # ISSUE 9: a non-MCLR LocalStep on the same driver — XLA autodiff step,
+    # pytree params through the [K, P] ravel contract
+    mlp = make_mlp(spec["dim"], ds.n_classes)
+    mlp_params = mlp.init_params(jax.random.PRNGKey(seed))
+    mlp_n_params = n_params_of(mlp_params)
     K = spec["k"]
     batch_size = spec["batch_size"]
     max_n = int(ds.sizes.max())
@@ -309,12 +328,14 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         return ServerConfig(
             algo="fedprox", n_selected=K, selection="random",
             h_cap=max(24.0, epochs), fixed_epochs=epochs,
-            sampling="iid", backend=backend, driver="scan",
-            block_size=block, cohort_capacity=capacity)
+            sampling="iid",
+            compute=ComputeConfig(backend=backend, driver="scan",
+                                  block_size=block,
+                                  cohort_capacity=capacity))
 
-    def init_state():
+    def init_state(p0=None):
         return {
-            "params": jax.tree.map(jnp.copy, params),
+            "params": jax.tree.map(jnp.copy, params if p0 is None else p0),
             "L": jnp.full(spec["n_clients"], 1.0, jnp.float32),
             "H": jnp.full(spec["n_clients"], 2.0, jnp.float32),
             "theta": jnp.full(spec["n_clients"], 1.5, jnp.float32),
@@ -324,10 +345,10 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         }
 
     def timed_scan(backend, mesh=None, pk=None, capacity="full",
-                   eng=None):
+                   eng=None, step=None, p0=None):
         pk = packed if pk is None else pk
-        seg = (eng or engine).make_segment_fn(model, batch_size, max_iters,
-                                              pk.max_n,
+        seg = (eng or engine).make_segment_fn(step or model, batch_size,
+                                              max_iters, pk.max_n,
                                               scan_cfg(backend, capacity),
                                               mesh=mesh)
 
@@ -343,11 +364,11 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         def run():
             # compile warmup: ONE block — every block shares the [block]
             # ts shape, so the jit cache is already hot for the timed loop
-            st, _ = seg(init_state(), jnp.arange(block, dtype=jnp.int32),
+            st, _ = seg(init_state(p0), jnp.arange(block, dtype=jnp.int32),
                         pk.x, pk.y, pk.offsets, pk.lengths,
                         mu_dev, sigma_dev)
             jax.block_until_ready(st["params"])
-            state = init_state()
+            state = init_state(p0)
             t0 = time.perf_counter()
             state = run_blocks(state)
             jax.block_until_ready(state["params"])
@@ -426,6 +447,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 timed(engine_round(packed_fns[("shuffle", "pallas")])),
             "pallas_iid": timed(engine_round(packed_fns[("iid", "pallas")])),
             "scan": timed_scan("xla"),
+            "scan_mlp": timed_scan("xla", step=mlp, p0=mlp_params),
             "scan_screen": timed_scan("xla", eng=engine_s),
             "scan_pallas": timed_scan("pallas"),
             "scan_compress": timed_scan_compress("xla"),
@@ -470,6 +492,11 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         # --faults-only re-records just the ISSUE-8 screening pair and
         # merges it into the existing scale entry
         legs = {k: legs[k] for k in ("scan", "scan_screen")}
+    elif models_only:
+        # --models-only re-records just the ISSUE-9 model-generic leg (and
+        # the plain scan baseline it is normalized against) and merges it
+        # into the existing scale entry
+        legs = {k: legs[k] for k in ("scan", "scan_mlp")}
     elif gate_only:
         # scripts/check_bench.py consumes only the scan/engine ratio — time
         # exactly those two legs so the CI gate pays for nothing else
@@ -484,7 +511,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             samples[name].append(r)
     rps = {name: float(np.median(v)) for name, v in samples.items()}
     for name in set(rps) & {"iid", "pallas_iid", "scan", "scan_pallas",
-                            "scan_screen", "scan_compress",
+                            "scan_mlp", "scan_screen", "scan_compress",
                             "scan_telemetry_null", "scan_telemetry_jsonl",
                             "scan_sharded", "scan_sharded_capacity"}:
         for leaf in jax.tree.leaves(final_p[name]):
@@ -530,6 +557,23 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             "jsonl_sink_rounds_per_sec": round(jsonl, 3),
             "overhead_frac": round(1.0 - jsonl / null, 4)}}
 
+    def models_entry():
+        plain = rps["scan"]
+        mlp_rps = rps["scan_mlp"]
+        return {"engine_scan_mlp_path": {
+            "driver": "scan", "sampling": "iid", "backend": "xla",
+            "block_size": block, "local_step": "mlp",
+            "n_params": int(mlp_n_params),
+            "data": "non-MCLR LocalStep (2-layer tanh MLP, XLA autodiff "
+                    "local step) under the same fused scan driver; pytree "
+                    "params through the engine's [K, P] ravel contract "
+                    "(ISSUE 9) — slowdown_vs_mclr_scan tracks what leaving "
+                    "the MCLR fast path costs",
+            "upload_bytes_per_round": upload_bytes_per_round(
+                K, mlp_n_params),
+            "rounds_per_sec": round(mlp_rps, 3),
+            "slowdown_vs_mclr_scan": round(plain / mlp_rps, 3)}}
+
     def faults_entry():
         plain = rps["scan"]
         screened = rps["scan_screen"]
@@ -556,6 +600,8 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         return telemetry_entry()
     if faults_only:
         return faults_entry()
+    if models_only:
+        return models_entry()
     if gate_only:
         return {
             "scale": scale, "rounds_timed": rounds,
@@ -636,6 +682,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 upload_bytes_per_round(K, n_params, "topk_q8", TOPK_FRAC)
                 / dense_upload, 4),
             "rounds_per_sec": round(rps["scan_compress"], 3)},
+        **models_entry(),
         **telemetry_entry(),
         **faults_entry(),
         "pallas_mode": "interpret" if jax.default_backend() == "cpu"
@@ -688,6 +735,12 @@ def main():
                          "scan_faults_screen entry into the existing scale "
                          "record — the other legs keep their recorded "
                          "numbers")
+    ap.add_argument("--models-only", action="store_true",
+                    help="time only the ISSUE-9 model-generic pair (plain "
+                         "mclr scan vs the MLP LocalStep scan leg) and "
+                         "MERGE the engine_scan_mlp_path entry into the "
+                         "existing scale record — the other legs keep "
+                         "their recorded numbers")
     ap.add_argument("--gate-only", action="store_true",
                     help="time only the gate legs (iid-engine + scan, or "
                          "the sharded masked/compacted pair with --shards) "
@@ -710,17 +763,24 @@ def main():
                              or args.shards):
         ap.error("--faults-only times the 1-device screening pair alone; "
                  "drop --shards/--gate-only/--sharded-only")
+    if args.models_only and (args.gate_only or args.sharded_only
+                             or args.shards or args.telemetry_only
+                             or args.faults_only):
+        ap.error("--models-only times the 1-device model-generic pair "
+                 "alone; drop the other mode flags")
     scales = ("reduced", "paper") if args.scale == "both" else (args.scale,)
     merged = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
             merged = json.load(f)
-    if args.sharded_only or args.telemetry_only or args.faults_only:
+    if (args.sharded_only or args.telemetry_only or args.faults_only
+            or args.models_only):
         # merging into a missing entry would leave a partial record that
         # check_bench.py's scan/engine gate crashes on
         which = ("--sharded-only" if args.sharded_only else
                  "--telemetry-only" if args.telemetry_only else
-                 "--faults-only")
+                 "--faults-only" if args.faults_only else
+                 "--models-only")
         missing = [s for s in scales if "engine_scan_path"
                    not in merged.get(s, {})]
         if missing:
@@ -732,8 +792,10 @@ def main():
                           shards=args.shards, gate_only=args.gate_only,
                           sharded_only=args.sharded_only,
                           telemetry_only=args.telemetry_only,
-                          faults_only=args.faults_only)
-        if args.sharded_only or args.telemetry_only or args.faults_only:
+                          faults_only=args.faults_only,
+                          models_only=args.models_only)
+        if (args.sharded_only or args.telemetry_only or args.faults_only
+                or args.models_only):
             entry = merged.get(scale, {})
             entry.update(res)
             merged[scale] = entry
@@ -762,6 +824,13 @@ def main():
                   f"{fs['screened_rounds_per_sec']:.2f} rounds/s   "
                   f"overhead {fs['overhead_frac']:.1%}")
             continue
+        if args.models_only:
+            ml = res["engine_scan_mlp_path"]
+            print(f"[{scale}] scan+mlp: "
+                  f"{ml['rounds_per_sec']:.2f} rounds/s "
+                  f"({ml['slowdown_vs_mclr_scan']:.2f}x slower than the "
+                  f"mclr scan leg; {ml['n_params']} params)")
+            continue
         if args.gate_only:
             print(f"[{scale}] gate legs: engine "
                   f"{res['engine_path']['rounds_per_sec']:.2f} rounds/s   "
@@ -780,6 +849,10 @@ def main():
               f"rounds/s   upload {comp['upload_bytes_per_round']} B/round "
               f"vs dense {res['engine_scan_path']['upload_bytes_per_round']}"
               f" B/round ({comp['upload_compression_ratio']:.3f}x)")
+        ml = res["engine_scan_mlp_path"]
+        print(f"[{scale}] scan+mlp: {ml['rounds_per_sec']:.2f} rounds/s "
+              f"({ml['slowdown_vs_mclr_scan']:.2f}x slower than mclr scan; "
+              f"{ml['n_params']} params)")
         tel = res["telemetry_overhead"]
         print(f"[{scale}] scan+telemetry: null sink "
               f"{tel['null_sink_rounds_per_sec']:.2f} rounds/s   jsonl sink "

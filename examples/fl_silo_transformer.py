@@ -3,6 +3,17 @@
 local-step budget with FedSAE-Ira and aggregates sample-weighted uploads.
 
     PYTHONPATH=src python examples/fl_silo_transformer.py
+
+Since ISSUE 9 the silo path rides the engine's shared ``LocalStep`` seam:
+the Model is wrapped into a LocalStep and its uploads flow through the
+same screen/aggregate stage as every other path — here with the upload
+screen on (``screen_norm``), so a silo shipping a blown-up delta would be
+demoted to the crash branch instead of poisoning the global model.
+
+For cross-DEVICE federation of the same architectures (packed clients,
+scan driver, mesh sharding, compressed uploads) use the top-level API
+instead: ``ServerConfig(model="llama3.2-3b", ...)`` — see
+examples/quickstart.py and docs/architecture.md.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -13,7 +24,7 @@ from repro.models.api import build_model
 
 cfg = get_config("granite-moe-1b-a400m", smoke=True)
 model = build_model(cfg)
-fed = SiloFedSAE(model, n_silos=4, lr=5e-3, max_steps=8)
+fed = SiloFedSAE(model, n_silos=4, lr=5e-3, max_steps=8, screen_norm=1e4)
 
 ri = np.random.default_rng(0)
 K, S = 4, 64

@@ -1,4 +1,4 @@
-"""Quickstart: FedSAE vs FedAvg in ~30 lines.
+"""Quickstart: FedSAE vs FedAvg in ~30 lines, on the public API.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -6,20 +6,24 @@ Builds a heterogeneous federated system (per-round Gaussian client budgets,
 exactly the paper's simulator), trains multinomial logistic regression on a
 FEMNIST-like federated dataset, and shows FedSAE-Ira adapting workloads
 while FedAvg's fixed assignment makes ~every client a straggler.
+
+The local model is just a ``ServerConfig`` field: swap ``model="mclr"``
+for ``"mlp"`` (or an arch id like ``"llama3.2-3b"`` on a text dataset) and
+the same engine — selection, prediction, compression, aggregation —
+trains it unchanged.
 """
 import numpy as np
 
-from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro import FedSAEServer, ServerConfig
+from repro.core import HeterogeneitySim
 from repro.data import make_femnist_like
-from repro.models.fl_models import make_mclr
 
 ds = make_femnist_like(n_clients=60, total=4500, dim=64, max_size=120)
-model = make_mclr(64, ds.n_classes)
 
 for algo in ("fedavg", "ira"):
     cfg = ServerConfig(algo=algo, rounds=30, n_selected=10, lr=0.03,
-                       h_cap=20.0, eval_every=5)
-    server = FedSAEServer(ds, model, cfg,
+                       h_cap=20.0, eval_every=5, model="mclr")
+    server = FedSAEServer(ds, cfg=cfg,
                           het=HeterogeneitySim(ds.n_clients, seed=0))
     hist = server.run()
     print(f"{algo:7s}: accuracy={hist['acc'][-1]:.3f}  "

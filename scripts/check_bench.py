@@ -31,7 +31,12 @@ Two further gates are STATIC (no smoke run), checked on the recorded file:
   screen-overhead     the recorded ``scan_faults_screen`` leg (ISSUE 8)
                       must show <= 5% rounds/s loss for the finite/norm
                       upload screen vs the plain scan leg
-                      (``overhead_frac <= 0.05``), same quiet-box rule
+                      (``overhead_frac <= 0.05``), same quiet-box rule.
+                      Gated at BOTH recorded scales (ISSUE 9): reduced at
+                      5%, paper at its own 12% ceiling — see
+                      SCREEN_OVERHEAD_CEILING_PAPER for why the bench's
+                      tiny data-path-bound paper rounds inflate the
+                      screen's relative cost
 
 A fresh ratio more than ``--tolerance`` (default 30%) below the recorded
 one fails the job; a faster ratio prints a hint to re-record.  Every
@@ -71,6 +76,15 @@ TELEMETRY_OVERHEAD_CEILING = 0.05
 # ISSUE-8 acceptance: the finite/norm upload screen costs <= this fraction
 # of the plain scan leg's rounds/s
 SCREEN_OVERHEAD_CEILING = 0.05
+
+# Paper scale gets its own, honest ceiling (ISSUE 9): the bench times
+# --epochs 0.25 rounds, so at paper scale (1000 clients, 7850 params) the
+# round is data-path-bound and finishes in ~8ms — the screen's fixed
+# per-round norm reduction is a visibly larger *fraction* of that than of a
+# real training round (recorded 10.2% when ISSUE 8 landed).  The gate bars
+# it from growing past 12% instead of pretending 5% holds there; at
+# realistic local-epoch counts the absolute cost is the same ~0.1ms.
+SCREEN_OVERHEAD_CEILING_PAPER = 0.12
 
 
 def check_upload_bytes(entry: dict, failures: list) -> bool:
@@ -124,26 +138,38 @@ def check_telemetry_overhead(entry: dict, failures: list) -> bool:
     return ok
 
 
-def check_screen_overhead(entry: dict, failures: list) -> bool:
-    """Static ISSUE-8 gate on the RECORDED fault-screen leg."""
+def check_screen_overhead(entry: dict, failures: list,
+                          scale: str = "reduced",
+                          ceiling: float = SCREEN_OVERHEAD_CEILING) -> bool:
+    """Static ISSUE-8 gate on the RECORDED fault-screen leg.
+
+    Gated at BOTH recorded scales since ISSUE 9 — paper scale under its
+    own ceiling (SCREEN_OVERHEAD_CEILING_PAPER explains why it is
+    higher); the summary names the scale so a red run says which bar
+    broke."""
+    gate = f"screen-overhead/{scale}"
     fs = entry.get("scan_faults_screen")
     if fs is None:
-        print("check_bench[screen-overhead]: no scan_faults_screen "
+        print(f"check_bench[{gate}]: no scan_faults_screen "
               "recorded — re-record BENCH_round_engine.json with the "
               "screening leg (bench_round_engine.py --faults-only)")
-        failures.append(("screen-overhead", "no scan_faults_screen entry "
+        failures.append((gate, "no scan_faults_screen entry "
                          "in the recorded file"))
         return False
     got = fs["overhead_frac"]
-    ok = got <= SCREEN_OVERHEAD_CEILING
-    print(f"check_bench[screen-overhead]: screened "
+    ok = got <= ceiling
+    why = ("" if scale == "reduced" else
+           " [looser bar: paper-scale bench rounds are ~8ms data-path-"
+           "bound stubs, so the screen's fixed ~0.1ms cost inflates as "
+           "a fraction]")
+    print(f"check_bench[{gate}]: screened "
           f"{fs['screened_rounds_per_sec']} rounds/s vs plain "
           f"{fs['plain_rounds_per_sec']} rounds/s = {got:.2%} overhead "
-          f"(ceiling {SCREEN_OVERHEAD_CEILING:.0%}) "
-          f"{'OK' if ok else 'FAIL'}")
+          f"(ceiling {ceiling:.0%}) "
+          f"{'OK' if ok else 'FAIL'}{why}")
     if not ok:
-        failures.append(("screen-overhead", f"recorded overhead {got:.2%} "
-                         f"above the {SCREEN_OVERHEAD_CEILING:.0%} ceiling "
+        failures.append((gate, f"recorded overhead {got:.2%} "
+                         f"above the {ceiling:.0%} ceiling "
                          f"({fs['screened_rounds_per_sec']} vs "
                          f"{fs['plain_rounds_per_sec']} rounds/s)"))
     return ok
@@ -258,6 +284,10 @@ def main() -> int:
     ok = check_upload_bytes(entry, failures)
     ok = check_telemetry_overhead(entry, failures) and ok
     ok = check_screen_overhead(entry, failures) and ok
+    if "paper" in recorded:
+        ok = check_screen_overhead(
+            recorded["paper"], failures, scale="paper",
+            ceiling=SCREEN_OVERHEAD_CEILING_PAPER) and ok
     for name, fn, want, extra_args, extra_env, abs_floor in gates:
         ok = run_gate(name, fn, want, extra_args, extra_env, args,
                       failures, abs_floor) and ok

@@ -1,0 +1,59 @@
+"""repro — FedSAE (self-adaptive federated learning) reproduction.
+
+Public surface (ISSUE 9).  Typical use:
+
+    from repro import FedSAEServer, ServerConfig, ComputeConfig
+
+    srv = FedSAEServer(dataset, cfg=ServerConfig(
+        rounds=50, model="mlp",
+        compute=ComputeConfig(driver="scan", mesh_shards=2)))
+    hist = srv.run()
+
+Every attribute resolves lazily (PEP 562): importing ``repro`` pulls in
+nothing — in particular not jax — so launchers can still configure the
+backend (``repro.launch.hostdev.force_from_env``) before the first heavy
+import, exactly as ``python -m repro.launch.fl_train`` does.
+"""
+from __future__ import annotations
+
+#: public name -> defining module.  Values import jax, hence the lazy dance.
+_EXPORTS = {
+    # the server + its config surface
+    "FedSAEServer": "repro.core.server",
+    "ServerConfig": "repro.core.server",
+    "ComputeConfig": "repro.core.server",
+    "CommConfig": "repro.core.server",
+    "RobustnessConfig": "repro.core.server",
+    # the round engine + the model seam
+    "RoundEngine": "repro.core.engine",
+    "LocalStep": "repro.models.fl_models",
+    "as_local_step": "repro.models.fl_models",
+    "resolve_local_step": "repro.models.fl_models",
+    "from_model": "repro.models.api",
+    # fault injection + telemetry sinks
+    "FaultModel": "repro.faults",
+    "Sink": "repro.obs",
+    "JsonlSink": "repro.obs",
+    "NullSink": "repro.obs",
+    "RingBufferSink": "repro.obs",
+    "TeeSink": "repro.obs",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") \
+            from None
+    import importlib
+
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value  # cache: subsequent lookups skip __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

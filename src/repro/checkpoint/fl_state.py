@@ -24,6 +24,11 @@ previous checkpoint.  ``restore_server_state`` loads the LATEST one.
 The fault-injection streams (repro.faults) need no state here: they are
 keyed by ``fold_in(PRNGKey(fault_seed), t)`` per round, so a resumed run
 replays the exact fault schedule by construction.
+
+Nothing here assumes the flat MCLR ``{w, b}`` shape: params are serialized
+as a pytree (msgpack_ckpt walks arbitrary nests), so any ``LocalStep``
+model — MLP, LSTM, a ``from_model`` transformer — kill/resumes bitwise
+through the same files (ISSUE 9; tests/test_local_step.py).
 """
 from __future__ import annotations
 

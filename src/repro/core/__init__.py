@@ -28,4 +28,10 @@ from repro.core.selection import (  # noqa: F401
     select_random,
     selection_probs,
 )
-from repro.core.server import FedSAEServer, ServerConfig  # noqa: F401
+from repro.core.server import (  # noqa: F401
+    CommConfig,
+    ComputeConfig,
+    FedSAEServer,
+    RobustnessConfig,
+    ServerConfig,
+)

@@ -38,6 +38,15 @@ joins the ``lax.scan`` carry; the host driver keeps it in server state.
 ``backend="pallas"`` runs the fused ``fed_compress`` kernel (one VMEM pass
 per client row), ``backend="xla"`` the jnp twin in ``kernels/ref.py`` —
 op-for-op identical formulations, so the two backends agree bit for bit.
+
+This module also owns the engine's ONE flatten contract (ISSUE 9):
+``flatten_global`` ravels any params pytree to a fixed-order float32 ``[P]``
+vector (``jax.tree_util.tree_leaves`` order — the same order everywhere),
+``unflatten_rows`` maps a ``[K, P]`` stack back to per-leaf dtypes.  Every
+vector-space stage — this transform, the upload screen, the aggregator
+registry, fault corruption, the telemetry byte ledger — works on that view,
+which is why they are all model-generic: an MCLR ``{w, b}``, an MLP, or a
+transformer's nested pytree flatten to the same ``[K, P]`` interface.
 """
 from __future__ import annotations
 

@@ -70,12 +70,29 @@ twins in repro.core.{prediction,selection,heterogeneity}, carrying
 ``(params, L, H, theta, values, data_rng, sel_rng)`` so zero bytes cross
 the host boundary inside a block of rounds.
 
+The model seam is the ``LocalStep`` protocol
+(``repro.models.fl_models``): ``init_params(rng)`` builds an arbitrary
+param PYTREE and ``loss(params, batch)`` a masked scalar; the engine
+differentiates the loss and tree-maps the SGD update, so nothing here
+assumes the flat ``[P]`` MCLR layout.  Every ``make_*`` entry point
+coerces its ``model`` argument through ``as_local_step`` (identity for
+``LocalStep``/``FLModel`` instances — the mclr fast path keeps its exact
+traced functions).  At the upload boundary the client-update pytrees are
+flattened to a single ``[K, P]`` vector view under the fixed-ordering
+ravel contract in ``repro.core.compression`` (``flatten_global`` /
+``unflatten_rows``), which is why selection, Ira/Fassa prediction, upload
+compression, fault injection, the upload screen, every registry
+aggregator, telemetry's byte ledger and the msgpack checkpoints work
+unchanged on any model.
+
 Every round flavour takes a ``backend`` option (``"xla"`` | ``"pallas"``,
 default ``"xla"``).  ``"pallas"`` swaps the hot stages for the fused kernels
-in ``repro.kernels`` — the cohort gather (``fed_gather``) and, for MCLR
-models with ``sampling="iid"``, the budgeted local-SGD loop
-(``fed_local_sgd``) — and falls back to the XLA implementation for any stage
-with no applicable kernel (non-MCLR models, the seed-exact ``"shuffle"``
+in ``repro.kernels`` — the cohort gather (``fed_gather``), the upload
+compressor (``fed_compress``), and, iff the kernel-eligibility dispatch
+``repro.kernels.ops.fused_sgd_eligible`` accepts the step (MCLR with
+``sampling="iid"``), the budgeted local-SGD loop (``fed_local_sgd``) — and
+falls back to the XLA autodiff implementation for any stage with no
+applicable kernel (non-MCLR local steps, the seed-exact ``"shuffle"``
 minibatch rule, silo streams), so the flag is safe to flip on every
 scenario.  On CPU the kernels run in interpret mode
 (``repro.kernels.ops.KERNEL_INTERPRET``).
@@ -95,6 +112,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import Aggregator, FedAvg
+from repro.models.fl_models import as_local_step
 from repro.obs.profiling import (STAGE_AGGREGATE, STAGE_GATHER,
                                  STAGE_LOCAL_SGD, STAGE_UPLOAD, stage)
 
@@ -370,8 +388,19 @@ class RoundEngine:
 
         return local_train
 
-    def _finish(self, global_params, params_k, n, n_iters):
+    @staticmethod
+    def _upload_weights(n, n_iters):
+        """Aggregation weights from sample counts and budgets: a client
+        contributes its sample count iff it trained at least one step."""
+        return n.astype(jnp.float32) * (n_iters > 0).astype(jnp.float32)
+
+    def _finish(self, global_params, params_k, weights):
         """Stage 4: screen (optional) + aggregate.
+
+        ``weights`` is the [K] f32 aggregation-weight vector (0 = no
+        upload) — packed rounds build it with :meth:`_upload_weights`, the
+        cross-silo stream round passes its caller-supplied weights, so
+        every flavour finishes through this one seam.
 
         Returns ``(new_global, uploaded_any, bad)`` where ``bad`` is the
         [K] bool mask of screen-rejected rows (all-False zeros when the
@@ -382,8 +411,6 @@ class RoundEngine:
         or distance-based — can be poisoned by it, and an all-faulty round
         degenerates to the existing no-participant no-op."""
         with stage(STAGE_AGGREGATE):
-            weights = n.astype(jnp.float32) \
-                * (n_iters > 0).astype(jnp.float32)
             if self.screening:
                 from repro.faults.screen import screen_uploads
                 params_k, weights, bad = screen_uploads(
@@ -396,7 +423,7 @@ class RoundEngine:
                 params_k, weights = jax.lax.optimization_barrier(
                     (params_k, weights))
             else:
-                bad = jnp.zeros(n_iters.shape, bool)
+                bad = jnp.zeros(weights.shape, bool)
             new_global = self.aggregator(params_k, global_params, weights)
             return new_global, weights.sum() > 0, bad
 
@@ -441,9 +468,12 @@ class RoundEngine:
     # implementation when no kernel applies
     # ------------------------------------------------------------------
     def _can_fuse_sgd(self, model, sampling: str) -> bool:
-        """The fused local-SGD kernel covers the paper's convex model with
-        iid minibatches; everything else keeps the XLA masked scan."""
-        return sampling == "iid" and getattr(model, "kind", None) == "mclr"
+        """Kernel-eligibility dispatch lives with the kernels
+        (``repro.kernels.ops.fused_sgd_eligible``): the fused local-SGD
+        kernel covers MCLR steps with iid minibatches; every other
+        ``LocalStep`` keeps the XLA autodiff scan."""
+        from repro.kernels.ops import fused_sgd_eligible
+        return fused_sgd_eligible(model, sampling)
 
     def _fused_sgd(self, global_params, x, y, n, n_iters, keys,
                    batch_size: int, max_iters: int):
@@ -480,6 +510,7 @@ class RoundEngine:
                 "fault injection / upload screening are packed-round "
                 "features; the padded seed round does not support them — "
                 "use make_packed_round/make_segment_fn")
+        model = as_local_step(model)
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         local_train = None if fuse_sgd else \
@@ -495,8 +526,8 @@ class RoundEngine:
                 params_k, losses = jax.vmap(
                     local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
                     global_params, x, y, mask, n, n_iters, keys)
-            new_global, any_up, _ = self._finish(global_params, params_k,
-                                                 n, n_iters)
+            new_global, any_up, _ = self._finish(
+                global_params, params_k, self._upload_weights(n, n_iters))
             return new_global, losses, any_up
 
         return self._jit_round(round_fn)
@@ -543,6 +574,7 @@ class RoundEngine:
         are excluded from compressed transmission (their residual rows stay
         bit-identical to the crash-twin run) and the post-transform stack
         is corrupted "on the wire" instead."""
+        model = as_local_step(model)
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         local_train = None if fuse_sgd else \
@@ -596,7 +628,8 @@ class RoundEngine:
                     params_k = self._inject_faults(global_params, params_k,
                                                    corrupt, uploading)
                 new_global, any_up, bad = self._finish(
-                    global_params, params_k, n, n_iters)
+                    global_params, params_k,
+                    self._upload_weights(n, n_iters))
                 if screening:
                     return new_global, losses, any_up, residual, bad
                 return new_global, losses, any_up, residual
@@ -611,8 +644,8 @@ class RoundEngine:
             if injecting:
                 params_k = self._inject_faults(global_params, params_k,
                                                corrupt, n_iters > 0)
-            new_global, any_up, bad = self._finish(global_params, params_k,
-                                                   n, n_iters)
+            new_global, any_up, bad = self._finish(
+                global_params, params_k, self._upload_weights(n, n_iters))
             if screening:
                 return new_global, losses, any_up, bad
             return new_global, losses, any_up
@@ -631,7 +664,8 @@ class RoundEngine:
         B * feat) instead of writing an O(K * max_n * feat) intermediate,
         which is what lets the scan driver clear 2x at paper scale.
         """
-        core = self._iid_sgd_core(model, batch_size, max_iters)
+        core = self._iid_sgd_core(as_local_step(model), batch_size,
+                                  max_iters)
 
         def train_cohort(global_params, flat_x, flat_y, offsets, lengths,
                          ids, n_iters, rng):
@@ -681,7 +715,8 @@ class RoundEngine:
                     params_k = self._inject_faults(global_params, params_k,
                                                    corrupt, uploading)
                 new_global, any_up, bad = self._finish(
-                    global_params, params_k, n, n_iters)
+                    global_params, params_k,
+                    self._upload_weights(n, n_iters))
                 if screening:
                     return new_global, losses, any_up, residual, bad
                 return new_global, losses, any_up, residual
@@ -696,8 +731,8 @@ class RoundEngine:
             if injecting:
                 params_k = self._inject_faults(global_params, params_k,
                                                corrupt, n_iters > 0)
-            new_global, any_up, bad = self._finish(global_params, params_k,
-                                                   n, n_iters)
+            new_global, any_up, bad = self._finish(
+                global_params, params_k, self._upload_weights(n, n_iters))
             if screening:
                 return new_global, losses, any_up, bad
             return new_global, losses, any_up
@@ -827,6 +862,7 @@ class RoundEngine:
         """
         from repro.core.selection import compact_lane_map
 
+        model = as_local_step(model)
         backend = self._resolve_backend(backend)
         fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model, sampling)
         direct_iid = backend == "xla" and sampling == "iid"
@@ -1036,8 +1072,8 @@ class RoundEngine:
             # contiguous block [s*C, (s+1)*C)), so the aggregation weights
             # match the replicated round exactly
             n = jnp.minimum(lengths.reshape(-1)[ids], max_n)
-            new_global, any_up, bad = self._finish(global_params, params_k,
-                                                   n, n_iters)
+            new_global, any_up, bad = self._finish(
+                global_params, params_k, self._upload_weights(n, n_iters))
             out = (new_global, losses, any_up)
             if compressing:
                 out = out + (residual,)
@@ -1468,8 +1504,9 @@ class RoundEngine:
                             params_k = self._inject_faults(
                                 params, params_k, corrupt, n_iters > 0)
                         n = jnp.minimum(sizes[ids], max_n)
-                        new_global, _, bad = self._finish(params, params_k,
-                                                          n, n_iters)
+                        new_global, _, bad = self._finish(
+                            params, params_k,
+                            self._upload_weights(n, n_iters))
                         if self.screening:
                             return new_global, residual, losses, bad
                         return new_global, residual, losses
@@ -1485,8 +1522,9 @@ class RoundEngine:
                             params_k = self._inject_faults(
                                 params, params_k, corrupt, n_iters > 0)
                         n = jnp.minimum(sizes[ids], max_n)
-                        new_global, _, bad = self._finish(params, params_k,
-                                                          n, n_iters)
+                        new_global, _, bad = self._finish(
+                            params, params_k,
+                            self._upload_weights(n, n_iters))
                         if self.screening:
                             return new_global, losses, bad
                         return new_global, losses
@@ -1521,15 +1559,22 @@ class RoundEngine:
         return segment
 
     # ------------------------------------------------------------------
-    def make_stream_round(self, loss_fn: Callable, max_steps: int,
+    def make_stream_round(self, loss_fn, max_steps: int,
                           backend: Optional[str] = None) -> Callable:
         """Cross-silo round over pre-batched per-silo streams.
 
+        ``loss_fn`` is either a bare ``loss(params, batch)`` callable (the
+        pre-LocalStep silo interface) or any ``LocalStep``-coercible model
+        — both land on the same scanned local-SGD body, and aggregation
+        runs through the shared :meth:`_finish` stage, so the silo path
+        rides the same screen/aggregator seam as the packed rounds.
+
         round_fn(global_params, batches, n_steps, weights) ->
-            (new_global_params, silo_mean_losses)
+            (new_global_params, silo_mean_losses[, bad])
           batches: pytree with leading axes [K, max_steps, ...]
           n_steps: [K] int32 masked local-step budgets
           weights: [K] f32 aggregation weights (0 = no upload)
+          bad:     [K] bool screen verdicts (only with ``screen_norm``)
 
         ``backend`` is accepted for interface uniformity; no fused kernel
         applies to arbitrary batch pytrees, so "pallas" falls back to the
@@ -1540,13 +1585,15 @@ class RoundEngine:
                 "upload compression needs the packed client axis for "
                 "residual state; the cross-silo stream round does not "
                 "support it")
-        if self.injecting or self.screening:
+        if self.injecting:
             raise ValueError(
-                "fault injection / upload screening target the packed "
-                "client-axis rounds; the cross-silo stream round calls "
-                "its aggregator directly and does not support them")
+                "fault injection targets the packed client-axis rounds; "
+                "the cross-silo stream round does not support it")
+        if not callable(loss_fn):
+            loss_fn = as_local_step(loss_fn).loss
         self._resolve_backend(backend)
         lr = self.lr
+        screening = self.screening
 
         def local_train(global_params, silo_batches, n_steps):
             def step(params, xs):
@@ -1571,6 +1618,10 @@ class RoundEngine:
         def round_fn(global_params, batches, n_steps, weights):
             params_k, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
                 global_params, batches, n_steps)
-            return self.aggregator(params_k, global_params, weights), losses
+            new_global, _, bad = self._finish(global_params, params_k,
+                                              weights)
+            if screening:
+                return new_global, losses, bad
+            return new_global, losses
 
         return self._jit_round(round_fn)

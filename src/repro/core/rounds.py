@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.aggregation import get_aggregator
 from repro.core.engine import RoundEngine
@@ -20,16 +21,19 @@ from repro.core.engine import RoundEngine
 def make_round_fn(model, lr: float, batch_size: int, max_iters: int,
                   prox_mu: float = 0.0, sampling: str = "shuffle",
                   backend: str = "xla") -> Callable:
-    """Build the jitted round function for an FLModel (loss/accuracy pair).
+    """Build the jitted round function for a ``LocalStep`` (any
+    loss/accuracy model — ``repro.models.fl_models``; plain FLModel
+    triples are coerced).
 
     round_fn(global_params, x, y, mask, n, n_iters, rng) ->
         (new_global_params, client_losses, uploaded_any)
       x: [K, M, ...]  padded client data;  mask: [K, M]
       n: [K] true sample counts;  n_iters: [K] masked local-SGD budget
     ``backend="pallas"`` selects the fused-kernel path where one applies:
-    on this padded interface that is the fused local-SGD kernel, which
-    needs ``sampling="iid"`` and an MCLR model (see RoundEngine; anything
-    else falls back to the XLA scan).
+    on this padded interface that is the fused local-SGD kernel, whose
+    eligibility (``repro.kernels.ops.fused_sgd_eligible``) needs
+    ``sampling="iid"`` and an MCLR step — any other LocalStep falls back
+    to the XLA autodiff scan.
     """
     engine = RoundEngine(lr=lr, aggregator=get_aggregator("fedavg"),
                          prox_mu=prox_mu, donate=False, backend=backend)
@@ -38,8 +42,16 @@ def make_round_fn(model, lr: float, batch_size: int, max_iters: int,
 
 
 def make_eval_fn(model) -> Callable:
+    """Jitted test-set eval over a LocalStep's (accuracy, loss) pair.
+
+    Steps without an ``accuracy`` (some adapters) report NaN accuracy and
+    the masked test loss — eval never dictates what a model must expose.
+    """
     @jax.jit
     def eval_fn(params, x, y):
         batch = {"x": x, "y": y}
-        return model.accuracy(params, batch), model.loss(params, batch)
+        acc = (model.accuracy(params, batch)
+               if getattr(model, "accuracy", None) is not None
+               else jnp.float32(jnp.nan))
+        return acc, model.loss(params, batch)
     return eval_fn

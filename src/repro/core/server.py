@@ -9,6 +9,16 @@ with error feedback; ``"none"`` is the identity), and AGGREGATE — and
 finally update history.  Baselines: FedAvg (fixed workload, stragglers
 upload nothing), FedProx (ideal partial work) and an oracle skyline.
 
+The model seam (ISSUE 9): the server trains any ``LocalStep``
+(``repro.models.fl_models``) — the paper's MCLR/LSTM, the MLP, or a real
+``repro/models`` architecture adapted by ``models.api.from_model`` — on
+the SAME packed/scan/mesh fast path; params are an arbitrary pytree and
+the engine flattens client updates to the ``[K, P]`` vector contract at
+the upload boundary, so compression, screening, every aggregator and the
+checkpoints are model-agnostic.  Select the model with ``cfg.model`` (or
+pass an instance); the fused pallas local-SGD kernel applies iff the step
+is MCLR with iid sampling, anything else takes XLA autodiff.
+
 Upload compression (ISSUE 6): with ``upload_compress="topk_q8"`` every
 uploading client's delta is top-k-sparsified (k = ceil(topk_frac *
 n_params)) and int8-quantized with a per-client scale; the discarded mass
@@ -198,6 +208,44 @@ RNG_IMPLS = ("numpy", "device")
 
 
 @dataclasses.dataclass
+class ComputeConfig:
+    """How the round executes: driver, backend, mesh and lane budget."""
+    backend: str = "xla"         # xla | pallas
+    driver: str = "host"         # host | scan
+    block_size: int = 16         # rounds per fused segment (driver="scan")
+    rng_impl: str = ""           # "" auto | numpy | device
+    mesh_shards: int = 0         # 0 = replicated clients
+    cohort_capacity: object = "full"
+
+
+@dataclasses.dataclass
+class CommConfig:
+    """What crosses the wire: the upload-transform stage."""
+    upload_compress: str = "none"   # none | topk_q8
+    topk_frac: float = 0.1
+
+
+@dataclasses.dataclass
+class RobustnessConfig:
+    """Fault injection and the defenses in front of aggregation."""
+    faults: object = None           # Optional[repro.faults.FaultModel]
+    upload_screen: str = "auto"     # auto | on | off
+    screen_norm_bound: float = 1e4
+    quarantine_threshold: float = 0.0
+    quarantine_rounds: int = 16
+    quarantine_min_tries: int = 3
+
+
+# grouped sub-config -> the flat ServerConfig fields it owns (the flat
+# spellings stay accepted for back-compat; see ServerConfig.__post_init__)
+_CONFIG_GROUPS = {
+    "compute": ComputeConfig,
+    "comm": CommConfig,
+    "robustness": RobustnessConfig,
+}
+
+
+@dataclasses.dataclass
 class ServerConfig:
     algo: str = "ira"            # ira | fassa | fedavg | fedprox
     n_selected: int = 10         # K
@@ -279,13 +327,104 @@ class ServerConfig:
     seed: int = 0
     selection_seed: int = 1234   # fixed across frameworks (paper §IV-A)
     eval_every: int = 1
+    model: object = None         # LocalStep selection: None = dataset
+                                 # default (mclr, or lstm on text), a name
+                                 # ("mclr"|"mlp"|"lstm"), an arch id from
+                                 # repro.configs (via models.api.from_model),
+                                 # or a LocalStep/FLModel instance —
+                                 # resolved against the dataset by
+                                 # models.fl_models.resolve_local_step
+    # grouped sub-configs (the coherent surface; ``None`` = derive from the
+    # flat fields above).  Passing a group sets its flat twins; passing a
+    # flat grouped kwarg without the group still works but warns.
+    compute: Optional[ComputeConfig] = None
+    comm: Optional[CommConfig] = None
+    robustness: Optional[RobustnessConfig] = None
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        """Reconcile grouped sub-configs with their flat twins.
+
+        For every grouped field the effective value is resolved as:
+
+          * group given, flat at its default          -> group value
+          * group given, flat explicitly set          -> flat value iff the
+            group left that field at ITS default (a ``dataclasses.replace``
+            on the flat spelling keeps working); conflicting explicit
+            values raise
+          * group omitted, flat explicitly set        -> flat value, with a
+            ``DeprecationWarning`` steering callers to the group
+          * neither                                   -> shared default
+
+        Afterwards the group attributes are (re)materialized from the
+        final flat values, so ``cfg.compute.driver`` and ``cfg.driver``
+        can never disagree.
+        """
+        import warnings
+
+        for group_name, group_cls in _CONFIG_GROUPS.items():
+            group = getattr(self, group_name)
+            deprecated = []
+            for f in dataclasses.fields(group_cls):
+                flat = getattr(self, f.name)
+                flat_default = f.default
+                flat_set = not _cfg_eq(flat, flat_default)
+                if group is not None:
+                    gval = getattr(group, f.name)
+                    gset = not _cfg_eq(gval, f.default)
+                    if flat_set and gset and not _cfg_eq(flat, gval):
+                        raise ValueError(
+                            f"ServerConfig: {f.name}={flat!r} conflicts "
+                            f"with {group_name}.{f.name}={gval!r} — set it "
+                            "in one place")
+                    if not flat_set:
+                        object.__setattr__(self, f.name, gval)
+                elif flat_set:
+                    deprecated.append(f.name)
+            if deprecated:
+                warnings.warn(
+                    f"flat ServerConfig kwarg(s) {deprecated} are "
+                    f"deprecated; group them in {group_name}="
+                    f"{group_cls.__name__}(...)",
+                    DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, group_name, group_cls(**{
+                f.name: getattr(self, f.name)
+                for f in dataclasses.fields(group_cls)}))
+
+
+def _cfg_eq(a, b) -> bool:
+    """Identity-tolerant equality for config values (FaultModel instances
+    may not define __eq__; None-vs-None and is-comparison cover them)."""
+    if a is b:
+        return True
+    try:
+        return bool(a == b)
+    except Exception:
+        return False
 
 
 class FedSAEServer:
-    def __init__(self, dataset: FederatedDataset, model, cfg: ServerConfig,
+    """The FedSAE training loop over any ``LocalStep`` model.
+
+    ``model`` may be omitted: it is then resolved from ``cfg.model`` (a
+    built-in step name, an arch id, or a LocalStep instance) against the
+    dataset by ``repro.models.fl_models.resolve_local_step`` — ``None``
+    picks the dataset default (mclr; lstm on text tasks).  An explicitly
+    passed model object wins over ``cfg.model``.  Every model runs the
+    same packed/scan/mesh fast path; only the fused pallas local-SGD
+    kernel is MCLR-specific (kernel-eligibility dispatch in
+    ``repro.kernels.ops``), everything else is pytree-generic."""
+
+    def __init__(self, dataset: FederatedDataset, model=None,
+                 cfg: Optional[ServerConfig] = None,
                  het: Optional[HeterogeneitySim] = None,
                  sink: Optional[Sink] = None,
                  telemetry: Optional[bool] = None):
+        from repro.models.fl_models import resolve_local_step
+
+        cfg = cfg if cfg is not None else ServerConfig()
+        model = resolve_local_step(
+            model if model is not None else cfg.model, dataset)
         if cfg.driver not in DRIVERS:
             raise ValueError(
                 f"unknown driver {cfg.driver!r}; choose from {DRIVERS}")

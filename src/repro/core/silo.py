@@ -6,6 +6,15 @@ The local workload unit generalizes from "epochs" to "local steps" (paper
 §IV-A allows fractional epochs == iterations).  Local training is a masked
 ``lax.scan`` vmapped over silos — identical semantics to core.rounds but for
 arbitrary batch pytrees, and pjit-able on a mesh (silos shard over `data`).
+
+Since ISSUE 9 the silo path rides the same ``LocalStep`` seam as the
+packed rounds: a ``Model`` is wrapped into a LocalStep (its ``train_loss``
+scalar), ``RoundEngine.make_stream_round`` trains it, and aggregation —
+including the optional upload screen — runs through the engine's shared
+``_finish`` stage, so the silo path is no longer a separate pipeline.
+Cross-DEVICE federation of the same architectures (packed data, scan
+driver, mesh, compression) goes through ``models.api.from_model`` +
+``FedSAEServer`` instead.
 """
 from __future__ import annotations
 
@@ -48,8 +57,19 @@ class SiloFedSAE:
     def __init__(self, model, n_silos: int, lr: float = 5e-3,
                  max_steps: int = 16, U: float = 2.0, seed: int = 0,
                  aggregator: str = "fedavg", sink: Optional[Sink] = None,
-                 **agg_kwargs):
+                 screen_norm: Optional[float] = None, **agg_kwargs):
+        from repro.models.fl_models import LocalStep, as_local_step
+
+        if hasattr(model, "train_loss"):
+            # repro.models.api.Model -> LocalStep over its scalar loss
+            step = LocalStep(
+                init_params=model.init,
+                loss=lambda p, b: model.train_loss(p, b)[0],
+                name=getattr(getattr(model, "cfg", None), "name", None))
+        else:
+            step = as_local_step(model)
         self.model = model
+        self.step = step
         self.K = n_silos
         self.max_steps = max_steps
         self.U = U
@@ -59,11 +79,11 @@ class SiloFedSAE:
         self.steps_scale = max_steps / 10.0
         self.L = np.full(n_silos, 1.0)
         self.H = np.full(n_silos, 2.0)
-        self.params = model.init(jax.random.PRNGKey(seed))
-        loss_fn = lambda p, b: model.train_loss(p, b)[0]
+        self.params = step.init_params(jax.random.PRNGKey(seed))
         self.engine = RoundEngine(
-            lr=lr, aggregator=get_aggregator(aggregator, **agg_kwargs))
-        self.round_fn = self.engine.make_stream_round(loss_fn, max_steps)
+            lr=lr, aggregator=get_aggregator(aggregator, **agg_kwargs),
+            screen_norm=screen_norm)
+        self.round_fn = self.engine.make_stream_round(step, max_steps)
         self.stats: Dict[str, list] = {"loss": [], "dropout": [],
                                        "uploaded_steps": []}
         # telemetry (ISSUE 7): the silo path emits through the same
@@ -82,13 +102,16 @@ class SiloFedSAE:
             self.L, self.H, E_true, U=self.U, h_cap=float(self.max_steps))
         n_steps = np.round(e_eff).astype(np.int32)
         weights = sizes.astype(np.float32) * (n_steps > 0)
-        self.params, losses = self.round_fn(
+        out = self.round_fn(
             self.params, batches, jnp.asarray(n_steps),
             jnp.asarray(weights))
+        self.params, losses = out[0], out[1]
+        screened = (float(np.asarray(out[2]).sum())
+                    if self.engine.screening else None)
         self.stats["loss"].append(float(np.mean(np.asarray(losses))))
         self.stats["dropout"].append(float((outcome == pred.DROPPED).mean()))
         self.stats["uploaded_steps"].append(float(e_eff.mean()))
-        self.sink.emit(record_from_row(self.round_idx, {
+        row = {
             "wall_time_s": time.perf_counter() - t_start,
             "train_loss": self.stats["loss"][-1],
             "dropout": self.stats["dropout"][-1],
@@ -98,6 +121,9 @@ class SiloFedSAE:
             "true_workload": float(E_true.mean()),
             "ids": np.arange(self.K),
             "client_uploaded": (n_steps > 0).astype(np.int32),
-        }))
+        }
+        if screened is not None:
+            row["screened"] = screened
+        self.sink.emit(record_from_row(self.round_idx, row))
         self.round_idx += 1
         return self.stats

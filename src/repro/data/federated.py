@@ -11,6 +11,14 @@ synthetic generators that match the paper's published *statistics*:
 
 Each client k holds (x_k, y_k) numpy arrays; a shared IID test set evaluates
 the global model each round, as in the paper.
+
+The gathered per-client minibatch the engine feeds every ``LocalStep`` is
+``{"x": [B, ...], "y": [B], "mask": [B]}`` — features (float for the
+image-like tasks, int32 token sequences for sent140), labels, and sample
+validity (padding rows are mask 0 and must contribute zero loss).  That
+dict is the whole data-side contract a model has to speak (ISSUE 9);
+``models.api.from_model`` adapts it to the causal-LM objective by deriving
+inputs/targets from the token sequences.
 """
 from __future__ import annotations
 

@@ -137,6 +137,20 @@ def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, lr: float,
                                   interpret=KERNEL_INTERPRET)
 
 
+def fused_sgd_eligible(step, sampling: str) -> bool:
+    """Kernel-eligibility dispatch for the LocalStep seam.
+
+    The fused pallas local-SGD kernel implements exactly one step family —
+    masked budgeted MCLR with iid minibatch sampling (its softmax-xent
+    gradients are computed in closed form inside the kernel).  Any other
+    ``LocalStep`` (mlp, lstm, the ``from_model`` architectures) or any
+    other sampling takes the engine's generic XLA autodiff path
+    automatically; backend="pallas" then still fuses the cohort gather and
+    the upload compressor, which are model-agnostic.
+    """
+    return sampling == "iid" and getattr(step, "kind", None) == "mclr"
+
+
 @annotate("fed.upload_transform.pallas")
 def fed_compress_topk_q8(ef, k: int):
     """Fused top-k + int8 upload compression over per-client error-feedback

@@ -8,6 +8,11 @@
   PYTHONPATH=src python -m repro.launch.fl_train --dataset femnist \
       --algo ira --rounds 64 --driver scan --block-size 16 --sampling iid
 
+  # a real architecture as the per-client local step, on the packed/scan/
+  # mesh fast path with compressed uploads (LocalStep seam, ISSUE 9):
+  PYTHONPATH=src python -m repro.launch.fl_train --dataset sent140 \
+      --model llama3.2-3b --driver scan --shards 2 --compress topk_q8
+
   # cross-silo FL over a production architecture (smoke scale on CPU):
   PYTHONPATH=src python -m repro.launch.fl_train --silo-arch llama3.2-3b \
       --silos 4 --rounds 5
@@ -27,11 +32,12 @@ force_from_env()
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FedSAEServer, HeterogeneitySim, ServerConfig
+from repro.core import (CommConfig, ComputeConfig, FedSAEServer,
+                        HeterogeneitySim, RobustnessConfig, ServerConfig)
 from repro.core.silo import SiloFedSAE
 from repro.data.federated import DATASETS
 from repro.models.api import build_model
-from repro.models.fl_models import make_lstm, make_mclr
+from repro.models.fl_models import LOCAL_STEPS
 from repro.obs import JsonlSink, trace_if
 
 
@@ -92,12 +98,16 @@ def run_flat(args):
         "sent140": lambda: make(n_clients=60, total=3000, vocab=300,
                                 max_size=100),
     }[args.dataset]()
+    # lr defaults follow the dataset's classical model; a real architecture
+    # (--model <arch id>) trains the causal LM and needs a small step
     if args.dataset == "sent140":
-        model = make_lstm(vocab=int(max(x.max() for x in ds.clients_x)) + 1)
         lr = 0.3
     else:
-        model = make_mclr(ds.clients_x[0].shape[1], ds.n_classes)
         lr = 0.03 if args.dataset != "synthetic" else 0.01
+    if args.model is not None and args.model not in LOCAL_STEPS:
+        lr = 5e-3
+    if args.lr is not None:
+        lr = args.lr
     cfg = ServerConfig(algo=args.algo, rounds=args.rounds, lr=lr,
                        n_selected=min(10, ds.n_clients),
                        al_rounds=args.al_rounds, h_cap=24.0,
@@ -107,19 +117,23 @@ def run_flat(args):
                        n_byzantine=args.n_byzantine,
                        selection=args.selection,
                        sampling=args.sampling,
-                       backend=args.backend,
-                       driver=args.driver,
-                       block_size=args.block_size,
-                       mesh_shards=args.shards,
-                       cohort_capacity=args.cohort_capacity,
-                       upload_compress=args.compress,
-                       topk_frac=args.topk_frac,
-                       faults=build_faults(args),
-                       upload_screen=args.screen,
-                       screen_norm_bound=args.screen_norm_bound,
-                       quarantine_threshold=args.quarantine_threshold,
-                       quarantine_rounds=args.quarantine_rounds,
-                       quarantine_min_tries=args.quarantine_min_tries)
+                       model=args.model,
+                       compute=ComputeConfig(
+                           backend=args.backend,
+                           driver=args.driver,
+                           block_size=args.block_size,
+                           mesh_shards=args.shards,
+                           cohort_capacity=args.cohort_capacity),
+                       comm=CommConfig(
+                           upload_compress=args.compress,
+                           topk_frac=args.topk_frac),
+                       robustness=RobustnessConfig(
+                           faults=build_faults(args),
+                           upload_screen=args.screen,
+                           screen_norm_bound=args.screen_norm_bound,
+                           quarantine_threshold=args.quarantine_threshold,
+                           quarantine_rounds=args.quarantine_rounds,
+                           quarantine_min_tries=args.quarantine_min_tries))
     resume_round = None
     if args.resume:
         from repro.checkpoint import list_checkpoints
@@ -131,8 +145,8 @@ def run_flat(args):
                              f"{args.checkpoint_dir!r}")
         resume_round = ckpts[-1][0]
     sink = make_sink(args, resume_round=resume_round, path="flat",
-                     dataset=args.dataset, algo=args.algo)
-    srv = FedSAEServer(ds, model, cfg,
+                     dataset=args.dataset, algo=args.algo, model=args.model)
+    srv = FedSAEServer(ds, cfg=cfg,
                        het=HeterogeneitySim(ds.n_clients, seed=cfg.seed),
                        sink=sink)
     with trace_if(args.trace_dir):
@@ -220,6 +234,15 @@ def main():
     ap.add_argument("--selection", default="random",
                     choices=("random", "active", "loss_proportional"),
                     help="cohort selection after the AL warm-up rounds")
+    ap.add_argument("--model", default=None,
+                    help="local step trained on each client: mclr | mlp | "
+                         "lstm, or a repro.configs arch id (e.g. "
+                         "llama3.2-3b) adapted via models.api.from_model "
+                         "(text datasets only; trains the causal LM on the "
+                         "client token streams).  Default: lstm for sent140, "
+                         "mclr elsewhere — bitwise the pre-ISSUE-9 runs")
+    ap.add_argument("--lr", type=float, default=None,
+                    help="override the dataset/model default learning rate")
     ap.add_argument("--sampling", default="shuffle",
                     choices=("shuffle", "iid"),
                     help="local minibatch rule: shuffle reproduces the seed "

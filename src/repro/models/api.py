@@ -98,6 +98,69 @@ def build_model(cfg: ArchConfig) -> Model:
     )
 
 
+def from_model(cfg_or_model, lm_seq_len: Optional[int] = None):
+    """Adapt a real ``repro/models`` architecture to the federated
+    ``LocalStep`` seam (``repro.models.fl_models``).
+
+    The federated engine hands every client batch as ``{"x": tokens
+    [B, S] int, "y": class labels [B], "mask": [B] row validity}``; this
+    adapter turns it into the causal-LM objective the architectures train
+    with — ``tokens[:, :-1]`` predicts ``tokens[:, 1:]`` and the row mask
+    broadcasts to a [B, S-1] token mask (``decoder.train_loss`` already
+    takes a masked mean), so padded gather rows contribute exactly zero.
+    ``y`` is ignored: the federation trains the LM, not the classifier
+    head.  Accuracy is teacher-forced next-token accuracy over the same
+    masked positions.
+
+    Decoder-only architectures only (transformer / mamba / MoE mixers all
+    route through ``repro.models.decoder``); the params pytree flows
+    through the engine's ``[K, P]`` ravel contract unchanged, so scan
+    driver, mesh sharding, upload compression, screening and checkpoints
+    all apply.
+    """
+    from repro.models import layers as L
+    from repro.models.fl_models import LocalStep
+
+    if isinstance(cfg_or_model, Model):
+        model, cfg = cfg_or_model, cfg_or_model.cfg
+    else:
+        cfg = cfg_or_model
+        model = build_model(cfg)
+    if cfg.is_encoder_decoder:
+        raise ValueError(
+            f"from_model supports decoder-only architectures; {cfg.name} "
+            "is encoder-decoder")
+
+    def lm_batch(batch):
+        tokens = batch["x"].astype(jnp.int32)
+        if lm_seq_len is not None:
+            tokens = tokens[:, :lm_seq_len]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        row = batch.get("mask")
+        tok_mask = jnp.ones(labels.shape, bool) if row is None else \
+            jnp.broadcast_to((row > 0)[:, None], labels.shape)
+        return inputs, labels, tok_mask
+
+    def loss(params, batch):
+        inputs, labels, tok_mask = lm_batch(batch)
+        value, _ = model.train_loss(
+            params, {"tokens": inputs, "labels": labels, "mask": tok_mask})
+        return value
+
+    def accuracy(params, batch):
+        inputs, labels, tok_mask = lm_batch(batch)
+        B, S = inputs.shape
+        h = decoder.embed_inputs(params, cfg, {"tokens": inputs})
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        h, _, _ = decoder.forward(params, cfg, h, positions, "train")
+        pred = jnp.argmax(L.logits_fn(params["embeddings"], cfg, h), -1)
+        hit = (pred == labels) * tok_mask
+        return hit.sum() / jnp.maximum(tok_mask.sum(), 1)
+
+    return LocalStep(init_params=model.init, loss=loss, accuracy=accuracy,
+                     name=f"model:{cfg.name}")
+
+
 def abstract_params(model: Model):
     """ShapeDtypeStruct pytree of the params (no allocation)."""
     return jax.eval_shape(model.init, jax.random.PRNGKey(0))

@@ -1,10 +1,25 @@
-"""The paper's own model families: multinomial logistic regression (MCLR)
-and an LSTM sentiment classifier — used by the FedSAE reproduction
-experiments (FEMNIST / MNIST / Synthetic(1,1) / Sent140).
+"""Local-step models for the federated round engine.
 
-Pure-functional; every model exposes ``init(rng)``, ``loss(params, batch)``
-and ``accuracy(params, batch)``, which is the interface the federated round
-consumes (the big architectures wrap their train_loss into the same shape).
+This module owns the engine's model seam — the ``LocalStep`` protocol —
+plus the paper's own model families built on it: multinomial logistic
+regression (MCLR, the convex stand-in used by the FedSAE experiments on
+FEMNIST / MNIST / Synthetic(1,1)), a one-hidden-layer MLP, and an LSTM
+sentiment classifier (Sent140).
+
+A ``LocalStep`` is pure-functional: ``init_params(rng)`` builds a param
+*pytree* (any nesting; the engine never assumes a flat layout),
+``loss(params, batch)`` maps that pytree plus a padded batch (``x``/``y``
+plus a 0/1 ``mask`` over padded rows) to a masked-mean scalar, and the
+optional ``kind`` tag names model families the kernel layer has a fused
+implementation for.  ``repro.core.engine`` differentiates ``loss`` with
+``jax.grad`` and tree-maps the SGD update, so any pytree works; the flat
+``[K, P]`` vector view required by compression / screening / aggregation
+is produced at the upload boundary by ``repro.core.compression``'s ravel
+contract, not here.
+
+The big architectures under ``repro/models`` join the same seam through
+``repro.models.api.from_model`` which wraps a causal-LM ``train_loss``
+into this shape.
 """
 from __future__ import annotations
 
@@ -12,6 +27,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 # ---------------------------------------------------------------------------
@@ -98,38 +114,211 @@ def lstm_accuracy(params, batch):
 
 
 # ---------------------------------------------------------------------------
-# uniform FL-model facade
+# MLP — first non-convex built-in step (exercises the generic pytree path)
 # ---------------------------------------------------------------------------
 
 
-class FLModel:
-    """What core.federated consumes: init/loss/accuracy triple.
+def mlp_init(rng, n_features: int, hidden: int, n_classes: int):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w1": jax.random.normal(k1, (n_features, hidden)) * n_features ** -0.5,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, n_classes)) * hidden ** -0.5,
+        "b2": jnp.zeros((n_classes,)),
+    }
 
-    ``kind`` tags model families the kernel layer has a fused implementation
-    for (RoundEngine backend="pallas" fuses local SGD when kind == "mclr";
-    anything else falls back to the XLA scan).
+
+def mlp_logits(params, x):
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, batch):
+    logits = mlp_logits(params, batch["x"])
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    mask = batch.get("mask", jnp.ones_like(nll))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def mlp_accuracy(params, batch):
+    pred = jnp.argmax(mlp_logits(params, batch["x"]), axis=-1)
+    mask = batch.get("mask", jnp.ones(pred.shape))
+    return ((pred == batch["y"]) * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# LocalStep — the engine's model seam
+# ---------------------------------------------------------------------------
+
+
+class LocalStep:
+    """The model protocol ``RoundEngine`` consumes.
+
+    * ``init_params(rng)`` — build the parameter pytree (any nesting).
+    * ``loss(params, batch)`` — masked-mean scalar loss; ``batch`` carries
+      ``x``/``y`` (or tokens) plus a 0/1 ``mask`` over padded rows.  The
+      engine takes ``jax.grad`` of this and tree-maps the SGD update, so
+      the step never writes its own training loop.
+    * ``accuracy(params, batch)`` — optional; only evaluation uses it.
+    * ``kind`` — tags model families the kernel layer has a fused
+      implementation for (``repro.kernels.ops.fused_sgd_eligible``:
+      backend="pallas" fuses local SGD iff kind == "mclr"; every other
+      step takes the XLA autodiff path automatically).
+
+    ``init`` is kept as an alias of ``init_params`` for the pre-LocalStep
+    callers.  ``loss_and_grad`` / ``local_sgd_step`` are derived helpers —
+    override them only if a step has a cheaper hand-fused form.
     """
 
-    def __init__(self, init, loss, accuracy, kind=None):
-        self.init = init
+    def __init__(self, init_params, loss, accuracy=None, kind=None,
+                 name=None):
+        self.init_params = init_params
+        self.init = init_params  # back-compat alias (FLModel era)
         self.loss = loss
         self.accuracy = accuracy
         self.kind = kind
+        self.name = name
+
+    def loss_and_grad(self, params, batch):
+        return jax.value_and_grad(self.loss)(params, batch)
+
+    def local_sgd_step(self, params, batch, lr):
+        loss, grads = self.loss_and_grad(params, batch)
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new, loss
+
+    def param_treedef(self, rng=None):
+        """Treedef of the param pytree — the fixed flatten ordering the
+        ``[K, P]`` upload contract (``repro.core.compression``) relies on."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        shapes = jax.eval_shape(self.init_params, rng)
+        return jax.tree.structure(shapes)
+
+    def n_params(self, rng=None) -> int:
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        shapes = jax.eval_shape(self.init_params, rng)
+        return sum(int(np.prod(s.shape, dtype=np.int64))
+                   for s in jax.tree.leaves(shapes))
+
+
+class FLModel(LocalStep):
+    """Pre-LocalStep facade (init/loss/accuracy triple); kept as a thin
+    subclass so every existing ``make_mclr``/``make_lstm`` model *is* a
+    ``LocalStep`` — the mclr fast path stays literally the same traced
+    functions."""
+
+    def __init__(self, init, loss, accuracy, kind=None):
+        super().__init__(init_params=init, loss=loss, accuracy=accuracy,
+                         kind=kind)
+
+
+def as_local_step(obj) -> LocalStep:
+    """Coerce engine inputs to the LocalStep seam.
+
+    Accepts a ``LocalStep`` (returned unchanged — identity matters for the
+    bitwise mclr parity guarantee) or any duck-typed object exposing
+    ``loss`` plus ``init_params``/``init``.
+    """
+    if isinstance(obj, LocalStep):
+        return obj
+    loss = getattr(obj, "loss", None)
+    init = getattr(obj, "init_params", None) or getattr(obj, "init", None)
+    if callable(loss) and callable(init):
+        return LocalStep(init_params=init, loss=loss,
+                         accuracy=getattr(obj, "accuracy", None),
+                         kind=getattr(obj, "kind", None),
+                         name=getattr(obj, "name", None))
+    raise TypeError(
+        f"cannot interpret {obj!r} as a LocalStep: need callable "
+        "loss(params, batch) and init_params(rng)/init(rng)")
 
 
 def make_mclr(n_features: int, n_classes: int) -> FLModel:
-    return FLModel(
+    m = FLModel(
         init=lambda rng: mclr_init(rng, n_features, n_classes),
         loss=mclr_loss,
         accuracy=mclr_accuracy,
         kind="mclr",
     )
+    m.name = "mclr"
+    return m
+
+
+def make_mlp(n_features: int, n_classes: int, hidden: int = 64) -> FLModel:
+    m = FLModel(
+        init=lambda rng: mlp_init(rng, n_features, hidden, n_classes),
+        loss=mlp_loss,
+        accuracy=mlp_accuracy,
+    )
+    m.name = "mlp"
+    return m
 
 
 def make_lstm(vocab: int, n_classes: int = 2, embed: int = 32,
               hidden: int = 64) -> FLModel:
-    return FLModel(
+    m = FLModel(
         init=lambda rng: lstm_init(rng, vocab, embed, hidden, n_classes),
         loss=lstm_loss,
         accuracy=lstm_accuracy,
     )
+    m.name = "lstm"
+    return m
+
+
+# ---------------------------------------------------------------------------
+# registry: resolve ``ServerConfig.model`` / ``fl_train --model`` specs
+# ---------------------------------------------------------------------------
+
+# name -> builder(dataset) for the built-in steps; arch_ids from
+# repro.configs (e.g. "llama3.2-3b") resolve through models.api.from_model.
+LOCAL_STEPS = ("mclr", "mlp", "lstm")
+
+
+def _dataset_dims(dataset):
+    x0 = dataset.clients_x[0]
+    n_features = int(x0.shape[-1]) if x0.ndim > 1 else 1
+    vocab = None
+    if getattr(dataset, "task", "classification") == "text":
+        vocab = int(max(int(x.max()) for x in dataset.clients_x)) + 1
+    return n_features, int(dataset.n_classes), vocab
+
+
+def resolve_local_step(spec, dataset) -> LocalStep:
+    """Resolve a model spec to a ``LocalStep`` sized for ``dataset``.
+
+    ``spec`` may be ``None`` (dataset default: lstm for text tasks, mclr
+    otherwise — the pre-LocalStep behaviour), a built-in name from
+    ``LOCAL_STEPS``, an arch id known to ``repro.configs.get_config``
+    (wrapped by ``models.api.from_model``), or an already-built
+    LocalStep/FLModel (returned unchanged).
+    """
+    if spec is not None and not isinstance(spec, str):
+        return as_local_step(spec)
+    n_features, n_classes, vocab = _dataset_dims(dataset)
+    text = vocab is not None
+    if spec is None:
+        spec = "lstm" if text else "mclr"
+    if spec == "mclr":
+        return make_mclr(n_features, n_classes)
+    if spec == "mlp":
+        return make_mlp(n_features, n_classes)
+    if spec == "lstm":
+        if not text:
+            raise ValueError("model='lstm' needs a text (token) dataset")
+        return make_lstm(vocab)
+    # arch id -> smoke config -> causal-LM LocalStep (lazy import: keeps
+    # fl_models free of the heavy arch modules)
+    from repro.configs import get_config
+    from repro.models.api import from_model
+
+    cfg = get_config(spec, smoke=True)
+    if not text:
+        raise ValueError(
+            f"model={spec!r} is a token-sequence architecture; use a text "
+            "dataset (e.g. sent140)")
+    if cfg.vocab_size < vocab:
+        raise ValueError(
+            f"arch vocab {cfg.vocab_size} < dataset vocab {vocab}")
+    return from_model(cfg)

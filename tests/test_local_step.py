@@ -1,0 +1,400 @@
+"""LocalStep model seam (ISSUE 9): the pytree-generic round engine.
+
+Four contracts under test:
+
+  * ``model="mclr"`` is the pre-seam fast path, bitwise — same params,
+    history state and telemetry trace as passing the classic FLModel
+    object, across drivers x backends x shard counts x compression.
+    (The seam guarantees this by construction: ``as_local_step`` is the
+    identity on LocalStep instances, so the engine compiles literally
+    the same traced functions — these tests pin the construction.)
+  * non-MCLR pytree models (the built-in MLP) ride every engine feature:
+    host == scan parity, compression, screening, and bitwise
+    kill/resume through msgpack checkpoints.
+  * the ``LocalStep`` protocol itself: coercion, resolution by name,
+    the ``from_model`` adapter over real ``repro/models`` architectures,
+    and kernel-eligibility dispatch.
+  * the grouped ``ServerConfig`` surface (ComputeConfig / CommConfig /
+    RobustnessConfig): flat spellings keep working but deprecate, and
+    conflicting explicit values are an error, not a silent pick.
+"""
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CommConfig, ComputeConfig, FedSAEServer,
+                        HeterogeneitySim, RobustnessConfig, ServerConfig)
+from repro.core.compression import flatten_global, n_params_of, unflatten_rows
+from repro.data.federated import make_femnist_like, make_sent140_like
+from repro.kernels.ops import fused_sgd_eligible
+from repro.models.fl_models import (LocalStep, as_local_step, make_lstm,
+                                    make_mclr, make_mlp, resolve_local_step)
+
+N_CLIENTS = 24
+DIM = 16
+BLOCK = 3  # block_size used by every _cfg below
+N_DEVICES = len(jax.devices())
+
+needs_devices = lambda n: pytest.mark.skipif(  # noqa: E731
+    N_DEVICES < n, reason=f"needs {n} (simulated) devices, have {N_DEVICES};"
+    " set REPRO_FORCE_HOST_DEVICES / XLA_FLAGS before jax initializes")
+
+
+@pytest.fixture(scope="module")
+def fed():
+    ds = make_femnist_like(n_clients=N_CLIENTS, total=1400, dim=DIM,
+                           max_size=60)
+    return ds
+
+
+@pytest.fixture(scope="module")
+def text_fed():
+    return make_sent140_like(n_clients=N_CLIENTS, total=1200, vocab=260,
+                             max_size=60)
+
+
+def _cfg(model=None, driver="scan", backend="xla", compress="none",
+         shards=0, **over):
+    kw = dict(algo="ira", n_selected=8, rounds=6, h_cap=4.0,
+              fixed_epochs=4.0, sampling="iid", model=model,
+              compute=ComputeConfig(
+                  driver=driver, backend=backend, block_size=3,
+                  mesh_shards=shards,
+                  rng_impl="device" if driver == "host" else ""),
+              comm=CommConfig(upload_compress=compress))
+    kw.update(over)
+    return ServerConfig(**kw)
+
+
+def _run(ds, cfg, model=None):
+    srv = FedSAEServer(ds, model, cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=0))
+    srv.run()
+    return srv
+
+
+def _assert_servers_bitwise(a, b, records=True):
+    """Same params / Ira state / cohorts bitwise; with ``records`` also
+    the full telemetry trace.  Cross-driver comparisons pass
+    ``records=False``: host evaluates every round while scan only
+    evaluates at block boundaries, so the per-round acc/test_loss slots
+    legitimately differ in *cadence* (not value) between drivers."""
+    assert jax.tree_util.tree_structure(a.params) == \
+        jax.tree_util.tree_structure(b.params)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(a.L, b.L)
+    np.testing.assert_array_equal(a.H, b.H)
+    np.testing.assert_array_equal(a.theta, b.theta)
+    np.testing.assert_array_equal(a.values.v, b.values.v)
+    for c1, c2 in zip(a.cohorts, b.cohorts):
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    if not records:
+        return
+    ra, rb = a._records.records, b._records.records
+    assert len(ra) == len(rb)
+    for x, y in zip(ra, rb):
+        dx, dy = json.loads(x.to_json()), json.loads(y.to_json())
+        dx.pop("wall_time_s", None)
+        dy.pop("wall_time_s", None)
+        assert dx == dy, f"record diverged at round {dx.get('round')}"
+
+
+def _assert_histories_match(a, b):
+    """Cross-driver history contract: every counter bitwise, losses to
+    float tolerance (scan's fused blocks reduce in a different order),
+    and eval metrics equal wherever both drivers evaluated."""
+    for k in ("dropout", "assigned", "uploaded", "true_workload",
+              "overflowed", "dropped"):
+        np.testing.assert_array_equal(np.asarray(a.history[k]),
+                                      np.asarray(b.history[k]), err_msg=k)
+    np.testing.assert_allclose(np.asarray(a.history["train_loss"]),
+                               np.asarray(b.history["train_loss"]),
+                               rtol=1e-5)
+    for k in ("acc", "test_loss"):
+        x = np.asarray(a.history[k], dtype=np.float64)
+        y = np.asarray(b.history[k], dtype=np.float64)
+        # scan only evaluates at block boundaries (and carries the last
+        # value forward in between) — compare where it truly evaluated
+        boundaries = [i for i in range(len(x)) if (i + 1) % BLOCK == 0]
+        assert boundaries, k
+        np.testing.assert_allclose(x[boundaries], y[boundaries],
+                                   rtol=1e-6, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# mclr is bitwise the pre-seam fast path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("driver,backend,compress", [
+    ("host", "xla", "none"),
+    ("scan", "xla", "none"),
+    ("scan", "xla", "topk_q8"),
+    ("scan", "pallas", "none"),
+    ("scan", "pallas", "topk_q8"),
+])
+def test_mclr_spec_bitwise_matches_model_object(fed, driver, backend,
+                                                compress):
+    """model="mclr" (resolved through the seam) == the classic FLModel
+    object (the pre-ISSUE-9 call convention), bitwise: params, Ira state,
+    cohorts and the telemetry trace."""
+    classic = _run(fed, _cfg(driver=driver, backend=backend,
+                             compress=compress),
+                   model=make_mclr(DIM, fed.n_classes))
+    named = _run(fed, _cfg(model="mclr", driver=driver, backend=backend,
+                           compress=compress))
+    _assert_servers_bitwise(classic, named)
+
+
+@needs_devices(2)
+@pytest.mark.parametrize("compress", ["none", "topk_q8"])
+def test_mclr_spec_bitwise_on_mesh(fed, compress):
+    """Same contract with the client axis sharded over a 2-way mesh."""
+    classic = _run(fed, _cfg(shards=2, compress=compress),
+                   model=make_mclr(DIM, fed.n_classes))
+    named = _run(fed, _cfg(model="mclr", shards=2, compress=compress))
+    _assert_servers_bitwise(classic, named)
+
+
+def test_default_model_resolution_is_unchanged(fed, text_fed):
+    """model=None keeps the historical defaults: mclr on feature
+    datasets, lstm (dataset vocab) on sent140 — bitwise."""
+    legacy = _run(fed, _cfg(), model=make_mclr(DIM, fed.n_classes))
+    defaulted = _run(fed, _cfg())
+    _assert_servers_bitwise(legacy, defaulted)
+
+    vocab = int(max(x.max() for x in text_fed.clients_x)) + 1
+    legacy_t = _run(text_fed, _cfg(rounds=2),
+                    model=make_lstm(vocab=vocab))
+    defaulted_t = _run(text_fed, _cfg(rounds=2))
+    _assert_servers_bitwise(legacy_t, defaulted_t)
+
+
+# ---------------------------------------------------------------------------
+# non-MCLR pytree models ride the whole engine
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_host_matches_scan_bitwise(fed):
+    """The MLP's 4-leaf pytree params take the XLA-autodiff local step on
+    both drivers; host (device rng) == scan bitwise."""
+    host = _run(fed, _cfg(model="mlp", driver="host"))
+    scan = _run(fed, _cfg(model="mlp", driver="scan"))
+    _assert_servers_bitwise(host, scan, records=False)
+    _assert_histories_match(host, scan)
+
+
+def test_mlp_trains_with_compression_and_screen(fed):
+    """Compression + the upload screen compose with pytree params: the
+    run finishes finite and the screen stays quiet on honest uploads."""
+    srv = _run(fed, _cfg(model="mlp", compress="topk_q8",
+                         robustness=RobustnessConfig(upload_screen="on")))
+    for leaf in jax.tree.leaves(srv.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    screened = [r.screened for r in srv._records.records
+                if r.screened is not None]
+    assert screened and sum(screened) == 0
+
+
+@needs_devices(2)
+def test_mlp_scan_on_mesh_matches_replicated(fed):
+    """Sharding the client axis must not change MLP results (masked
+    full-K parity mode)."""
+    flat = _run(fed, _cfg(model="mlp"))
+    sharded = _run(fed, _cfg(model="mlp", shards=2))
+    _assert_servers_bitwise(flat, sharded)
+
+
+@pytest.mark.parametrize("driver", ["host", "scan"])
+def test_mlp_kill_and_resume_is_bitwise(fed, tmp_path, driver):
+    """msgpack checkpoints round-trip the MLP's nested pytree: a killed
+    run resumed in a fresh server is bitwise the uninterrupted one."""
+    full = _run(fed, _cfg(model="mlp", driver=driver))
+
+    d = str(tmp_path / driver)
+    part = FedSAEServer(fed, cfg=_cfg(model="mlp", driver=driver),
+                        het=HeterogeneitySim(fed.n_clients, seed=0))
+    part.run(rounds=3, checkpoint_dir=d, checkpoint_every=3)
+
+    resumed = FedSAEServer(fed, cfg=_cfg(model="mlp", driver=driver),
+                           het=HeterogeneitySim(fed.n_clients, seed=0))
+    resumed.run(checkpoint_dir=d, checkpoint_every=3, resume=True)
+    _assert_servers_bitwise(full, resumed)
+
+
+# ---------------------------------------------------------------------------
+# the LocalStep protocol: coercion, resolution, flatten contract, dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_local_step_protocol_methods():
+    step = make_mlp(DIM, 5, hidden=8)
+    rng = jax.random.PRNGKey(0)
+    p = step.init_params(rng)
+    batch = {"x": jnp.ones((4, DIM)), "y": jnp.zeros((4,), jnp.int32),
+             "mask": jnp.ones((4,))}
+    value, grads = step.loss_and_grad(p, batch)
+    np.testing.assert_allclose(np.asarray(value),
+                               np.asarray(step.loss(p, batch)))
+    assert jax.tree_util.tree_structure(grads) == \
+        jax.tree_util.tree_structure(p)
+    stepped, step_loss = step.local_sgd_step(p, batch, 0.1)
+    np.testing.assert_allclose(np.asarray(step_loss), np.asarray(value))
+    for a, g, b in zip(jax.tree.leaves(p), jax.tree.leaves(grads),
+                       jax.tree.leaves(stepped)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a - 0.1 * g),
+                                   rtol=1e-6)
+    assert step.n_params(rng) == n_params_of(p)
+
+
+def test_as_local_step_identity_and_coercion():
+    step = make_mclr(DIM, 5)
+    assert as_local_step(step) is step          # the bitwise-parity keystone
+
+    class Duck:
+        def init_params(self, rng):
+            return {"w": jnp.zeros((2,))}
+
+        def loss(self, params, batch):
+            return jnp.sum(params["w"])
+
+    coerced = as_local_step(Duck())
+    assert isinstance(coerced, LocalStep)
+    assert float(coerced.loss(coerced.init_params(jax.random.PRNGKey(0)),
+                              {})) == 0.0
+    with pytest.raises(TypeError):
+        as_local_step(object())
+
+
+def test_resolve_local_step_names_and_errors(fed, text_fed):
+    assert resolve_local_step("mclr", fed).kind == "mclr"
+    assert resolve_local_step(None, fed).kind == "mclr"
+    assert resolve_local_step("mlp", fed).name == "mlp"
+    assert resolve_local_step(None, text_fed).name == "lstm"
+    step = make_mlp(DIM, fed.n_classes)
+    assert resolve_local_step(step, fed) is step
+    with pytest.raises(KeyError):
+        resolve_local_step("no_such_model", fed)
+    # real architectures train the causal LM: token datasets only
+    with pytest.raises(ValueError, match="token"):
+        resolve_local_step("llama3.2-3b", fed)
+
+
+def test_flatten_contract_round_trip():
+    """One ravel contract: fixed leaf order, f32 view, dtype-restoring
+    inverse — for any nesting."""
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "z": {"b": jnp.ones((4,), jnp.bfloat16),
+                  "c": jnp.full((2, 2), 3.0)}}
+    flat = flatten_global(tree)
+    assert flat.dtype == jnp.float32 and flat.shape == (n_params_of(tree),)
+    rows = jnp.stack([flat, 2 * flat])
+    back = unflatten_rows(rows, tree)
+    assert jax.tree_util.tree_structure(back) == \
+        jax.tree_util.tree_structure(tree)
+    for leaf, orig in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert leaf.dtype == orig.dtype and leaf.shape[1:] == orig.shape
+        np.testing.assert_allclose(np.asarray(leaf[0], np.float32),
+                                   np.asarray(orig, np.float32))
+
+
+def test_fused_sgd_eligibility_dispatch():
+    mclr, mlp = make_mclr(DIM, 5), make_mlp(DIM, 5)
+    assert fused_sgd_eligible(mclr, "iid")
+    assert not fused_sgd_eligible(mclr, "shuffle")
+    assert not fused_sgd_eligible(mlp, "iid")
+    assert not fused_sgd_eligible(object(), "iid")
+
+
+def test_from_model_adapter_smoke():
+    """A real repro/models decoder adapts to the seam: masked-LM loss is
+    finite, padded rows contribute nothing, encoder-decoders are
+    rejected."""
+    from repro.configs import get_config
+    from repro.models.api import from_model
+
+    cfg = get_config("llama3.2-3b", smoke=True)
+    step = from_model(cfg)
+    p = step.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 1,
+                              cfg.vocab_size)
+    batch = {"x": toks, "y": jnp.zeros((2,), jnp.int32),
+             "mask": jnp.ones((2,))}
+    loss = step.loss(p, batch)
+    assert np.isfinite(float(loss))
+    acc = step.accuracy(p, batch)
+    assert 0.0 <= float(acc) <= 1.0
+    # a fully-masked batch is exactly weightless: same loss either way
+    padded = {"x": jnp.concatenate([toks, toks]),
+              "y": jnp.zeros((4,), jnp.int32),
+              "mask": jnp.concatenate([jnp.ones((2,)), jnp.zeros((2,))])}
+    np.testing.assert_allclose(np.asarray(step.loss(p, padded)),
+                               np.asarray(loss), rtol=1e-6)
+
+    with pytest.raises(ValueError, match="decoder-only"):
+        from_model(get_config("whisper-tiny", smoke=True))
+
+
+# ---------------------------------------------------------------------------
+# grouped ServerConfig surface
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_config_materializes_flat_fields():
+    cfg = ServerConfig(compute=ComputeConfig(driver="scan", mesh_shards=2),
+                       comm=CommConfig(upload_compress="topk_q8"),
+                       robustness=RobustnessConfig(upload_screen="on"))
+    assert cfg.driver == "scan" and cfg.mesh_shards == 2
+    assert cfg.upload_compress == "topk_q8" and cfg.upload_screen == "on"
+    # groups are always re-materialized: no two views to keep in sync
+    assert cfg.compute.driver == cfg.driver
+    assert cfg.comm.topk_frac == cfg.topk_frac
+
+
+def test_flat_kwargs_deprecate_but_work():
+    with pytest.warns(DeprecationWarning, match="driver"):
+        cfg = ServerConfig(driver="scan", block_size=4)
+    assert cfg.compute.driver == "scan" and cfg.compute.block_size == 4
+
+
+def test_conflicting_flat_and_group_values_raise():
+    # both spellings explicitly non-default AND different: a silent pick
+    # either way would surprise someone, so it is an error
+    with pytest.raises(ValueError, match="block_size"):
+        ServerConfig(block_size=8, compute=ComputeConfig(block_size=4))
+
+
+def test_flat_default_yields_to_group_and_vice_versa():
+    # group explicit, flat at default -> group wins
+    assert ServerConfig(compute=ComputeConfig(driver="scan")).driver == \
+        "scan"
+    # flat explicit, group field left at ITS default -> flat wins (this is
+    # what keeps dataclasses.replace on flat spellings working, so the
+    # mixed form does NOT warn — replace() re-passes every flat field)
+    cfg = ServerConfig(driver="scan", compute=ComputeConfig(block_size=4))
+    assert cfg.driver == "scan" and cfg.block_size == 4
+
+
+def test_dataclasses_replace_keeps_flat_spelling_working():
+    cfg = ServerConfig(compute=ComputeConfig(driver="scan"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # replace() must not deprecate
+        bumped = dataclasses.replace(cfg, backend="pallas")
+    assert bumped.backend == "pallas" and bumped.compute.backend == "pallas"
+    assert bumped.driver == "scan"       # group value survives the replace
+
+
+def test_public_api_surface():
+    import repro
+    assert repro.__all__ == sorted(repro.__all__)
+    from repro import FedSAEServer as S, LocalStep as L, ServerConfig as C
+    assert S is FedSAEServer and C is ServerConfig
+    assert L is LocalStep
+    with pytest.raises(AttributeError):
+        repro.not_a_thing
