@@ -95,19 +95,47 @@ Fault-screen overhead leg (ISSUE 8, ``repro.faults``):
                       is <= 0.05 and scripts/check_bench.py gates it
                       statically from the recorded file.
 
-Model-generic leg (ISSUE 9, the ``LocalStep`` seam):
+Model-generic legs (ISSUE 9 seam, ISSUE 10 fused generic driver):
 
-  engine_scan_mlp_path  the xla scan leg with a NON-MCLR local step (the
-                        built-in 2-layer tanh MLP): the local step runs
-                        through XLA autodiff (``fused_sgd_eligible`` is
-                        False off the MCLR fast path) and its pytree
-                        params flow through the engine's [K, P] ravel
-                        contract.  Tracks what leaving the hand-tuned
-                        MCLR path costs — the number the LocalStep API
-                        has to keep honest.  ``--models-only`` re-records
-                        just this leg (plus the plain scan baseline it is
-                        normalized against) and merges it into the
-                        existing scale entry, like --faults-only.
+  engine_scan_mlp_path        the xla scan leg with a NON-MCLR local step
+                              (the built-in 2-layer tanh MLP) and the
+                              fused generic driver OFF
+                              (``fused_generic=False``): per-iteration
+                              minibatch index walk + XLA autodiff, the
+                              pre-ISSUE-10 generic baseline the fused
+                              speedup is measured against.
+  engine_scan_mlp_fused_path  the same MLP leg at the DEFAULT config: the
+                              hoisted [K, max_iters, B] batch-view walk
+                              (one gather per round) + budget-slot
+                              compaction — lanes stable-sorted by budget,
+                              each scanned iteration slot executes only
+                              the power-of-two lane prefix covering its
+                              active budgets, skipping the masked
+                              identity-update slots that dominate under
+                              FedSAE's self-adaptive budgets.
+                              ``speedup_vs_unfused`` is the ISSUE-10
+                              acceptance number (>= 1.5x) and
+                              ``slowdown_vs_mclr_scan`` the remaining
+                              generic-model gap (<= 2.4x vs the also-
+                              compacted mclr leg); both gated statically
+                              by scripts/check_bench.py.
+  engine_scan_pallas_mlp_path backend="pallas": the MLP dispatches to the
+                              fused dense two-layer kernel
+                              (``fed_local_sgd_dense``) under the scan
+                              (interpret-mode caveat above applies —
+                              tracked honestly, flips on TPU).
+
+Prefetch leg (ISSUE 10, ``ComputeConfig.prefetch="double_buffer"``):
+
+  engine_scan_prefetch_path  the xla scan leg with the double-buffered
+                             cohort pipeline: round t+1's selection +
+                             cohort gather are issued in the same program
+                             region as round t's train/aggregate, so the
+                             scheduler is free to overlap them.  On this
+                             CPU host the payoff is ~neutral (no async
+                             copy engine); ``ratio_vs_scan`` is gated
+                             >= ~0.95x so the pipeline can never cost
+                             real throughput unnoticed.
 
 Telemetry-overhead legs (ISSUE 7, ``repro.obs``):
 
@@ -120,11 +148,15 @@ Telemetry-overhead legs (ISSUE 7, ``repro.obs``):
                       acceptance bar is <= 0.05 and scripts/check_bench.py
                       gates it statically from the recorded file.
 
---sharded-only records just those two legs and merges them into the
-existing scale entry, so the standard legs keep their 1-device numbers:
+``--only <group>`` records just one leg group (sharded | telemetry |
+faults | models | prefetch — unambiguous prefixes accepted) and MERGES its
+entries into the existing scale record, so the other legs keep their
+committed numbers.  The legacy ``--sharded-only`` / ``--telemetry-only`` /
+``--faults-only`` / ``--models-only`` flags are aliases:
 
   REPRO_FORCE_HOST_DEVICES=8 PYTHONPATH=src python \
-      benchmarks/bench_round_engine.py --scale both --shards 8 --sharded-only
+      benchmarks/bench_round_engine.py --scale both --shards 8 --only sharded
+  PYTHONPATH=src python benchmarks/bench_round_engine.py --only models
 
 Same masked iteration count, same rng discipline in all legs.
 
@@ -170,6 +202,17 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
 
 BLOCK_SIZE = 10   # rounds fused per lax.scan segment in the scan legs
 TOPK_FRAC = 0.1   # kept-coordinate fraction in the compressed-upload leg
+
+# --only <group>: the legs each partial re-record times (groups that report
+# a ratio against the plain scan leg re-time it too, so the ratio is from
+# one machine state, not mixed runs)
+ONLY_GROUPS = {
+    "sharded": ("scan_sharded", "scan_sharded_capacity"),
+    "telemetry": ("scan_telemetry_null", "scan_telemetry_jsonl"),
+    "faults": ("scan", "scan_screen"),
+    "models": ("scan", "scan_mlp", "scan_mlp_fused", "scan_pallas_mlp"),
+    "prefetch": ("scan", "scan_prefetch"),
+}
 
 # K=30 selected per round as in the paper's MNIST runs.  The reduced scale
 # keeps the paper's max client size (400 samples) so the data path carries a
@@ -232,8 +275,7 @@ SCREEN_NORM_BOUND = 1e4   # the screened leg's norm bound (config default)
 
 def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 reps: int = 3, shards: int = 0, gate_only: bool = False,
-                sharded_only: bool = False, telemetry_only: bool = False,
-                faults_only: bool = False, models_only: bool = False):
+                only: str = ""):
     from repro.core.selection import resolve_capacity
     from repro.models.fl_models import make_mclr, make_mlp
 
@@ -320,7 +362,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
     block = min(BLOCK_SIZE, rounds)
     n_blocks = -(-rounds // block)
 
-    def scan_cfg(backend, capacity="full"):
+    def scan_cfg(backend, capacity="full", fused=True, prefetch="off"):
         # the real ServerConfig (not a hand-built namespace) so the
         # benchmarked segment sees exactly the fields the server passes
         # cohort_capacity resolves against the mesh make_segment_fn is
@@ -331,7 +373,8 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             sampling="iid",
             compute=ComputeConfig(backend=backend, driver="scan",
                                   block_size=block,
-                                  cohort_capacity=capacity))
+                                  cohort_capacity=capacity,
+                                  fused_generic=fused, prefetch=prefetch))
 
     def init_state(p0=None):
         return {
@@ -345,12 +388,12 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         }
 
     def timed_scan(backend, mesh=None, pk=None, capacity="full",
-                   eng=None, step=None, p0=None):
+                   eng=None, step=None, p0=None, fused=True,
+                   prefetch="off"):
         pk = packed if pk is None else pk
-        seg = (eng or engine).make_segment_fn(step or model, batch_size,
-                                              max_iters, pk.max_n,
-                                              scan_cfg(backend, capacity),
-                                              mesh=mesh)
+        seg = (eng or engine).make_segment_fn(
+            step or model, batch_size, max_iters, pk.max_n,
+            scan_cfg(backend, capacity, fused, prefetch), mesh=mesh)
 
         def run_blocks(state):
             for b in range(n_blocks):
@@ -447,7 +490,12 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 timed(engine_round(packed_fns[("shuffle", "pallas")])),
             "pallas_iid": timed(engine_round(packed_fns[("iid", "pallas")])),
             "scan": timed_scan("xla"),
-            "scan_mlp": timed_scan("xla", step=mlp, p0=mlp_params),
+            "scan_mlp": timed_scan("xla", step=mlp, p0=mlp_params,
+                                   fused=False),
+            "scan_mlp_fused": timed_scan("xla", step=mlp, p0=mlp_params),
+            "scan_pallas_mlp": timed_scan("pallas", step=mlp,
+                                          p0=mlp_params),
+            "scan_prefetch": timed_scan("xla", prefetch="double_buffer"),
             "scan_screen": timed_scan("xla", eng=engine_s),
             "scan_pallas": timed_scan("pallas"),
             "scan_compress": timed_scan_compress("xla"),
@@ -478,25 +526,16 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
         legs["scan_sharded"] = timed_scan("xla", mesh=mesh, pk=pk_sharded)
         legs["scan_sharded_capacity"] = timed_scan(
             "xla", mesh=mesh, pk=pk_sharded, capacity="auto")
-    if shards and (gate_only or sharded_only):
-        # the capacity gate / --sharded-only recording consume only the
+    if shards and (gate_only or only == "sharded"):
+        # the capacity gate / --only sharded recording consume only the
         # masked-vs-compacted pair
         legs = {k: legs[k] for k in ("scan_sharded",
                                      "scan_sharded_capacity")}
-    elif telemetry_only:
-        # --telemetry-only re-records just the ISSUE-7 overhead pair and
-        # merges it into the existing scale entry (like --sharded-only)
-        legs = {k: legs[k] for k in ("scan_telemetry_null",
-                                     "scan_telemetry_jsonl")}
-    elif faults_only:
-        # --faults-only re-records just the ISSUE-8 screening pair and
-        # merges it into the existing scale entry
-        legs = {k: legs[k] for k in ("scan", "scan_screen")}
-    elif models_only:
-        # --models-only re-records just the ISSUE-9 model-generic leg (and
-        # the plain scan baseline it is normalized against) and merges it
-        # into the existing scale entry
-        legs = {k: legs[k] for k in ("scan", "scan_mlp")}
+    elif only:
+        # --only <group> re-records one leg group (plus the scan baseline
+        # the group's ratios are normalized against) and merges its
+        # entries into the existing scale record
+        legs = {k: legs[k] for k in ONLY_GROUPS[only]}
     elif gate_only:
         # scripts/check_bench.py consumes only the scan/engine ratio — time
         # exactly those two legs so the CI gate pays for nothing else
@@ -511,7 +550,8 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             samples[name].append(r)
     rps = {name: float(np.median(v)) for name, v in samples.items()}
     for name in set(rps) & {"iid", "pallas_iid", "scan", "scan_pallas",
-                            "scan_mlp", "scan_screen", "scan_compress",
+                            "scan_mlp", "scan_mlp_fused", "scan_pallas_mlp",
+                            "scan_prefetch", "scan_screen", "scan_compress",
                             "scan_telemetry_null", "scan_telemetry_jsonl",
                             "scan_sharded", "scan_sharded_capacity"}:
         for leaf in jax.tree.leaves(final_p[name]):
@@ -558,21 +598,73 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             "overhead_frac": round(1.0 - jsonl / null, 4)}}
 
     def models_entry():
+        # fused vs unfused is pure data movement — the bench itself pins
+        # the bitwise contract the parity suite tests at training scale
+        for a, b in zip(jax.tree.leaves(final_p["scan_mlp"]),
+                        jax.tree.leaves(final_p["scan_mlp_fused"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         plain = rps["scan"]
         mlp_rps = rps["scan_mlp"]
-        return {"engine_scan_mlp_path": {
+        fused_rps = rps["scan_mlp_fused"]
+        mlp_upload = upload_bytes_per_round(K, mlp_n_params)
+        common = {"driver": "scan", "sampling": "iid",
+                  "block_size": block, "local_step": "mlp",
+                  "n_params": int(mlp_n_params),
+                  "upload_bytes_per_round": mlp_upload}
+        return {
+            "engine_scan_mlp_path": {
+                **common, "backend": "xla", "fused_generic": False,
+                "data": "non-MCLR LocalStep (2-layer tanh MLP, XLA "
+                        "autodiff local step) with the fused generic "
+                        "driver OFF: per-iteration minibatch index walk — "
+                        "the pre-ISSUE-10 generic baseline; "
+                        "slowdown_vs_mclr_scan tracks what leaving the "
+                        "MCLR fast path used to cost",
+                "rounds_per_sec": round(mlp_rps, 3),
+                "slowdown_vs_mclr_scan": round(plain / mlp_rps, 3)},
+            "engine_scan_mlp_fused_path": {
+                **common, "backend": "xla",
+                "data": "same MLP leg at the default config: hoisted "
+                        "[K, max_iters, B] batch-view walk + budget-slot "
+                        "compaction (lanes stable-sorted by budget, each "
+                        "iteration slot runs only a power-of-two prefix "
+                        "covering its active lanes — ISSUE 10); "
+                        "bitwise-identical params to the unfused leg "
+                        "(asserted here every run)",
+                "rounds_per_sec": round(fused_rps, 3),
+                "speedup_vs_unfused": round(fused_rps / mlp_rps, 3),
+                "slowdown_vs_mclr_scan": round(plain / fused_rps, 3)},
+            "engine_scan_pallas_mlp_path": {
+                **common, "backend": "pallas",
+                "kernels": "fed_local_sgd_dense under lax.scan",
+                "data": "the MLP dispatched to the fused dense two-layer "
+                        "pallas kernel (closed-form backprop, VMEM-"
+                        "resident params; interpret-mode on CPU — see "
+                        "pallas_mode)",
+                "rounds_per_sec": round(rps["scan_pallas_mlp"], 3)},
+        }
+
+    def prefetch_entry():
+        # prefetch off/on is the same operation sequence — bitwise at
+        # training scale, asserted every time the pair is timed
+        for a, b in zip(jax.tree.leaves(final_p["scan"]),
+                        jax.tree.leaves(final_p["scan_prefetch"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        plain = rps["scan"]
+        pf = rps["scan_prefetch"]
+        return {"engine_scan_prefetch_path": {
             "driver": "scan", "sampling": "iid", "backend": "xla",
-            "block_size": block, "local_step": "mlp",
-            "n_params": int(mlp_n_params),
-            "data": "non-MCLR LocalStep (2-layer tanh MLP, XLA autodiff "
-                    "local step) under the same fused scan driver; pytree "
-                    "params through the engine's [K, P] ravel contract "
-                    "(ISSUE 9) — slowdown_vs_mclr_scan tracks what leaving "
-                    "the MCLR fast path costs",
-            "upload_bytes_per_round": upload_bytes_per_round(
-                K, mlp_n_params),
-            "rounds_per_sec": round(mlp_rps, 3),
-            "slowdown_vs_mclr_scan": round(plain / mlp_rps, 3)}}
+            "block_size": block, "prefetch": "double_buffer",
+            "data": "double-buffered cohort pipeline: round t+1's "
+                    "selection + cohort gather issued in the same program "
+                    "region as round t's train/aggregate (p0 (e p)* e "
+                    "scan); ~neutral on CPU (no async copy engine), "
+                    "ratio_vs_scan gated >= ~0.95x by "
+                    "scripts/check_bench.py so the pipeline can never "
+                    "cost real throughput unnoticed",
+            "upload_bytes_per_round": dense_upload,
+            "rounds_per_sec": round(pf, 3),
+            "ratio_vs_scan": round(pf / plain, 3)}}
 
     def faults_entry():
         plain = rps["scan"]
@@ -590,18 +682,16 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
             "screened_rounds_per_sec": round(screened, 3),
             "overhead_frac": round(1.0 - screened / plain, 4)}}
 
-    if shards and (gate_only or sharded_only):
+    if shards and (gate_only or only == "sharded"):
         out = sharded_entries()
         if gate_only:
             out.update(scale=scale, rounds_timed=rounds,
                        epochs_per_round=epochs, gate_only=True)
         return out
-    if telemetry_only:
-        return telemetry_entry()
-    if faults_only:
-        return faults_entry()
-    if models_only:
-        return models_entry()
+    if only:
+        builders = {"telemetry": telemetry_entry, "faults": faults_entry,
+                    "models": models_entry, "prefetch": prefetch_entry}
+        return builders[only]()
     if gate_only:
         return {
             "scale": scale, "rounds_timed": rounds,
@@ -683,6 +773,7 @@ def bench_scale(scale: str, rounds: int, epochs: float, seed: int = 0,
                 / dense_upload, 4),
             "rounds_per_sec": round(rps["scan_compress"], 3)},
         **models_entry(),
+        **prefetch_entry(),
         **telemetry_entry(),
         **faults_entry(),
         "pallas_mode": "interpret" if jax.default_backend() == "cpu"
@@ -718,29 +809,19 @@ def main():
                          "REPRO_FORCE_HOST_DEVICES=N — the masked leg "
                          "measures SPMD overhead there, the compacted leg "
                          "a real compute win)")
-    ap.add_argument("--sharded-only", action="store_true",
-                    help="time only the two sharded legs and MERGE their "
-                         "entries into the existing scale record — the "
-                         "standard legs keep their 1-device numbers while "
-                         "the sharded legs are recorded under the forced "
-                         "multi-device mesh they document")
-    ap.add_argument("--telemetry-only", action="store_true",
-                    help="time only the two ISSUE-7 telemetry legs (null "
-                         "vs jsonl sink) and MERGE the telemetry_overhead "
-                         "entry into the existing scale record — the other "
-                         "legs keep their recorded numbers")
-    ap.add_argument("--faults-only", action="store_true",
-                    help="time only the two ISSUE-8 screening legs (plain "
-                         "vs upload_screen='on' scan) and MERGE the "
-                         "scan_faults_screen entry into the existing scale "
-                         "record — the other legs keep their recorded "
-                         "numbers")
-    ap.add_argument("--models-only", action="store_true",
-                    help="time only the ISSUE-9 model-generic pair (plain "
-                         "mclr scan vs the MLP LocalStep scan leg) and "
-                         "MERGE the engine_scan_mlp_path entry into the "
-                         "existing scale record — the other legs keep "
-                         "their recorded numbers")
+    ap.add_argument("--only", default="", metavar="GROUP",
+                    help="time only one leg group and MERGE its entries "
+                         "into the existing scale record — the other legs "
+                         "keep their committed numbers.  Groups: "
+                         f"{', '.join(ONLY_GROUPS)} (unambiguous prefixes "
+                         "accepted; groups reporting a ratio vs the plain "
+                         "scan leg re-time that baseline too)")
+    # legacy spellings of --only <group>, kept so recorded invocations in
+    # docs/CI keep working
+    for group in ("sharded", "telemetry", "faults", "models"):
+        ap.add_argument(f"--{group}-only", dest="only",
+                        action="store_const", const=group,
+                        help=f"alias for --only {group}")
     ap.add_argument("--gate-only", action="store_true",
                     help="time only the gate legs (iid-engine + scan, or "
                          "the sharded masked/compacted pair with --shards) "
@@ -752,56 +833,47 @@ def main():
     if args.gate_only and os.path.abspath(args.out) == \
             os.path.abspath(OUT_PATH):
         ap.error("--gate-only writes a partial record; pass --out elsewhere")
-    if args.sharded_only and not args.shards:
-        ap.error("--sharded-only requires --shards")
-    if args.telemetry_only and (args.gate_only or args.sharded_only
-                                or args.shards or args.faults_only):
-        ap.error("--telemetry-only times the 1-device telemetry pair "
-                 "alone; drop --shards/--gate-only/--sharded-only/"
-                 "--faults-only")
-    if args.faults_only and (args.gate_only or args.sharded_only
-                             or args.shards):
-        ap.error("--faults-only times the 1-device screening pair alone; "
-                 "drop --shards/--gate-only/--sharded-only")
-    if args.models_only and (args.gate_only or args.sharded_only
-                             or args.shards or args.telemetry_only
-                             or args.faults_only):
-        ap.error("--models-only times the 1-device model-generic pair "
-                 "alone; drop the other mode flags")
+    if args.only:
+        hits = [g for g in ONLY_GROUPS if g.startswith(args.only)]
+        if len(hits) != 1:
+            ap.error(f"--only {args.only!r}: "
+                     + ("ambiguous, matches " + "/".join(hits) if hits
+                        else "no such leg group")
+                     + f"; groups: {', '.join(ONLY_GROUPS)}")
+        args.only = hits[0]
+    if args.only == "sharded" and not args.shards:
+        ap.error("--only sharded requires --shards")
+    if args.only and args.only != "sharded" and (args.shards
+                                                 or args.gate_only):
+        ap.error(f"--only {args.only} times a 1-device leg group alone; "
+                 "drop --shards/--gate-only")
+    if args.only and args.gate_only:
+        ap.error("--only and --gate-only are exclusive recording modes")
     scales = ("reduced", "paper") if args.scale == "both" else (args.scale,)
     merged = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
             merged = json.load(f)
-    if (args.sharded_only or args.telemetry_only or args.faults_only
-            or args.models_only):
+    if args.only:
         # merging into a missing entry would leave a partial record that
         # check_bench.py's scan/engine gate crashes on
-        which = ("--sharded-only" if args.sharded_only else
-                 "--telemetry-only" if args.telemetry_only else
-                 "--faults-only" if args.faults_only else
-                 "--models-only")
         missing = [s for s in scales if "engine_scan_path"
                    not in merged.get(s, {})]
         if missing:
-            ap.error(f"{which} merges into existing entries, but "
-                     f"{args.out} has no full record for {missing}; run "
-                     f"the full bench for those scales first")
+            ap.error(f"--only {args.only} merges into existing entries, "
+                     f"but {args.out} has no full record for {missing}; "
+                     f"run the full bench for those scales first")
     for scale in scales:
         res = bench_scale(scale, args.rounds, args.epochs, reps=args.reps,
                           shards=args.shards, gate_only=args.gate_only,
-                          sharded_only=args.sharded_only,
-                          telemetry_only=args.telemetry_only,
-                          faults_only=args.faults_only,
-                          models_only=args.models_only)
-        if (args.sharded_only or args.telemetry_only or args.faults_only
-                or args.models_only):
+                          only=args.only)
+        if args.only:
             entry = merged.get(scale, {})
             entry.update(res)
             merged[scale] = entry
         else:
             merged[scale] = res
-        if args.shards and (args.gate_only or args.sharded_only):
+        if args.shards and (args.gate_only or args.only == "sharded"):
             cap = res["engine_scan_sharded_capacity_path"]
             print(f"[{scale}] sharded legs (S={args.shards}): masked "
                   f"{res['engine_scan_sharded_path']['rounds_per_sec']:.2f}"
@@ -810,59 +882,56 @@ def main():
                   f"{cap['rounds_per_sec']:.2f} rounds/s   "
                   f"{cap['speedup_vs_masked_sharded']:.2f}x")
             continue
-        if args.telemetry_only:
-            tel = res["telemetry_overhead"]
-            print(f"[{scale}] scan+telemetry: null sink "
-                  f"{tel['null_sink_rounds_per_sec']:.2f} rounds/s   jsonl "
-                  f"sink {tel['jsonl_sink_rounds_per_sec']:.2f} rounds/s   "
-                  f"overhead {tel['overhead_frac']:.1%}")
-            continue
-        if args.faults_only:
-            fs = res["scan_faults_screen"]
-            print(f"[{scale}] scan+screen: plain "
-                  f"{fs['plain_rounds_per_sec']:.2f} rounds/s   screened "
-                  f"{fs['screened_rounds_per_sec']:.2f} rounds/s   "
-                  f"overhead {fs['overhead_frac']:.1%}")
-            continue
-        if args.models_only:
-            ml = res["engine_scan_mlp_path"]
-            print(f"[{scale}] scan+mlp: "
-                  f"{ml['rounds_per_sec']:.2f} rounds/s "
-                  f"({ml['slowdown_vs_mclr_scan']:.2f}x slower than the "
-                  f"mclr scan leg; {ml['n_params']} params)")
-            continue
         if args.gate_only:
             print(f"[{scale}] gate legs: engine "
                   f"{res['engine_path']['rounds_per_sec']:.2f} rounds/s   "
                   f"scan {res['engine_scan_path']['rounds_per_sec']:.2f} "
                   f"rounds/s")
             continue
-        print(f"[{scale}] seed path: {res['seed_path_rounds_per_sec']:.2f} "
-              f"rounds/s   engine: {res['engine_rounds_per_sec']:.2f} "
-              f"rounds/s   speedup: {res['speedup']:.2f}x   scan: "
-              f"{res['engine_scan_path']['rounds_per_sec']:.2f} rounds/s "
-              f"({res['scan_speedup_vs_engine']:.2f}x engine)   pallas "
-              f"({res['pallas_mode']}): "
-              f"{res['engine_pallas_path']['rounds_per_sec']:.2f} rounds/s")
-        comp = res["engine_scan_compress_path"]
-        print(f"[{scale}] scan+topk_q8: {comp['rounds_per_sec']:.2f} "
-              f"rounds/s   upload {comp['upload_bytes_per_round']} B/round "
-              f"vs dense {res['engine_scan_path']['upload_bytes_per_round']}"
-              f" B/round ({comp['upload_compression_ratio']:.3f}x)")
-        ml = res["engine_scan_mlp_path"]
-        print(f"[{scale}] scan+mlp: {ml['rounds_per_sec']:.2f} rounds/s "
-              f"({ml['slowdown_vs_mclr_scan']:.2f}x slower than mclr scan; "
-              f"{ml['n_params']} params)")
-        tel = res["telemetry_overhead"]
-        print(f"[{scale}] scan+telemetry: null sink "
-              f"{tel['null_sink_rounds_per_sec']:.2f} rounds/s   jsonl sink "
-              f"{tel['jsonl_sink_rounds_per_sec']:.2f} rounds/s   overhead "
-              f"{tel['overhead_frac']:.1%}")
-        fs = res["scan_faults_screen"]
-        print(f"[{scale}] scan+screen: plain "
-              f"{fs['plain_rounds_per_sec']:.2f} rounds/s   screened "
-              f"{fs['screened_rounds_per_sec']:.2f} rounds/s   overhead "
-              f"{fs['overhead_frac']:.1%}")
+        full = not args.only
+        if full:
+            print(f"[{scale}] seed path: "
+                  f"{res['seed_path_rounds_per_sec']:.2f} "
+                  f"rounds/s   engine: {res['engine_rounds_per_sec']:.2f} "
+                  f"rounds/s   speedup: {res['speedup']:.2f}x   scan: "
+                  f"{res['engine_scan_path']['rounds_per_sec']:.2f} "
+                  f"rounds/s ({res['scan_speedup_vs_engine']:.2f}x engine)"
+                  f"   pallas ({res['pallas_mode']}): "
+                  f"{res['engine_pallas_path']['rounds_per_sec']:.2f} "
+                  f"rounds/s")
+            comp = res["engine_scan_compress_path"]
+            print(f"[{scale}] scan+topk_q8: {comp['rounds_per_sec']:.2f} "
+                  f"rounds/s   upload {comp['upload_bytes_per_round']} "
+                  f"B/round vs dense "
+                  f"{res['engine_scan_path']['upload_bytes_per_round']}"
+                  f" B/round ({comp['upload_compression_ratio']:.3f}x)")
+        if full or args.only == "models":
+            ml = res["engine_scan_mlp_path"]
+            mf = res["engine_scan_mlp_fused_path"]
+            pd = res["engine_scan_pallas_mlp_path"]["rounds_per_sec"]
+            print(f"[{scale}] scan+mlp: unfused "
+                  f"{ml['rounds_per_sec']:.2f} rounds/s   fused "
+                  f"{mf['rounds_per_sec']:.2f} rounds/s "
+                  f"({mf['speedup_vs_unfused']:.2f}x; "
+                  f"{mf['slowdown_vs_mclr_scan']:.2f}x off mclr scan; "
+                  f"{ml['n_params']} params)   pallas dense: "
+                  f"{pd:.2f} rounds/s")
+        if full or args.only == "prefetch":
+            pf = res["engine_scan_prefetch_path"]
+            print(f"[{scale}] scan+prefetch: {pf['rounds_per_sec']:.2f} "
+                  f"rounds/s ({pf['ratio_vs_scan']:.2f}x plain scan)")
+        if full or args.only == "telemetry":
+            tel = res["telemetry_overhead"]
+            print(f"[{scale}] scan+telemetry: null sink "
+                  f"{tel['null_sink_rounds_per_sec']:.2f} rounds/s   jsonl "
+                  f"sink {tel['jsonl_sink_rounds_per_sec']:.2f} rounds/s   "
+                  f"overhead {tel['overhead_frac']:.1%}")
+        if full or args.only == "faults":
+            fs = res["scan_faults_screen"]
+            print(f"[{scale}] scan+screen: plain "
+                  f"{fs['plain_rounds_per_sec']:.2f} rounds/s   screened "
+                  f"{fs['screened_rounds_per_sec']:.2f} rounds/s   "
+                  f"overhead {fs['overhead_frac']:.1%}")
     with open(args.out, "w") as f:
         json.dump(merged, f, indent=2)
     print(f"wrote {os.path.abspath(args.out)}")

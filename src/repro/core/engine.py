@@ -117,6 +117,7 @@ from repro.obs.profiling import (STAGE_AGGREGATE, STAGE_GATHER,
                                  STAGE_LOCAL_SGD, STAGE_UPLOAD, stage)
 
 BACKENDS = ("xla", "pallas")
+PREFETCH_MODES = ("off", "double_buffer")
 
 
 def _device_hist(x, w, lo: float, hi: float, bins: int):
@@ -130,6 +131,40 @@ def _device_hist(x, w, lo: float, hi: float, bins: int):
                     * jnp.float32(bins)).astype(jnp.int32)
     return jnp.zeros(bins, jnp.float32).at[idx].add(
         jnp.asarray(w, jnp.float32))
+
+
+def _scan_prefetch(one_round, carry, ts):
+    """Double-buffered block driver (ISSUE 10): run ``one_round``'s
+    prepare/execute halves as  p0 (e p)* e  instead of ``lax.scan`` over
+    the composed round.
+
+    The scan carry holds cohort t's prepared bundle — selection, budgets
+    and the pre-gathered training data — so each scan step EXECUTES round
+    t while PREPARING round t+1 in the same XLA program region: the
+    scheduler is free to overlap cohort t+1's gather DMA with cohort t's
+    local-SGD compute (the payoff is on accelerators with async copies;
+    on CPU the reordering is neutral).  The operation sequence
+    p0 e0 p1 e1 ... is exactly the off-mode composition's, and prepare
+    consumes only carry state that execute of the previous round has
+    already committed (values, quarantine counters), so results are
+    bit-identical to prefetch="off" (tests/test_fused_generic.py).
+
+    Single-round blocks degenerate to a zero-length scan: prologue
+    prepare + epilogue execute only."""
+    prepare, execute = one_round.prepare, one_round.execute
+    carry, pf = prepare(carry, ts[0])
+
+    def body(cpf, t):
+        carry, pf = cpf
+        carry, stats = execute(carry, pf)
+        carry, pf = prepare(carry, t)
+        return (carry, pf), stats
+
+    (carry, pf), stats = jax.lax.scan(body, (carry, pf), ts[1:])
+    carry, last = execute(carry, pf)
+    stats = jax.tree.map(
+        lambda s, l: jnp.concatenate([s, l[None]], axis=0), stats, last)
+    return carry, stats
 
 
 def _check_shard_count(flat_x, mesh):
@@ -196,16 +231,33 @@ class RoundEngine:
                 [K] bool output (after the residual) marking the screened
                 rows.  ``None`` (default) disables the screen — the traced
                 program is unchanged.
+    fused_generic : fuse the generic iid local-SGD round (ISSUE 10):
+                draw the whole round's minibatch indices in one randint
+                (which the iid path always did), pre-gather the
+                [max_iters, B, ...] batch views before the iteration scan,
+                and — on the replicated scan driver — run the
+                budget-compacted cohort walk (``_iid_cohort_views``): each
+                iteration slot executes only the budget-sorted lane prefix
+                that is actually active, skipping the masked identity
+                updates that dominate under self-adaptive budgets.
+                Bit-identical values to the unfused walk (the gather and
+                the sort are pure data movement, skipped slots were
+                identity updates; tests/test_fused_generic.py), at the
+                memory cost of materializing the views (~epochs x the
+                [K, max_n, ...] cohort shard).  ``False`` restores the
+                per-client fetch-in-body walk.
     """
 
     def __init__(self, lr: float, aggregator: Optional[Aggregator] = None,
                  prox_mu: Optional[float] = None, donate: bool = True,
                  backend: str = "xla", compress: str = "none",
                  topk_frac: float = 0.1, faults=None,
-                 screen_norm: Optional[float] = None):
+                 screen_norm: Optional[float] = None,
+                 fused_generic: bool = True):
         from repro.core.compression import check_compress, resolve_k
 
         self.lr = lr
+        self.fused_generic = bool(fused_generic)
         self.aggregator = aggregator if aggregator is not None else FedAvg()
         self.prox_mu = float(prox_mu if prox_mu is not None
                              else getattr(self.aggregator, "prox_mu", 0.0))
@@ -247,25 +299,38 @@ class RoundEngine:
                 f"unknown backend {backend!r}; choose from {BACKENDS}")
         return backend
 
-    def _jit_round(self, fn: Callable) -> Callable:
+    def _jit_round(self, fn: Callable,
+                   donate: tuple = (0,)) -> Callable:
         """Jit ``fn``, deciding donation lazily at the first call.
 
         ``jax.default_backend()`` must not be read while the round function
         is being built — an engine constructed before device/mesh selection
         would bake in the wrong answer.  The wrapper records its decision on
-        ``.donate_argnums`` (None until the first call)."""
+        ``.donate_argnums`` (None until the first call).
+
+        ``donate`` is the argnum tuple to donate when donation is on —
+        argnum 0 (the params/state carry) plus, for compressing round and
+        segment functions, the error-feedback residual (the caller always
+        reassigns both from the outputs, so the buffers are dead on entry).
+        The raw body and the requested argnums stay reachable as ``._fn`` /
+        ``._donate`` so the donation-audit test can compile the body with
+        donation forced on and assert every donated buffer is actually
+        consumed (tests/test_fused_generic.py)."""
         state: dict = {}
 
         def call(*args):
             jitted = state.get("jitted")
             if jitted is None:
-                donate = ((0,) if self.donate
-                          and jax.default_backend() != "cpu" else ())
-                jitted = state["jitted"] = jax.jit(fn, donate_argnums=donate)
-                call.donate_argnums = donate
+                argnums = (tuple(donate) if self.donate
+                           and jax.default_backend() != "cpu" else ())
+                jitted = state["jitted"] = jax.jit(
+                    fn, donate_argnums=argnums)
+                call.donate_argnums = argnums
             return jitted(*args)
 
         call.donate_argnums = None
+        call._fn = fn
+        call._donate = tuple(donate)
         return call
 
     def _prox(self, loss, params, global_params):
@@ -278,7 +343,164 @@ class RoundEngine:
     # ------------------------------------------------------------------
     # sample-level local SGD: resample batches from a padded client shard
     # ------------------------------------------------------------------
-    def _iid_sgd_core(self, model, batch_size: int, max_iters: int):
+    def _iid_batch_views(self, batch_size: int, max_iters: int) -> Callable:
+        """The fused iid data walk (ISSUE 10): one randint for the whole
+        round's minibatch indices — the hoisted-index shape the shuffle
+        path uses to dodge the XLA 0.4.x vmap-in-shard_map gather
+        miscompile (see ``_local_sgd``); keep it — then ONE gather for all
+        ``[max_iters, B, ...]`` batch views.
+
+        prep(fetch, nk, key) -> (xb_all [max_iters, B, ...], yb_all
+        [max_iters, B], bmask [B]) — ``fetch`` is the same closure the
+        unfused walk uses (gathers broadcast over the extra leading index
+        axis), so the views hold bit-identical values to the per-iteration
+        fetches."""
+        B = batch_size
+
+        def prep(fetch, nk, key):
+            nk_safe = jnp.maximum(nk, 1)
+            idx_all = jax.random.randint(key, (max_iters, B), 0, nk_safe)
+            xb_all, yb_all = fetch(idx_all)
+            bmask = (jnp.arange(B) < nk_safe).astype(jnp.float32)
+            return xb_all, yb_all, bmask
+
+        return prep
+
+    def _iid_scan_views(self, model, batch_size: int,
+                        max_iters: int) -> Callable:
+        """The compute half of the fused iid walk: scan all ``max_iters``
+        budget slots over pre-gathered batch views — the loop body is pure
+        autodiff + masked update, no gather dispatch.
+
+        run(global_params, xb_all, yb_all, bmask, iters) ->
+            (params, mean_loss)"""
+        lr = self.lr
+
+        def run(global_params, xb_all, yb_all, bmask, iters):
+            def step(params, xs):
+                i, xb, yb = xs
+                batch = {"x": xb, "y": yb, "mask": bmask}
+
+                def loss_fn(p):
+                    return self._prox(model.loss(p, batch), p, global_params)
+
+                loss, g = jax.value_and_grad(loss_fn)(params)
+                active = (i < iters).astype(jnp.float32)
+                return jax.tree.map(lambda p, gg: p - lr * active * gg,
+                                    params, g), loss
+
+            params, losses = jax.lax.scan(
+                step, global_params,
+                (jnp.arange(max_iters), xb_all, yb_all))
+            msk = (jnp.arange(max_iters) < iters).astype(jnp.float32)
+            return params, (losses * msk).sum() / jnp.maximum(msk.sum(), 1)
+
+        return run
+
+    def _iid_cohort_views(self, model, batch_size: int, max_iters: int):
+        """Budget-compacted cohort local SGD over pre-gathered batch views
+        — the fused generic driver's compute half (ISSUE 10).
+
+        ``jax.vmap(_iid_scan_views)`` executes every ``max_iters`` slot on
+        every cohort lane and discards the masked work (``active=0`` slots
+        are identity updates).  Under FedSAE's self-adaptive budgets most
+        (lane, slot) pairs ARE masked — small-workload clients get 0-1 of
+        the straggler-sized ``max_iters`` slots — so the masked walk burns
+        the majority of local-SGD compute on identity updates.  This
+        runner skips them:
+
+        - lanes are stable-sorted by descending budget, so slot ``i``'s
+          active lanes form a PREFIX of the lane axis;
+        - each slot dispatches (``lax.switch``) to the smallest
+          power-of-two prefix >= its active-lane count and runs the
+          vmapped step on that static slice only;
+        - results are scattered back through the inverse permutation.
+
+        Bitwise-identical to the unfused walk by construction: executed
+        (lane, slot) pairs run literally the same per-lane step (padding
+        lanes inside a prefix keep their ``active=0`` masking, so they
+        stay identity updates), skipped pairs were identity updates whose
+        losses the per-lane mean already masked out, and the sort is pure
+        data movement inverted on the way out
+        (tests/test_fused_generic.py pins this against the per-lane walk
+        across drivers and models)."""
+        lr = self.lr
+
+        def lane_step(global_params, params, xb, yb, bm, active):
+            # the unfused walk's loop body, verbatim (bitwise contract)
+            batch = {"x": xb, "y": yb, "mask": bm}
+
+            def loss_fn(p):
+                return self._prox(model.loss(p, batch), p, global_params)
+
+            loss, g = jax.value_and_grad(loss_fn)(params)
+            return jax.tree.map(lambda p, gg: p - lr * active * gg,
+                                params, g), loss
+
+        def run_cohort(global_params, xb_all, yb_all, bmask, iters):
+            K = iters.shape[0]
+            sizes = [0]
+            s = 1
+            while s < K:
+                sizes.append(s)
+                s *= 2
+            sizes.append(K)
+
+            order = jnp.argsort(-iters)        # stable: prefix per slot
+            inv = jnp.argsort(order)           # inverse permutation
+            xb_s = jnp.swapaxes(xb_all[order], 0, 1)   # [IT, K, B, ...]
+            yb_s = jnp.swapaxes(yb_all[order], 0, 1)
+            bm_s = bmask[order]
+            it_s = iters[order]
+            slot = jnp.arange(max_iters)
+            counts = (slot[:, None] < it_s[None, :]).sum(1)      # [IT]
+            bidx = jnp.searchsorted(jnp.asarray(sizes), counts)
+            params0 = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (K,) + l.shape),
+                global_params)
+
+            def make_branch(S):
+                if S == 0:
+                    def branch(op):
+                        return op[0], jnp.zeros((K,), jnp.float32)
+                    return branch
+
+                def branch(op):
+                    params, xb_i, yb_i, active = op
+
+                    def cut(t):
+                        return t[:S]
+
+                    p_s, loss_s = jax.vmap(
+                        lane_step, in_axes=(None, 0, 0, 0, 0, 0))(
+                        global_params, jax.tree.map(cut, params),
+                        cut(xb_i), cut(yb_i), cut(bm_s), cut(active))
+                    new_params = jax.tree.map(
+                        lambda full, upd: full.at[:S].set(upd),
+                        params, p_s)
+                    return new_params, jnp.zeros(
+                        (K,), jnp.float32).at[:S].set(loss_s)
+
+                return branch
+
+            branches = [make_branch(S) for S in sizes]
+
+            def step(params, xs):
+                i, b, xb_i, yb_i = xs
+                active = (i < it_s).astype(jnp.float32)
+                return jax.lax.switch(b, branches,
+                                      (params, xb_i, yb_i, active))
+
+            params_s, losses_s = jax.lax.scan(
+                step, params0, (slot, bidx, xb_s, yb_s))
+            msk = (slot[:, None] < it_s[None, :]).astype(jnp.float32)
+            mean = (losses_s * msk).sum(0) / jnp.maximum(msk.sum(0), 1)
+            return (jax.tree.map(lambda t: t[inv], params_s), mean[inv])
+
+        return run_cohort
+
+    def _iid_sgd_core(self, model, batch_size: int, max_iters: int,
+                      fused: Optional[bool] = None):
         """The iid minibatch loop, parameterized over the batch fetch.
 
         One implementation serves both data layouts — the gathered
@@ -297,9 +519,27 @@ class RoundEngine:
         (silo-round semantics): no extra full-shard pass.  Zero-budget
         clients report 0.0; the server never consumes losses of
         non-uploaders.
+
+        ``fused`` (default: the engine's ``fused_generic``) picks the data
+        walk: the fused one pre-gathers every batch view before the scan
+        (``_iid_batch_views`` + ``_iid_scan_views``) so generic LocalStep
+        bodies stop paying a per-iteration gather; the unfused one fetches
+        inside the loop body.  Both walks produce bit-identical results —
+        the gather is pure data movement (tests/test_fused_generic.py).
         """
+        fused = self.fused_generic if fused is None else bool(fused)
         lr = self.lr
         B = batch_size
+
+        if fused:
+            prep = self._iid_batch_views(batch_size, max_iters)
+            run = self._iid_scan_views(model, batch_size, max_iters)
+
+            def train(global_params, fetch, nk, iters, key):
+                xb_all, yb_all, bmask = prep(fetch, nk, key)
+                return run(global_params, xb_all, yb_all, bmask, iters)
+
+            return train
 
         def train(global_params, fetch, nk, iters, key):
             nk_safe = jnp.maximum(nk, 1)
@@ -463,26 +703,88 @@ class RoundEngine:
                 global_params, params_k, residual_rows, uploaded, k, backend)
             return rec, new_rows
 
+    def _finish_round(self, global_params, params_k, losses, n, n_iters,
+                      backend: str, residual=None, ids=None, corrupt=None):
+        """Stages 3+4 for every replicated packed round body: optional
+        fault injection at the upload seam, the upload transform with
+        error feedback, then screen + aggregate.  Shared verbatim by the
+        gather-based body, the direct-iid body and the prefetch execute
+        half, so their traced post-training programs are identical by
+        construction.  Returns the body's output tuple: (new_global,
+        losses, any_up[, residual][, bad])."""
+        injecting, screening = self.injecting, self.screening
+        if self.compressing:
+            uploading = n_iters > 0
+            transmit = uploading
+            if self._inject_pre:      # sign_flip/explode: the client
+                params_k = self._inject_faults(  # transmits the garbage
+                    global_params, params_k, corrupt, uploading)
+            elif injecting:           # nan/inf garbage never transmits
+                transmit = uploading & ~corrupt
+            params_k, new_rows = self._upload_transform(
+                global_params, params_k, residual[ids], transmit,
+                backend)
+            if self._block_residual:  # screened transmit (explode):
+                # the error-feedback rows of detected uploads keep
+                # their pre-round bits (crash-twin residual parity)
+                residual = residual.at[
+                    jnp.where(corrupt, residual.shape[0], ids)].set(
+                    new_rows, mode="drop")
+            else:
+                residual = residual.at[ids].set(new_rows)  # distinct
+            if self._inject_post:
+                params_k = self._inject_faults(global_params, params_k,
+                                               corrupt, uploading)
+            new_global, any_up, bad = self._finish(
+                global_params, params_k,
+                self._upload_weights(n, n_iters))
+            if screening:
+                return new_global, losses, any_up, residual, bad
+            return new_global, losses, any_up, residual
+        if injecting:
+            params_k = self._inject_faults(global_params, params_k,
+                                           corrupt, n_iters > 0)
+        new_global, any_up, bad = self._finish(
+            global_params, params_k, self._upload_weights(n, n_iters))
+        if screening:
+            return new_global, losses, any_up, bad
+        return new_global, losses, any_up
+
     # ------------------------------------------------------------------
     # pallas-backend stages (repro.kernels); each falls back to the XLA
     # implementation when no kernel applies
     # ------------------------------------------------------------------
     def _can_fuse_sgd(self, model, sampling: str) -> bool:
         """Kernel-eligibility dispatch lives with the kernels
-        (``repro.kernels.ops.fused_sgd_eligible``): the fused local-SGD
-        kernel covers MCLR steps with iid minibatches; every other
-        ``LocalStep`` keeps the XLA autodiff scan."""
+        (``repro.kernels.ops.fused_sgd_eligible``): fused local-SGD
+        kernels cover MCLR and dense-MLP steps with iid minibatches; every
+        other ``LocalStep`` keeps the XLA autodiff scan."""
         from repro.kernels.ops import fused_sgd_eligible
         return fused_sgd_eligible(model, sampling)
 
-    def _fused_sgd(self, global_params, x, y, n, n_iters, keys,
+    def _fused_sgd(self, model, global_params, x, y, n, n_iters, keys,
                    batch_size: int, max_iters: int):
-        """Budgeted local SGD through the fed_local_sgd kernel.  Minibatch
-        indices are drawn with the exact randint call the XLA iid path uses,
-        so the two backends see bit-identical batches."""
+        """Budgeted local SGD through the fused kernel for ``model.kind``
+        (fed_local_sgd for MCLR, fed_local_sgd_dense for the two-layer MLP
+        family — dispatch, not assumption).  Minibatch indices are drawn
+        with the exact randint call the XLA iid path uses, so the backends
+        see bit-identical batches."""
         from repro.kernels import ops as kops
         idx = jax.vmap(lambda key, nk: jax.random.randint(
             key, (max_iters, batch_size), 0, jnp.maximum(nk, 1)))(keys, n)
+        kind = getattr(model, "kind", None)
+        if kind == "mlp":
+            w1_k, b1_k, w2_k, b2_k, losses = kops.fed_local_sgd_dense(
+                x, y, idx, global_params["w1"], global_params["b1"],
+                global_params["w2"], global_params["b2"],
+                n.astype(jnp.int32), n_iters.astype(jnp.int32),
+                lr=self.lr, prox_mu=self.prox_mu)
+            return {"w1": w1_k, "b1": b1_k, "w2": w2_k, "b2": b2_k}, losses
+        if kind != "mclr":
+            raise ValueError(
+                f"no fused local-SGD kernel for step kind {kind!r} "
+                "(fused_sgd_eligible should have dispatched it to the "
+                "XLA path)")
         w_k, b_k, losses = kops.fed_local_sgd_mclr(
             x, y, idx, global_params["w"], global_params["b"],
             n.astype(jnp.int32), n_iters.astype(jnp.int32),
@@ -520,7 +822,7 @@ class RoundEngine:
             keys = jax.random.split(rng, x.shape[0])
             if fuse_sgd:
                 params_k, losses = self._fused_sgd(
-                    global_params, x, y, n, n_iters, keys,
+                    model, global_params, x, y, n, n_iters, keys,
                     batch_size, max_iters)
             else:
                 params_k, losses = jax.vmap(
@@ -580,7 +882,6 @@ class RoundEngine:
         local_train = None if fuse_sgd else \
             self._local_sgd(model, batch_size, max_iters, sampling)
         gather = self._cohort_gather(max_n, backend)
-        injecting, screening = self.injecting, self.screening
 
         def train_cohort(global_params, flat_x, flat_y, offsets, lengths,
                          ids, n_iters, rng):
@@ -592,7 +893,7 @@ class RoundEngine:
                 keys = jax.random.split(rng, ids.shape[0])
                 if fuse_sgd:
                     params_k, losses = self._fused_sgd(
-                        global_params, x, y, n, n_iters, keys,
+                        model, global_params, x, y, n, n_iters, keys,
                         batch_size, max_iters)
                 else:
                     params_k, losses = jax.vmap(
@@ -606,33 +907,9 @@ class RoundEngine:
                 params_k, losses, n = train_cohort(
                     global_params, flat_x, flat_y, offsets, lengths, ids,
                     n_iters, rng)
-                uploading = n_iters > 0
-                transmit = uploading
-                if self._inject_pre:      # sign_flip/explode: the client
-                    params_k = self._inject_faults(  # transmits the
-                        global_params, params_k, corrupt, uploading)
-                elif injecting:           # nan/inf garbage never transmits
-                    transmit = uploading & ~corrupt
-                params_k, new_rows = self._upload_transform(
-                    global_params, params_k, residual[ids], transmit,
-                    backend)
-                if self._block_residual:  # screened transmit (explode):
-                    # the error-feedback rows of detected uploads keep
-                    # their pre-round bits (crash-twin residual parity)
-                    residual = residual.at[
-                        jnp.where(corrupt, residual.shape[0], ids)].set(
-                        new_rows, mode="drop")
-                else:
-                    residual = residual.at[ids].set(new_rows)  # distinct
-                if self._inject_post:
-                    params_k = self._inject_faults(global_params, params_k,
-                                                   corrupt, uploading)
-                new_global, any_up, bad = self._finish(
-                    global_params, params_k,
-                    self._upload_weights(n, n_iters))
-                if screening:
-                    return new_global, losses, any_up, residual, bad
-                return new_global, losses, any_up, residual
+                return self._finish_round(
+                    global_params, params_k, losses, n, n_iters, backend,
+                    residual=residual, ids=ids, corrupt=corrupt)
 
             return round_fn
 
@@ -641,19 +918,14 @@ class RoundEngine:
             params_k, losses, n = train_cohort(
                 global_params, flat_x, flat_y, offsets, lengths, ids,
                 n_iters, rng)
-            if injecting:
-                params_k = self._inject_faults(global_params, params_k,
-                                               corrupt, n_iters > 0)
-            new_global, any_up, bad = self._finish(
-                global_params, params_k, self._upload_weights(n, n_iters))
-            if screening:
-                return new_global, losses, any_up, bad
-            return new_global, losses, any_up
+            return self._finish_round(global_params, params_k, losses, n,
+                                      n_iters, backend, corrupt=corrupt)
 
         return round_fn
 
     def _direct_iid_round_body(self, model, batch_size: int, max_iters: int,
-                               max_n: int) -> Callable:
+                               max_n: int,
+                               fused: Optional[bool] = None) -> Callable:
         """Gather-free iid round: minibatches are indexed straight out of
         the packed flat arrays (``flat_x[offset_k + idx]``), so the
         [K, max_n, feat] cohort shard is never materialized.
@@ -663,31 +935,62 @@ class RoundEngine:
         (clients are laid out real-samples-first) — but it reads O(iters *
         B * feat) instead of writing an O(K * max_n * feat) intermediate,
         which is what lets the scan driver clear 2x at paper scale.
+
+        ``fused`` (default: the engine's ``fused_generic``) picks the
+        local-SGD walk: the fused one pre-gathers all batch views and runs
+        the budget-compacted cohort scan (``_iid_cohort_views`` — masked
+        budget slots are skipped, not executed-and-discarded); the unfused
+        one is the per-client per-iteration fetch loop.  Bit-identical
+        either way (tests/test_fused_generic.py).
         """
-        core = self._iid_sgd_core(as_local_step(model), batch_size,
-                                  max_iters)
+        fused = self.fused_generic if fused is None else bool(fused)
+        step_model = as_local_step(model)
+        if fused:
+            prep = self._iid_batch_views(batch_size, max_iters)
+            run_cohort = self._iid_cohort_views(step_model, batch_size,
+                                                max_iters)
 
-        def train_cohort(global_params, flat_x, flat_y, offsets, lengths,
-                         ids, n_iters, rng):
-            with stage(STAGE_GATHER):
-                # direct packed indexing: the "gather" stage reduces to the
-                # per-client offset/length lookup (no cohort shard is built)
-                offs = offsets[ids]
-                n = jnp.minimum(lengths[ids], max_n)
-            with stage(STAGE_LOCAL_SGD):
-                keys = jax.random.split(rng, ids.shape[0])
+            def train_cohort(global_params, flat_x, flat_y, offsets,
+                             lengths, ids, n_iters, rng):
+                with stage(STAGE_GATHER):
+                    offs = offsets[ids]
+                    n = jnp.minimum(lengths[ids], max_n)
+                    keys = jax.random.split(rng, ids.shape[0])
 
-                def local_train(off_k, nk, iters, key):
-                    return core(global_params,
-                                lambda idx: (flat_x[off_k + idx],
-                                             flat_y[off_k + idx]),
-                                nk, iters, key)
+                    def one(off_k, nk, key):
+                        return prep(lambda idx: (flat_x[off_k + idx],
+                                                 flat_y[off_k + idx]),
+                                    nk, key)
 
-                params_k, losses = jax.vmap(local_train)(offs, n, n_iters,
-                                                         keys)
-            return params_k, losses, n
+                    xb, yb, bm = jax.vmap(one)(offs, n, keys)
+                with stage(STAGE_LOCAL_SGD):
+                    params_k, losses = run_cohort(global_params, xb, yb,
+                                                  bm, n_iters)
+                return params_k, losses, n
+        else:
+            core = self._iid_sgd_core(step_model, batch_size, max_iters,
+                                      fused=False)
 
-        injecting, screening = self.injecting, self.screening
+            def train_cohort(global_params, flat_x, flat_y, offsets,
+                             lengths, ids, n_iters, rng):
+                with stage(STAGE_GATHER):
+                    # direct packed indexing: the "gather" stage reduces to
+                    # the per-client offset/length lookup (no cohort shard
+                    # is built)
+                    offs = offsets[ids]
+                    n = jnp.minimum(lengths[ids], max_n)
+                with stage(STAGE_LOCAL_SGD):
+                    keys = jax.random.split(rng, ids.shape[0])
+
+                    def local_train(off_k, nk, iters, key):
+                        return core(global_params,
+                                    lambda idx: (flat_x[off_k + idx],
+                                                 flat_y[off_k + idx]),
+                                    nk, iters, key)
+
+                    params_k, losses = jax.vmap(local_train)(offs, n,
+                                                             n_iters, keys)
+                return params_k, losses, n
 
         if self.compressing:
             def round_fn(global_params, flat_x, flat_y, offsets, lengths,
@@ -695,31 +998,9 @@ class RoundEngine:
                 params_k, losses, n = train_cohort(
                     global_params, flat_x, flat_y, offsets, lengths, ids,
                     n_iters, rng)
-                uploading = n_iters > 0
-                transmit = uploading
-                if self._inject_pre:
-                    params_k = self._inject_faults(
-                        global_params, params_k, corrupt, uploading)
-                elif injecting:
-                    transmit = uploading & ~corrupt
-                params_k, new_rows = self._upload_transform(
-                    global_params, params_k, residual[ids], transmit,
-                    "xla")
-                if self._block_residual:
-                    residual = residual.at[
-                        jnp.where(corrupt, residual.shape[0], ids)].set(
-                        new_rows, mode="drop")
-                else:
-                    residual = residual.at[ids].set(new_rows)  # distinct
-                if self._inject_post:
-                    params_k = self._inject_faults(global_params, params_k,
-                                                   corrupt, uploading)
-                new_global, any_up, bad = self._finish(
-                    global_params, params_k,
-                    self._upload_weights(n, n_iters))
-                if screening:
-                    return new_global, losses, any_up, residual, bad
-                return new_global, losses, any_up, residual
+                return self._finish_round(
+                    global_params, params_k, losses, n, n_iters, "xla",
+                    residual=residual, ids=ids, corrupt=corrupt)
 
             return round_fn
 
@@ -728,16 +1009,94 @@ class RoundEngine:
             params_k, losses, n = train_cohort(
                 global_params, flat_x, flat_y, offsets, lengths, ids,
                 n_iters, rng)
-            if injecting:
-                params_k = self._inject_faults(global_params, params_k,
-                                               corrupt, n_iters > 0)
-            new_global, any_up, bad = self._finish(
-                global_params, params_k, self._upload_weights(n, n_iters))
-            if screening:
-                return new_global, losses, any_up, bad
-            return new_global, losses, any_up
+            return self._finish_round(global_params, params_k, losses, n,
+                                      n_iters, "xla", corrupt=corrupt)
 
         return round_fn
+
+    def _prefetched_round_parts(self, model, batch_size: int,
+                                max_iters: int, max_n: int, sampling: str,
+                                backend: Optional[str] = None):
+        """The training stage of a packed round, split at the data seam
+        for the double-buffered segment (ISSUE 10):
+
+            prep_data(flat_x, flat_y, offsets, lengths, ids, sub) -> data
+            train_data(global_params, data, n_iters, sub)
+                -> (params_k, losses, n)
+
+        ``prep_data`` runs in the round's PREPARE half (prefetched one
+        round ahead); ``train_data`` in EXECUTE.  Together they compute
+        bitwise what the off-mode bodies' train_cohort computes — same
+        randint draws (same ``sub``), same gathers, same scan arithmetic;
+        only the trace placement moves (tests/test_fused_generic.py).
+
+        Dispatch mirrors the off-mode segment: backend="xla" + iid
+        prepares the per-client ``[max_iters, B, ...]`` minibatch views
+        straight out of the packed arrays (prefetching IS the hoisted
+        fused data walk, so ``fused_generic=False`` never reaches here);
+        any other sampling/backend pre-gathers the [K, max_n, ...] cohort
+        shard and executes the usual fused-kernel or autodiff local SGD
+        on it."""
+        model = as_local_step(model)
+        backend = self._resolve_backend(backend)
+
+        if backend == "xla" and sampling == "iid":
+            prep = self._iid_batch_views(batch_size, max_iters)
+            run_cohort = self._iid_cohort_views(model, batch_size,
+                                                max_iters)
+
+            def prep_data(flat_x, flat_y, offsets, lengths, ids, sub):
+                with stage(STAGE_GATHER):
+                    offs = offsets[ids]
+                    n = jnp.minimum(lengths[ids], max_n)
+                    keys = jax.random.split(sub, ids.shape[0])
+
+                    def one(off_k, nk, key):
+                        return prep(lambda idx: (flat_x[off_k + idx],
+                                                 flat_y[off_k + idx]),
+                                    nk, key)
+
+                    xb, yb, bm = jax.vmap(one)(offs, n, keys)
+                return {"xb": xb, "yb": yb, "bmask": bm, "n": n}
+
+            def train_data(global_params, data, n_iters, sub):
+                with stage(STAGE_LOCAL_SGD):
+                    params_k, losses = run_cohort(
+                        global_params, data["xb"], data["yb"],
+                        data["bmask"], n_iters)
+                return params_k, losses, data["n"]
+
+            return prep_data, train_data
+
+        gather = self._cohort_gather(max_n, backend)
+        fuse_sgd = backend == "pallas" and self._can_fuse_sgd(model,
+                                                              sampling)
+        local_train = None if fuse_sgd else \
+            self._local_sgd(model, batch_size, max_iters, sampling)
+
+        def prep_data(flat_x, flat_y, offsets, lengths, ids, sub):
+            with stage(STAGE_GATHER):
+                offs = offsets[ids]
+                n = jnp.minimum(lengths[ids], max_n)
+                x, y, mask = gather(flat_x, flat_y, offs, n)
+            return {"x": x, "y": y, "mask": mask, "n": n}
+
+        def train_data(global_params, data, n_iters, sub):
+            n = data["n"]
+            with stage(STAGE_LOCAL_SGD):
+                keys = jax.random.split(sub, n.shape[0])
+                if fuse_sgd:
+                    params_k, losses = self._fused_sgd(
+                        model, global_params, data["x"], data["y"], n,
+                        n_iters, keys, batch_size, max_iters)
+                else:
+                    params_k, losses = jax.vmap(
+                        local_train, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                        global_params, data["x"], data["y"], data["mask"],
+                        n, n_iters, keys)
+            return params_k, losses, n
+
+        return prep_data, train_data
 
     def make_packed_round(self, model, batch_size: int, max_iters: int,
                           max_n: int, sampling: str = "shuffle",
@@ -783,16 +1142,18 @@ class RoundEngine:
         owned slots per shard`` is bitwise the masked mode
         (tests/test_capacity.py).
         """
+        donate = (0, 8) if self.compressing else (0,)
         if mesh is not None:
             return self._jit_round(self._sharded_round_fn(
                 model, batch_size, max_iters, max_n, sampling, backend,
-                mesh, capacity))
+                mesh, capacity), donate=donate)
         if capacity is not None:
             raise ValueError(
                 "capacity compaction requires a sharded mesh; pass mesh= "
                 "or leave capacity=None for the replicated round")
         return self._jit_round(self._packed_round_body(
-            model, batch_size, max_iters, max_n, sampling, backend))
+            model, batch_size, max_iters, max_n, sampling, backend),
+            donate=donate)
 
     # ------------------------------------------------------------------
     # sharded rounds (ISSUE 4): the client axis lives on the `data` mesh
@@ -905,7 +1266,7 @@ class RoundEngine:
                     x, y, _ = gather(flat_x, flat_y, offs, n)
                 with stage(STAGE_LOCAL_SGD):
                     params_k, losses = self._fused_sgd(
-                        global_params, x, y, n, iters, keys,
+                        model, global_params, x, y, n, iters, keys,
                         batch_size, max_iters)
             elif direct_iid:
                 def local_fn(off_k, nk, it, key):
@@ -1150,6 +1511,14 @@ class RoundEngine:
         and counted in the per-round ``overflowed`` stat (the resolution
         lives in ``repro.core.selection.resolve_capacity``).
 
+        ``cfg.prefetch`` (ISSUE 10): "off" (default) runs the classic one
+        scanned round per step; "double_buffer" splits every round into
+        prepare/execute halves and carries the prepared bundle across
+        scan steps (``_scan_prefetch``), so cohort t+1's selection +
+        budget math + data gather is issued in the same program region
+        as cohort t's local SGD.  Bit-identical results in both modes
+        (replicated driver only; a sharded mesh raises).
+
         ``telemetry`` (ISSUE 7): device-computed metric accumulation.  The
         per-round stats gain ``client_uploaded`` ([K] per-slot upload
         outcome), ``upload_bytes``/``dense_upload_bytes`` (the
@@ -1191,6 +1560,24 @@ class RoundEngine:
             h_cap=float(cfg.h_cap), fixed_epochs=float(cfg.fixed_epochs))
         telemetry = bool(telemetry)
 
+        # ISSUE 10: double-buffered cohort prefetch.  "off" traces the
+        # exact pre-prefetch program (the round is still composed as
+        # execute(prepare(...)) in one scan step); "double_buffer" carries
+        # next round's prepared bundle — selection, budgets, the gathered
+        # cohort data — across scan steps so cohort t+1's gather sits in
+        # the same XLA program region as cohort t's local SGD.
+        prefetch = getattr(cfg, "prefetch", "off") or "off"
+        if prefetch not in PREFETCH_MODES:
+            raise ValueError(
+                f"unknown prefetch mode {prefetch!r}; choose from "
+                f"{PREFETCH_MODES}")
+        if prefetch != "off" and mesh is not None:
+            raise ValueError(
+                "prefetch=\"double_buffer\" is not supported on a sharded "
+                "mesh yet (the prepared bundle would need per-shard "
+                "carries through shard_map; run prefetch on the "
+                "replicated scan driver)")
+
         # ISSUE 8: fault + defense wiring.  With faults=None and screening
         # off every branch below is statically absent, so the traced
         # program is bitwise the PR-7 one.
@@ -1212,7 +1599,8 @@ class RoundEngine:
                 "quarantine_threshold > 0 requires the upload screen "
                 "(screen_norm) — quarantine counts screened failures")
 
-        def make_one_round(select, train, sizes, mu, sigma, overflow=None):
+        def make_one_round(select, train, sizes, mu, sigma, overflow=None,
+                           prep_data=None):
             """The per-round server step, shared verbatim by the replicated
             and the sharded segment — only cohort selection, the training
             dispatch, the client-size lookup and the capacity-overflow mask
@@ -1244,7 +1632,24 @@ class RoundEngine:
             restores the crash-row (weight 0, global-row) outcome.
             ``sign_flip`` is NOT demoted: the server cannot tell a flipped
             delta from a real one, so it uploads normally and robust
-            aggregation is the defense."""
+            aggregation is the defense.
+
+            The round is built as ``execute(prepare(carry, t))`` and the
+            two halves are exported as ``one_round.prepare`` /
+            ``one_round.execute`` (ISSUE 10): ``prepare`` runs everything
+            upstream of training — heterogeneity draw, selection, the
+            Ira/Fassa history update, budgets, the round's data_rng split
+            and (with a ``prep_data`` hook) the cohort data gather — into
+            a prefetch bundle ``pf``; ``execute`` consumes the bundle
+            (training, value update, stats, quarantine).  The default
+            ``one_round`` composes them back-to-back, emitting ops in
+            exactly the pre-split order, so the off-mode traced program is
+            unchanged; the double-buffered segment driver instead carries
+            ``pf`` across scan steps (``_scan_prefetch``).
+
+            ``prep_data(ids, sub) -> data`` pre-gathers the cohort's
+            training data into the bundle; ``train`` then receives it as a
+            trailing ``data=`` keyword."""
             compressing = self.compressing
             phases = None if fm is None else fm.phases(int(mu.shape[0]))
             if phases is not None:
@@ -1252,8 +1657,7 @@ class RoundEngine:
             n_clients = int(mu.shape[0])
             demote = fm is not None and fm.demotes
 
-            def one_round(carry, t):
-                params = carry["params"]
+            def prepare(carry, t):
                 L, H, theta = carry["L"], carry["H"], carry["theta"]
                 values = carry["values"]
                 sel_rng, k_sel, k_het = jax.random.split(carry["sel_rng"], 3)
@@ -1290,17 +1694,38 @@ class RoundEngine:
                         algo, L, H, theta, ids, E_run, **wl_kwargs)[0]
                 else:
                     e_train = e_eff
-                L, H, theta = L_new, H_new, theta_new
                 n = jnp.minimum(sizes[ids], max_n)
                 n_iters = budget_iters(e_train, n, batch_size, max_iters)
                 data_rng, sub = jax.random.split(carry["data_rng"])
+                new_carry = dict(carry, L=L_new, H=H_new, theta=theta_new,
+                                 sel_rng=sel_rng, data_rng=data_rng)
+                pf = {"t": t, "ids": ids, "n_iters": n_iters, "sub": sub,
+                      "ovf": ovf, "outcome": outcome, "assigned": assigned,
+                      "e_eff": e_eff, "E_true": E_true}
+                if injecting:
+                    pf["corrupt"] = corrupt
+                if prep_data is not None:
+                    pf["data"] = prep_data(ids, sub)
+                return new_carry, pf
+
+            def execute(carry, pf):
+                params = carry["params"]
+                values = carry["values"]
+                L, H, theta = carry["L"], carry["H"], carry["theta"]
+                t, ids = pf["t"], pf["ids"]
+                n_iters, sub = pf["n_iters"], pf["sub"]
+                ovf, outcome = pf["ovf"], pf["outcome"]
+                assigned, e_eff, E_true = (pf["assigned"], pf["e_eff"],
+                                           pf["E_true"])
+                corrupt = pf.get("corrupt")
                 if compressing:
                     targs = (params, carry["residual"], ids, n_iters, sub)
                 else:
                     targs = (params, ids, n_iters, sub)
                 if injecting:
                     targs = targs + (corrupt,)
-                out = train(*targs)
+                tkw = {} if prep_data is None else {"data": pf["data"]}
+                out = train(*targs, **tkw)
                 if compressing:
                     params, residual, losses = out[0], out[1], out[2]
                 else:
@@ -1357,7 +1782,8 @@ class RoundEngine:
                         WORKLOAD_HIST_BINS)
                 new_carry = {"params": params, "L": L, "H": H,
                              "theta": theta, "values": values,
-                             "data_rng": data_rng, "sel_rng": sel_rng}
+                             "data_rng": carry["data_rng"],
+                             "sel_rng": carry["sel_rng"]}
                 if screening:
                     stats["screened"] = bad.sum().astype(jnp.float32)
                 if quarantine:
@@ -1373,19 +1799,35 @@ class RoundEngine:
                     new_carry["residual"] = residual
                 return new_carry, stats
 
+            def one_round(carry, t):
+                carry, pf = prepare(carry, t)
+                return execute(carry, pf)
+
+            one_round.prepare = prepare
+            one_round.execute = execute
             return one_round
 
         if mesh is not None:
             return self._jit_round(self._sharded_segment(
                 model, batch_size, max_iters, max_n, sampling, backend,
                 mesh, K, strategy, beta, al_rounds, make_one_round,
-                capacity))
+                capacity),
+                donate=(0, 8) if self.compressing else (0,))
 
         if backend == "xla" and sampling == "iid":
+            # the segment honors cfg's fused_generic over the engine's
+            # constructor default, so direct make_segment_fn callers (the
+            # bench's unfused-baseline leg) get the walk the cfg names
             round_body = self._direct_iid_round_body(
-                model, batch_size, max_iters, max_n)
+                model, batch_size, max_iters, max_n,
+                fused=getattr(cfg, "fused_generic", None))
         else:
             round_body = self._packed_round_body(
+                model, batch_size, max_iters, max_n, sampling, backend)
+
+        prefetching = prefetch == "double_buffer"
+        if prefetching:
+            prep_flat, train_data = self._prefetched_round_parts(
                 model, batch_size, max_iters, max_n, sampling, backend)
 
         if self.compressing:
@@ -1395,6 +1837,30 @@ class RoundEngine:
                     return select_cohort_device(k_sel, values, K, strategy,
                                                 beta, use_al=t < al_rounds,
                                                 elig=elig)
+
+                if prefetching:
+                    def prep_data(ids, sub):
+                        return prep_flat(flat_x, flat_y, offsets, lengths,
+                                         ids, sub)
+
+                    def train(params, residual, ids, n_iters, sub,
+                              corrupt=None, data=None):
+                        params_k, losses, n = train_data(params, data,
+                                                         n_iters, sub)
+                        out = self._finish_round(
+                            params, params_k, losses, n, n_iters, backend,
+                            residual=residual, ids=ids, corrupt=corrupt)
+                        if screening:
+                            return out[0], out[3], out[1], out[4]
+                        return out[0], out[3], out[1]
+
+                    one_round = make_one_round(select, train, lengths, mu,
+                                               sigma, prep_data=prep_data)
+                    carry = dict(state)
+                    carry["residual"] = residual
+                    carry, stats = _scan_prefetch(one_round, carry, ts)
+                    residual = carry.pop("residual")
+                    return carry, residual, stats
 
                 def train(params, residual, ids, n_iters, sub,
                           corrupt=None):
@@ -1422,6 +1888,26 @@ class RoundEngine:
                                                 beta, use_al=t < al_rounds,
                                                 elig=elig)
 
+                if prefetching:
+                    def prep_data(ids, sub):
+                        return prep_flat(flat_x, flat_y, offsets, lengths,
+                                         ids, sub)
+
+                    def train(params, ids, n_iters, sub, corrupt=None,
+                              data=None):
+                        params_k, losses, n = train_data(params, data,
+                                                         n_iters, sub)
+                        out = self._finish_round(
+                            params, params_k, losses, n, n_iters, backend,
+                            corrupt=corrupt)
+                        if screening:
+                            return out[0], out[1], out[3]
+                        return out[0], out[1]
+
+                    one_round = make_one_round(select, train, lengths, mu,
+                                               sigma, prep_data=prep_data)
+                    return _scan_prefetch(one_round, state, ts)
+
                 def train(params, ids, n_iters, sub, corrupt=None):
                     args = (params, flat_x, flat_y, offsets, lengths, ids,
                             n_iters, sub)
@@ -1436,7 +1922,12 @@ class RoundEngine:
                                            sigma)
                 return jax.lax.scan(one_round, state, ts)
 
-        return self._jit_round(segment)
+        # the caller reassigns state (argnum 0) and, when compressing, the
+        # error-feedback residual (argnum 8) from the outputs every block,
+        # so both buffers are donation-dead on entry (ISSUE 10 audit:
+        # tests/test_fused_generic.py)
+        return self._jit_round(
+            segment, donate=(0, 8) if self.compressing else (0,))
 
     def _sharded_segment(self, model, batch_size: int, max_iters: int,
                          max_n: int, sampling: str, backend: str, mesh,

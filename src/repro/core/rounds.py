@@ -32,8 +32,9 @@ def make_round_fn(model, lr: float, batch_size: int, max_iters: int,
     ``backend="pallas"`` selects the fused-kernel path where one applies:
     on this padded interface that is the fused local-SGD kernel, whose
     eligibility (``repro.kernels.ops.fused_sgd_eligible``) needs
-    ``sampling="iid"`` and an MCLR step — any other LocalStep falls back
-    to the XLA autodiff scan.
+    ``sampling="iid"`` and a step from the fused family — MCLR or the
+    dense two-layer MLP (``FUSED_SGD_KINDS``); any other LocalStep falls
+    back to the XLA autodiff scan.
     """
     engine = RoundEngine(lr=lr, aggregator=get_aggregator("fedavg"),
                          prox_mu=prox_mu, donate=False, backend=backend)

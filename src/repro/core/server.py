@@ -216,6 +216,14 @@ class ComputeConfig:
     rng_impl: str = ""           # "" auto | numpy | device
     mesh_shards: int = 0         # 0 = replicated clients
     cohort_capacity: object = "full"
+    prefetch: str = "off"        # off | double_buffer (ISSUE 10: scan
+                                 # driver prepares cohort t+1 — selection,
+                                 # budgets, data gather — while cohort t
+                                 # trains; bitwise "off", replicated only)
+    fused_generic: bool = True   # fused iid local SGD for generic
+                                 # LocalStep bodies (pre-gathered batch
+                                 # views + budget-slot compaction;
+                                 # bitwise the per-iteration walk)
 
 
 @dataclasses.dataclass
@@ -287,6 +295,19 @@ class ServerConfig:
                                  # owned slots past capacity overflow ->
                                  # dropped via the Ira/Fassa crash branch
                                  # (core.selection.resolve_capacity)
+    prefetch: str = "off"        # "off" | "double_buffer" — scan-driver
+                                 # cohort prefetch (ISSUE 10): prepare
+                                 # round t+1 (selection, budgets, data
+                                 # gather) in the same scan step as round
+                                 # t's training.  Bitwise "off"; replicated
+                                 # driver only (sharded mesh raises)
+    fused_generic: bool = True   # fused iid data walk for generic
+                                 # LocalStep bodies on the scan driver:
+                                 # pre-gather all [max_iters, B] batch
+                                 # views, scan pure compute (ISSUE 10).
+                                 # False = per-iteration fetch (bitwise
+                                 # identical, slower; kept as the
+                                 # generic-gap baseline)
     upload_compress: str = "none"
                                  # upload transform between local SGD and
                                  # aggregation: "none" (dense f32 deltas,
@@ -526,7 +547,8 @@ class FedSAEServer:
             prox_mu=cfg.prox_mu if cfg.algo == "fedprox" else None,
             compress=cfg.upload_compress, topk_frac=cfg.topk_frac,
             faults=cfg.faults,
-            screen_norm=cfg.screen_norm_bound if self.screening else None)
+            screen_norm=cfg.screen_norm_bound if self.screening else None,
+            fused_generic=cfg.fused_generic)
         # error-feedback residual state (upload_compress="topk_q8"): one
         # [P] float32 row per client, sharded with the client blocks when
         # the mesh is; None disables the upload-transform stage entirely

@@ -18,6 +18,7 @@ from repro.kernels import ref
 from repro.kernels.fed_compress import fed_compress_topk_q8_fwd
 from repro.kernels.fed_gather import fed_cohort_gather_fwd
 from repro.kernels.fed_local_sgd import fed_local_sgd_mclr_fwd
+from repro.kernels.fed_local_sgd_dense import fed_local_sgd_dense_fwd
 from repro.kernels.flash_attention import (flash_attention_bwd,
                                            flash_attention_fwd)
 from repro.kernels.fused_xent import fused_softmax_xent_fwd
@@ -137,18 +138,37 @@ def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, lr: float,
                                   interpret=KERNEL_INTERPRET)
 
 
+@annotate("fed.local_sgd_dense.pallas")
+def fed_local_sgd_dense(x, y, idx, w1, b1, w2, b2, ns, n_iters, lr: float,
+                        prox_mu: float = 0.0):
+    """Fused masked budgeted dense-MLP local SGD (see fed_local_sgd_dense.py).
+
+    Returns (w1_k [K, d, H], b1_k [K, H], w2_k [K, H, C], b2_k [K, C],
+    losses [K])."""
+    return fed_local_sgd_dense_fwd(x, y, idx, w1, b1, w2, b2, ns, n_iters,
+                                   lr=lr, prox_mu=prox_mu,
+                                   interpret=KERNEL_INTERPRET)
+
+
+# the step families a fused local-SGD kernel exists for, by LocalStep.kind
+FUSED_SGD_KINDS = ("mclr", "mlp")
+
+
 def fused_sgd_eligible(step, sampling: str) -> bool:
     """Kernel-eligibility dispatch for the LocalStep seam.
 
-    The fused pallas local-SGD kernel implements exactly one step family —
-    masked budgeted MCLR with iid minibatch sampling (its softmax-xent
-    gradients are computed in closed form inside the kernel).  Any other
-    ``LocalStep`` (mlp, lstm, the ``from_model`` architectures) or any
-    other sampling takes the engine's generic XLA autodiff path
-    automatically; backend="pallas" then still fuses the cohort gather and
-    the upload compressor, which are model-agnostic.
+    Fused pallas local-SGD kernels exist for the step families in
+    ``FUSED_SGD_KINDS`` — masked budgeted MCLR (closed-form softmax-xent
+    gradients, ``fed_local_sgd``) and the dense two-layer tanh MLP
+    (hand-written backprop, ``fed_local_sgd_dense``) — always with the iid
+    minibatch rule (indices drawn outside the kernel, bit-identical to the
+    XLA path's draws).  Any other ``LocalStep`` (lstm, the ``from_model``
+    architectures) or any other sampling takes the engine's generic XLA
+    autodiff path automatically; backend="pallas" then still fuses the
+    cohort gather and the upload compressor, which are model-agnostic.
     """
-    return sampling == "iid" and getattr(step, "kind", None) == "mclr"
+    return (sampling == "iid"
+            and getattr(step, "kind", None) in FUSED_SGD_KINDS)
 
 
 @annotate("fed.upload_transform.pallas")

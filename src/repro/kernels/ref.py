@@ -101,6 +101,60 @@ def fed_compress_topk_q8(ef, *, k: int):
     return q, scale
 
 
+def fed_local_sgd_dense(x, y, idx, w10, b10, w20, b20, ns, n_iters, *, lr,
+                        prox_mu: float = 0.0):
+    """Masked budgeted two-layer (tanh MLP) local SGD over precomputed iid
+    minibatch indices — the pure-jnp oracle for the fused dense kernel.
+    Shapes as in fed_local_sgd_dense.fed_local_sgd_dense_fwd; the backward
+    pass is the same closed-form two-layer backprop the kernel runs."""
+    max_iters, B = idx.shape[1], idx.shape[2]
+    C = w20.shape[1]
+
+    def one_client(xk, yk, idxk, nk, iters):
+        nk_safe = jnp.maximum(nk, 1)
+        bmask = (jnp.arange(B) < nk_safe).astype(jnp.float32)
+        bsum = jnp.maximum(bmask.sum(), 1.0)
+        oy = jax.nn.one_hot(yk, C, dtype=jnp.float32)
+
+        def step(carry, xs):
+            w1, b1, w2, b2 = carry
+            i, idx_row = xs
+            xb = xk[idx_row].astype(jnp.float32)
+            oyb = oy[idx_row]
+            h = jnp.tanh(xb @ w1 + b1)
+            logits = h @ w2 + b2
+            logp = jax.nn.log_softmax(logits)
+            nll = -jnp.sum(logp * oyb, axis=-1)
+            loss = jnp.sum(nll * bmask) / bsum
+            err = (jnp.exp(logp) - oyb) * bmask[:, None] / bsum
+            gw2 = h.T @ err
+            gb2 = err.sum(0)
+            dpre = (err @ w2.T) * (1.0 - h * h)
+            gw1 = xb.T @ dpre
+            gb1 = dpre.sum(0)
+            if prox_mu:
+                loss = loss + 0.5 * prox_mu * (
+                    jnp.sum((w1 - w10) ** 2) + jnp.sum((b1 - b10) ** 2)
+                    + jnp.sum((w2 - w20) ** 2) + jnp.sum((b2 - b20) ** 2))
+                gw1 = gw1 + prox_mu * (w1 - w10)
+                gb1 = gb1 + prox_mu * (b1 - b10)
+                gw2 = gw2 + prox_mu * (w2 - w20)
+                gb2 = gb2 + prox_mu * (b2 - b20)
+            active = (i < iters).astype(jnp.float32)
+            return (w1 - lr * active * gw1, b1 - lr * active * gb1,
+                    w2 - lr * active * gw2, b2 - lr * active * gb2), loss
+
+        (w1, b1, w2, b2), losses = jax.lax.scan(
+            step, (w10.astype(jnp.float32), b10.astype(jnp.float32),
+                   w20.astype(jnp.float32), b20.astype(jnp.float32)),
+            (jnp.arange(max_iters), idxk))
+        msk = (jnp.arange(max_iters) < iters).astype(jnp.float32)
+        return (w1, b1, w2, b2,
+                (losses * msk).sum() / jnp.maximum(msk.sum(), 1.0))
+
+    return jax.vmap(one_client)(x, y, idx, ns, n_iters)
+
+
 def fed_local_sgd_mclr(x, y, idx, w0, b0, ns, n_iters, *, lr,
                        prox_mu: float = 0.0):
     """Masked budgeted MCLR local SGD over precomputed iid minibatch

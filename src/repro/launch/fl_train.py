@@ -123,7 +123,8 @@ def run_flat(args):
                            driver=args.driver,
                            block_size=args.block_size,
                            mesh_shards=args.shards,
-                           cohort_capacity=args.cohort_capacity),
+                           cohort_capacity=args.cohort_capacity,
+                           prefetch=args.prefetch),
                        comm=CommConfig(
                            upload_compress=args.compress,
                            topk_frac=args.topk_frac),
@@ -274,6 +275,13 @@ def main():
                          "owned slots past capacity are dropped "
                          "deterministically through the Ira/Fassa crash "
                          "branch and reported per round as overflowed")
+    ap.add_argument("--prefetch", default="off",
+                    choices=("off", "double_buffer"),
+                    help="scan-driver cohort prefetch: double_buffer "
+                         "prepares round t+1 (selection, budgets, data "
+                         "gather) in the same scan step round t trains in "
+                         "— bit-identical results, overlapped data "
+                         "movement (replicated runs only)")
     ap.add_argument("--compress", default="none",
                     choices=("none", "topk_q8"),
                     help="upload transform between local SGD and "

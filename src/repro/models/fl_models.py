@@ -164,8 +164,9 @@ class LocalStep:
     * ``accuracy(params, batch)`` — optional; only evaluation uses it.
     * ``kind`` — tags model families the kernel layer has a fused
       implementation for (``repro.kernels.ops.fused_sgd_eligible``:
-      backend="pallas" fuses local SGD iff kind == "mclr"; every other
-      step takes the XLA autodiff path automatically).
+      backend="pallas" fuses local SGD for kind == "mclr" and the dense
+      two-layer family kind == "mlp"; every other step takes the XLA
+      autodiff path automatically).
 
     ``init`` is kept as an alias of ``init_params`` for the pre-LocalStep
     callers.  ``loss_and_grad`` / ``local_sgd_step`` are derived helpers —
@@ -251,6 +252,7 @@ def make_mlp(n_features: int, n_classes: int, hidden: int = 64) -> FLModel:
         init=lambda rng: mlp_init(rng, n_features, hidden, n_classes),
         loss=mlp_loss,
         accuracy=mlp_accuracy,
+        kind="mlp",
     )
     m.name = "mlp"
     return m

@@ -1,0 +1,301 @@
+"""Fused generic local SGD + double-buffered cohort prefetch (ISSUE 10).
+
+Four contracts under test:
+
+  * the fused iid data walk (pre-gathered ``[max_iters, B]`` batch views,
+    ``fused_generic=True``) is BITWISE the per-iteration walk for generic
+    LocalStep bodies (MLP), across drivers and shard counts — the gather
+    is pure data movement;
+  * ``prefetch="double_buffer"`` — the  p0 (e p)* e  scan driver carrying
+    cohort t+1's prepared bundle — is BITWISE ``prefetch="off"``, plain
+    and with topk_q8 compression + fault injection + the screen active,
+    at block sizes {1, 2, 8} (the prologue/epilogue edges), and is
+    rejected on a sharded mesh;
+  * the dense two-layer pallas kernel (``fed_local_sgd_dense``) matches
+    its XLA twin ``ref.fed_local_sgd_dense`` — params bitwise, losses to
+    fp tolerance (loss accumulates in a different reduction order, same
+    contract as the MCLR kernel) — and the engine's pallas MLP run tracks
+    the XLA run to fp tolerance;
+  * donation: the scan segment's carry (params, L/H/theta, values, rngs)
+    and the compression residual are donation-dead at the call boundary —
+    compiling the raw body with its recorded donate argnums consumes the
+    buffers, with no copy-on-donate warnings.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CommConfig, ComputeConfig, FedSAEServer,
+                        HeterogeneitySim, RobustnessConfig, ServerConfig)
+from repro.data.federated import make_femnist_like
+from repro.faults import FaultModel
+from repro.kernels import ref
+from repro.kernels.ops import (FUSED_SGD_KINDS, fed_local_sgd_dense,
+                               fused_sgd_eligible)
+from repro.models.fl_models import make_lstm, make_mclr, make_mlp
+
+N_CLIENTS = 24
+DIM = 16
+N_DEVICES = len(jax.devices())
+
+needs_devices = lambda n: pytest.mark.skipif(  # noqa: E731
+    N_DEVICES < n, reason=f"needs {n} (simulated) devices, have {N_DEVICES};"
+    " set REPRO_FORCE_HOST_DEVICES / XLA_FLAGS before jax initializes")
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return make_femnist_like(n_clients=N_CLIENTS, total=1400, dim=DIM,
+                             max_size=60)
+
+
+def _cfg(model=None, driver="scan", backend="xla", compress="none",
+         shards=0, block_size=3, **over):
+    kw = dict(algo="ira", n_selected=8, rounds=6, h_cap=4.0,
+              fixed_epochs=4.0, sampling="iid", model=model,
+              compute=ComputeConfig(
+                  driver=driver, backend=backend, block_size=block_size,
+                  mesh_shards=shards,
+                  rng_impl="device" if driver == "host" else ""),
+              comm=CommConfig(upload_compress=compress))
+    kw.update(over)
+    return ServerConfig(**kw)
+
+
+def _run(ds, cfg):
+    srv = FedSAEServer(ds, cfg=cfg,
+                       het=HeterogeneitySim(ds.n_clients, seed=0))
+    srv.run()
+    return srv
+
+
+def _assert_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(a.L, b.L)
+    np.testing.assert_array_equal(a.H, b.H)
+    np.testing.assert_array_equal(a.theta, b.theta)
+    np.testing.assert_array_equal(a.values.v, b.values.v)
+    for c1, c2 in zip(a.cohorts, b.cohorts):
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    if a.residual is not None:
+        np.testing.assert_array_equal(np.asarray(a.residual),
+                                      np.asarray(b.residual))
+
+
+# ---------------------------------------------------------------------------
+# fused generic data walk == per-iteration walk, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("driver", ["host", "scan"])
+def test_mlp_fused_matches_unfused_bitwise(fed, driver):
+    """The hoisted batch-view walk is pure data movement: generic MLP
+    training is bit-identical with it on and off, on both drivers."""
+    fused = _run(fed, _cfg(model="mlp", driver=driver))
+    unfused = _run(fed, _cfg(model="mlp", driver=driver,
+                             compute=ComputeConfig(
+                                 driver=driver, block_size=3,
+                                 rng_impl="device" if driver == "host"
+                                 else "",
+                                 fused_generic=False)))
+    _assert_bitwise(fused, unfused)
+
+
+@needs_devices(2)
+def test_mlp_fused_matches_unfused_on_mesh(fed):
+    """Same contract with the client axis sharded over a 2-way mesh."""
+    fused = _run(fed, _cfg(model="mlp", shards=2))
+    unfused = _run(fed, _cfg(model="mlp",
+                             compute=ComputeConfig(
+                                 driver="scan", block_size=3,
+                                 mesh_shards=2, fused_generic=False)))
+    _assert_bitwise(fused, unfused)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered prefetch == off, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", [None, "mlp"])
+@pytest.mark.parametrize("block_size", [1, 2, 8])
+def test_prefetch_matches_off_bitwise(fed, model, block_size):
+    """p0 (e p)* e carries the prepared bundle across scan steps but runs
+    the exact off-mode operation sequence — bitwise, including the
+    single-round-block edge (zero-length scan)."""
+    off = _run(fed, _cfg(model=model, block_size=block_size))
+    on = _run(fed, _cfg(model=model,
+                        compute=ComputeConfig(
+                            driver="scan", block_size=block_size,
+                            prefetch="double_buffer")))
+    _assert_bitwise(off, on)
+
+
+def test_prefetch_matches_off_with_compression_and_faults(fed):
+    """The bundle composes with the full stage stack: topk_q8 error
+    feedback, explode-mode injection and the screen — params AND the
+    residual rows stay bit-identical, and the screen fires equally."""
+    fm = FaultModel(corrupt="explode", corrupt_prob=0.25, seed=5)
+    rb = RobustnessConfig(faults=fm, upload_screen="on")
+    off = _run(fed, _cfg(model="mlp", compress="topk_q8", robustness=rb))
+    on = _run(fed, _cfg(model="mlp", compress="topk_q8", robustness=rb,
+                        compute=ComputeConfig(
+                            driver="scan", block_size=3,
+                            prefetch="double_buffer")))
+    _assert_bitwise(off, on)
+    sa = [r.screened for r in off._records.records]
+    sb = [r.screened for r in on._records.records]
+    assert sa == sb
+
+
+@needs_devices(2)
+def test_prefetch_rejects_sharded_mesh(fed):
+    with pytest.raises(ValueError, match="double_buffer"):
+        _run(fed, _cfg(compute=ComputeConfig(
+            driver="scan", block_size=3, mesh_shards=2,
+            prefetch="double_buffer")))
+
+
+def test_unknown_prefetch_mode_raises(fed):
+    with pytest.raises(ValueError, match="prefetch"):
+        _run(fed, _cfg(compute=ComputeConfig(
+            driver="scan", prefetch="triple_buffer")))
+
+
+# ---------------------------------------------------------------------------
+# dense two-layer pallas kernel == XLA twin
+# ---------------------------------------------------------------------------
+
+
+def _dense_inputs(seed=0, K=6, max_n=40, d=DIM, H=12, C=10, max_iters=7,
+                  B=5):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(K, max_n, d)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, C, size=(K, max_n)).astype(np.int32))
+    idx = jnp.asarray(rng.integers(0, max_n,
+                                   size=(K, max_iters, B)).astype(np.int32))
+    w1 = jnp.asarray(rng.normal(scale=0.1, size=(d, H)).astype(np.float32))
+    b1 = jnp.zeros((H,), jnp.float32)
+    w2 = jnp.asarray(rng.normal(scale=0.1, size=(H, C)).astype(np.float32))
+    b2 = jnp.zeros((C,), jnp.float32)
+    # heterogeneous sizes and budgets, including zero-budget and tiny-n
+    ns = jnp.asarray(rng.integers(1, max_n, size=(K,)).astype(np.int32)
+                     ).at[0].set(2)
+    n_iters = jnp.asarray(rng.integers(0, max_iters + 1,
+                                       size=(K,)).astype(np.int32)
+                          ).at[1].set(0)
+    return x, y, idx, w1, b1, w2, b2, ns, n_iters
+
+
+@pytest.mark.parametrize("prox_mu", [0.0, 0.1])
+def test_dense_kernel_matches_ref(prox_mu):
+    """Params bitwise; losses to fp tolerance (the kernel accumulates
+    loss_sum/cnt in the fori_loop carry, the ref reduces a masked sum
+    over scanned losses — same contract as the MCLR kernel)."""
+    x, y, idx, w1, b1, w2, b2, ns, n_iters = _dense_inputs()
+    got = fed_local_sgd_dense(x, y, idx, w1, b1, w2, b2, ns, n_iters,
+                              lr=0.05, prox_mu=prox_mu)
+    want = ref.fed_local_sgd_dense(x, y, idx, w1, b1, w2, b2, ns, n_iters,
+                                   lr=0.05, prox_mu=prox_mu)
+    for g, w in zip(got[:4], want[:4]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    np.testing.assert_allclose(np.asarray(got[4]), np.asarray(want[4]),
+                               rtol=2e-6, atol=1e-6)
+
+
+def test_dense_kernel_zero_budget_rows_are_identity():
+    x, y, idx, w1, b1, w2, b2, ns, _ = _dense_inputs()
+    zero = jnp.zeros((x.shape[0],), jnp.int32)
+    w1_k, b1_k, w2_k, b2_k, losses = fed_local_sgd_dense(
+        x, y, idx, w1, b1, w2, b2, ns, zero, lr=0.05)
+    for out, init in ((w1_k, w1), (b1_k, b1), (w2_k, w2), (b2_k, b2)):
+        for k in range(x.shape[0]):
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(init))
+    np.testing.assert_array_equal(np.asarray(losses),
+                                  np.zeros(x.shape[0], np.float32))
+
+
+def test_mlp_pallas_engine_tracks_xla(fed):
+    """backend="pallas" dispatches the MLP to the dense kernel inside the
+    scan driver; closed-form backprop vs autodiff differ only in
+    reduction order, so the run tracks the XLA twin to fp tolerance and
+    stays finite."""
+    xla = _run(fed, _cfg(model="mlp", backend="xla"))
+    pallas = _run(fed, _cfg(model="mlp", backend="pallas"))
+    for a, b in zip(jax.tree.leaves(xla.params),
+                    jax.tree.leaves(pallas.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+    for c1, c2 in zip(xla.cohorts, pallas.cohorts):
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_fused_kind_table_pinned():
+    """The eligibility table is dispatch, not assumption: exactly the
+    mclr + dense families are fused, with iid sampling only."""
+    assert FUSED_SGD_KINDS == ("mclr", "mlp")
+    table = {
+        (make_mclr(DIM, 5), "iid"): True,
+        (make_mclr(DIM, 5), "shuffle"): False,
+        (make_mlp(DIM, 5), "iid"): True,
+        (make_mlp(DIM, 5), "shuffle"): False,
+        (make_lstm(vocab=64), "iid"): False,
+    }
+    for (step, sampling), want in table.items():
+        assert fused_sgd_eligible(step, sampling) is want, \
+            (getattr(step, "kind", None), sampling)
+
+
+# ---------------------------------------------------------------------------
+# donation audit
+# ---------------------------------------------------------------------------
+
+
+def test_segment_donation_consumes_carry_and_residual(fed):
+    """The scan segment's recorded donate argnums (state carry + the
+    error-feedback residual) are actually consumable: compiling the raw
+    body with donation forced on deletes the donated buffers and emits no
+    copy-on-donate warnings.  (The runtime wrapper keeps donation off on
+    CPU; this pins the invariant the accelerator path relies on.)"""
+    srv = FedSAEServer(fed, cfg=_cfg(model="mlp", compress="topk_q8"),
+                       het=HeterogeneitySim(fed.n_clients, seed=0))
+    seg = srv.segment_fn
+    assert seg._donate == (0, 8)
+    state = srv.device_state()
+    # fresh buffers so deletion cannot hurt server state
+    state = jax.tree.map(jnp.array, state)
+    residual = jnp.array(srv.residual)
+    pk = srv.packed
+    ts = jnp.arange(0, 3, dtype=jnp.int32)
+    donating = jax.jit(seg._fn, donate_argnums=seg._donate)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        out_state, out_residual, stats = donating(
+            state, ts, pk.x, pk.y, pk.offsets, pk.lengths, srv._mu_dev,
+            srv._sigma_dev, residual)
+        jax.block_until_ready((out_state, out_residual))
+    donate_warns = [w for w in caught if "donat" in str(w.message).lower()]
+    assert not donate_warns, [str(w.message) for w in donate_warns]
+    for leaf in jax.tree.leaves(state):
+        assert leaf.is_deleted()
+    assert residual.is_deleted()
+    # the packed data (argnums 2-5) must NOT have been donated
+    assert not pk.x.is_deleted() and not pk.y.is_deleted()
+    for leaf in jax.tree.leaves((out_state, out_residual)):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_round_fn_records_donation_request(fed):
+    """Host-driver packed rounds carry the same donation contract."""
+    srv = FedSAEServer(fed, cfg=_cfg(model="mlp", driver="host",
+                                     compress="topk_q8"),
+                       het=HeterogeneitySim(fed.n_clients, seed=0))
+    assert srv.round_fn._donate == (0, 8)
+    plain = FedSAEServer(fed, cfg=_cfg(model="mlp", driver="host"),
+                         het=HeterogeneitySim(fed.n_clients, seed=0))
+    assert plain.round_fn._donate == (0,)

@@ -308,7 +308,9 @@ def test_fused_sgd_eligibility_dispatch():
     mclr, mlp = make_mclr(DIM, 5), make_mlp(DIM, 5)
     assert fused_sgd_eligible(mclr, "iid")
     assert not fused_sgd_eligible(mclr, "shuffle")
-    assert not fused_sgd_eligible(mlp, "iid")
+    # ISSUE 10: the dense two-layer family joined the fused set
+    assert fused_sgd_eligible(mlp, "iid")
+    assert not fused_sgd_eligible(mlp, "shuffle")
     assert not fused_sgd_eligible(object(), "iid")
 
 
